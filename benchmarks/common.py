@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: CSV emission, model sets, pretty tables."""
+from __future__ import annotations
+
+import csv
+import io
+import os
+import sys
+from typing import Any, Dict, Iterable, List
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+PAPER_MODELS = ("llama3-70b", "mistral-123b", "qwen3-235b", "llama3-405b")
+SEQ_LENS = (32768, 65536, 131072, 262144)
+
+
+def emit(name: str, rows: List[Dict[str, Any]]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    if not rows:
+        return path
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    return path
+
+
+def table(rows: List[Dict[str, Any]], cols: Iterable[str]) -> str:
+    cols = list(cols)
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in cols}
+    out = io.StringIO()
+    out.write(" | ".join(c.ljust(widths[c]) for c in cols) + "\n")
+    out.write("-+-".join("-" * widths[c] for c in cols) + "\n")
+    for r in rows:
+        out.write(" | ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols) + "\n")
+    return out.getvalue()
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1000 or abs(v) < 0.01:
+            return f"{v:.3g}"
+        return f"{v:.3f}"
+    return str(v)

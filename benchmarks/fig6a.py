@@ -1,0 +1,63 @@
+"""Paper Fig. 6(a): E2E latency + throughput, GPipe vs Terapipe vs MOCAP,
+4 models x 4 sequence lengths on the 4x4 WSC. Reports normalized values and
+the paper's headline aggregates (-76.4% latency, 3.24x throughput vs GPipe).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import PAPER_MODELS, SEQ_LENS, emit, table
+from repro.configs.base import get_config
+from repro.sim import SimConfig, simulate
+
+
+def run(batch: int = 8, sa_iters: int = 60):
+    rows = []
+    lat_red, thr_gain = [], []
+    for arch in PAPER_MODELS:
+        cfg = get_config(arch)
+        for s in SEQ_LENS:
+            res = {}
+            for sched, part in (("gpipe", "uniform"), ("terapipe", "uniform"),
+                                ("mocap", "lbcp")):
+                res[sched] = simulate(SimConfig(
+                    scheduler=sched, model=cfg, seq_len=s, batch=batch,
+                    partition=part, sa_iters=sa_iters))
+            base = res["gpipe"]
+            for sched in ("gpipe", "terapipe", "mocap"):
+                r = res[sched]
+                rows.append({
+                    "model": arch, "seq_len": s, "scheduler": sched,
+                    "feasible": r.feasible,
+                    "e2e_s": round(r.e2e_latency, 4),
+                    "norm_latency": round(r.e2e_latency / base.e2e_latency, 4)
+                    if base.feasible and r.feasible else "",
+                    "throughput_rps": round(r.throughput, 4),
+                    "norm_throughput": round(r.throughput / base.throughput, 4)
+                    if base.feasible and r.feasible else "",
+                })
+            if res["gpipe"].feasible and res["mocap"].feasible:
+                lat_red.append(1 - res["mocap"].e2e_latency / res["gpipe"].e2e_latency)
+                thr_gain.append(res["mocap"].throughput / res["gpipe"].throughput)
+    summary = {
+        "avg_latency_reduction_vs_gpipe": float(np.mean(lat_red)),
+        "avg_throughput_gain_vs_gpipe": float(np.mean(thr_gain)),
+        "paper_claims": "-76.4% latency, 3.24x throughput",
+    }
+    return rows, summary
+
+
+def main():
+    rows, summary = run()
+    print(table(rows, ["model", "seq_len", "scheduler", "e2e_s",
+                       "norm_latency", "throughput_rps", "norm_throughput"]))
+    print(f"MOCAP vs GPipe average: latency "
+          f"-{summary['avg_latency_reduction_vs_gpipe']*100:.1f}% "
+          f"(paper: -76.4%), throughput "
+          f"{summary['avg_throughput_gain_vs_gpipe']:.2f}x (paper: 3.24x)")
+    emit("fig6a", rows)
+    return rows, summary
+
+
+if __name__ == "__main__":
+    main()

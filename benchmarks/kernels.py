@@ -1,0 +1,88 @@
+"""Kernel micro-benchmarks: wall time of the interpret-mode Pallas kernels is
+meaningless on CPU, so this reports (a) correctness deltas vs the oracle and
+(b) the ANALYTIC TPU-v5e time model per kernel call (bytes/flops through the
+roofline constants) — the numbers the §Perf iterations reason with."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, table
+from repro.kernels import ops, ref
+from repro.roofline.analysis import HW_V5E
+
+
+def _tpu_time(flops, bytes_):
+    return max(flops / HW_V5E["peak_flops"], bytes_ / HW_V5E["hbm_bw"])
+
+
+def run():
+    rows = []
+    key = jax.random.key(0)
+
+    # chunk attention: MOCAP hot spot at production shape
+    for (b, c, h, kvh, d, p) in [(1, 2048, 32, 8, 128, 0),
+                                 (1, 2048, 32, 8, 128, 30720)]:
+        t = p + c
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (b, c, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (b, t, kvh, d), jnp.float32)
+        v = jax.random.normal(ks[2], (b, t, kvh, d), jnp.float32)
+        small = (b, 128, h, kvh, d, min(p, 256))
+        qs = q[:, :128]
+        ksm = k[:, :small[5] + 128]
+        vsm = v[:, :small[5] + 128]
+        err = float(jnp.max(jnp.abs(
+            ops.chunk_attention(qs, ksm, vsm, causal_offset=small[5])
+            - ref.chunk_attention_ref(qs, ksm, vsm, causal_offset=small[5]))))
+        flops = 4.0 * b * c * (p + c / 2) * h * d
+        bytes_ = (q.size + 2 * b * t * kvh * d + q.size) * 2  # bf16 on TPU
+        rows.append({
+            "kernel": "chunk_attn", "shape": f"b{b} c{c} p{p} h{h}/{kvh} d{d}",
+            "max_err_small": f"{err:.1e}",
+            "tpu_flops": f"{flops:.3g}", "tpu_bytes": f"{bytes_:.3g}",
+            "tpu_time_us": round(_tpu_time(flops, bytes_) * 1e6, 1),
+            "bound": "compute" if flops / HW_V5E["peak_flops"] >
+                     bytes_ / HW_V5E["hbm_bw"] else "memory",
+        })
+
+    # ssd
+    b, t, h, p_, g, n, ck = 1, 2048, 24, 64, 1, 128, 256
+    flops = 2 * b * t * (h * p_ * n * 3)       # diag + state + out, approx
+    bytes_ = b * t * (h * p_ + 2 * g * n + h) * 2 * 2
+    rows.append({
+        "kernel": "ssd", "shape": f"b{b} t{t} h{h} p{p_} n{n} chunk{ck}",
+        "max_err_small": "see tests", "tpu_flops": f"{flops:.3g}",
+        "tpu_bytes": f"{bytes_:.3g}",
+        "tpu_time_us": round(_tpu_time(flops, bytes_) * 1e6, 1),
+        "bound": "compute" if flops / HW_V5E["peak_flops"] >
+                 bytes_ / HW_V5E["hbm_bw"] else "memory",
+    })
+
+    # decode attention: memory-bound by definition
+    b, h, kvh, d, s = 128, 32, 8, 128, 32768
+    flops = 4.0 * b * s * h * d
+    bytes_ = 2 * b * s * kvh * d * 2
+    rows.append({
+        "kernel": "decode_attn", "shape": f"b{b} s{s} h{h}/{kvh} d{d}",
+        "max_err_small": "see tests", "tpu_flops": f"{flops:.3g}",
+        "tpu_bytes": f"{bytes_:.3g}",
+        "tpu_time_us": round(_tpu_time(flops, bytes_) * 1e6, 1),
+        "bound": "memory",
+    })
+    return rows
+
+
+def main():
+    rows = run()
+    print(table(rows, ["kernel", "shape", "max_err_small", "tpu_flops",
+                       "tpu_bytes", "tpu_time_us", "bound"]))
+    emit("kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""LBCP ablation (paper §4.2): uniform chunks vs DP-only vs DP+SA under the
+full MBKR execution model, plus the stagger-collapse study (event-driven vs
+lockstep execution) that motivates running them JOINTLY."""
+from __future__ import annotations
+
+from benchmarks.common import emit, table
+from repro.configs.base import get_config
+from repro.core import costmodel as cm, lbcp
+from repro.sim import SimConfig, simulate
+
+
+def run(arch: str = "llama3-70b", seq: int = 131072, m: int = 16,
+        batch: int = 8):
+    cfg = get_config(arch)
+    sm = cm.StageModel.build(cfg, 16, 1)
+
+    variants = {}
+    # uniform
+    variants["uniform"] = lbcp.uniform_partition(seq, m)
+    # DP only (stage 1 of Alg. 1)
+    full = lbcp.plan_partition(cfg, seq, m, 16, cm.WSC_PAPER, sa_iters=0,
+                               sa_rounds=1)
+    variants["dp"] = full.chunks
+    # DP + SA (full Alg. 1)
+    full2 = lbcp.plan_partition(cfg, seq, m, 16, cm.WSC_PAPER, sa_iters=400,
+                                sa_rounds=8)
+    variants["dp+sa"] = full2.chunks
+
+    rows = []
+    for name, chunks in variants.items():
+        res = cm.evaluate_prefill(chunks, sm, 16, cm.WSC_PAPER,
+                                  mbkr_plan=full2.mbkr_plan)
+        lat, thr = cm.evaluate_e2e(batch, res.latency, chunks, sm, 16,
+                                   cm.WSC_PAPER, mbkr_plan=full2.mbkr_plan)
+        rows.append({
+            "variant": name, "t_prefill_s": round(res.latency, 4),
+            "e2e_s": round(lat, 4), "throughput": round(thr, 4),
+            "first_chunk": chunks[0], "last_chunk": chunks[-1],
+        })
+
+    # stagger-collapse study
+    for execution, part in (("lockstep", "uniform"), ("eventdriven", "uniform"),
+                            ("eventdriven", "lbcp")):
+        r = simulate(SimConfig(scheduler="mocap", model=cfg, seq_len=seq,
+                               batch=batch, num_chunks=m, partition=part,
+                               execution=execution, sa_iters=60))
+        kvc = cm.kv_chunk_bytes(sm, seq // m)
+        rows.append({
+            "variant": f"{execution}/{part}",
+            "t_prefill_s": "", "e2e_s": round(r.e2e_latency, 4),
+            "throughput": round(r.throughput, 4),
+            "first_chunk": f"peak={r.peak_mem/kvc:.1f}ck",
+            "last_chunk": "",
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print(table(rows, ["variant", "t_prefill_s", "e2e_s", "throughput",
+                       "first_chunk", "last_chunk"]))
+    emit("lbcp_ablation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Aggregate the dry-run artifacts into the §Roofline table: three terms,
+dominant bound, useful ratio, roofline fraction per (arch x shape x mode x
+mesh) — plus the one-line what-would-move-it-down diagnosis."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, table
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def _diagnose(r: dict, mode: str) -> str:
+    dom = r["dominant"]
+    if dom == "collective":
+        kinds = r.get("coll_by_kind", {})
+        top = max(kinds, key=kinds.get) if kinds else "?"
+        return f"cut {top} (seq-parallel TP / bf16 psum / fetch-vs-qship)"
+    if dom == "memory":
+        if r["useful_ratio"] < 0.2:
+            return "bubble+pool waste: raise M, triangular attention"
+        return "fuse attention (Pallas flash), shard KV pool over TP"
+    return "raise useful_ratio: fewer padded layers / smaller bubble"
+
+
+def load(mesh: str = "pod"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("skipped"):
+            rows.append({
+                "arch": rec["arch"], "shape": rec["shape"], "mode": rec["mode"],
+                "status": "SKIP", "compute_ms": "", "memory_ms": "",
+                "collective_ms": "", "dominant": "", "useful_%": "",
+                "roofline_%": "", "hbm_GB": "", "note": rec.get("reason", "")[:40],
+            })
+            continue
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mode": rec["mode"], "status": "FAIL",
+                         "note": rec.get("error", "")[:60]})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mode": rec["mode"],
+            "status": "OK",
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"],
+            "useful_%": round(r["useful_ratio"] * 100, 1),
+            "roofline_%": round(r["roofline_fraction"] * 100, 2),
+            "hbm_GB": round(rec["memory"]["peak_bytes_per_device"] / 1e9, 2),
+            "note": _diagnose(r, rec["mode"]),
+        })
+    return rows
+
+
+def main():
+    for mesh in ("pod", "multipod"):
+        rows = load(mesh)
+        if not rows:
+            continue
+        print(f"===== mesh: {mesh} ({'256' if mesh == 'pod' else '512'} chips) =====")
+        print(table(rows, ["arch", "shape", "mode", "status", "compute_ms",
+                           "memory_ms", "collective_ms", "dominant",
+                           "useful_%", "roofline_%", "hbm_GB"]))
+        emit(f"roofline_{mesh}", rows)
+    return load("pod")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark driver: one module per paper table/figure + the roofline report.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller SA budgets / fewer probes")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig6a,fig6b,fig1c,"
+                         "lbcp_ablation,kernels,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import fig1c, fig6a, fig6b, kernels, lbcp_ablation
+    from benchmarks import roofline_report
+
+    jobs = [
+        ("fig6a", "Fig 6(a): E2E latency/throughput vs GPipe & Terapipe",
+         fig6a.main),
+        ("fig6b", "Fig 6(b): max sequence length vs Terapipe x #chunks",
+         fig6b.main),
+        ("fig1c", "Fig 1(c): WSC vs GPU-system communication advantage",
+         fig1c.main),
+        ("lbcp_ablation", "LBCP ablation + stagger-collapse study",
+         lbcp_ablation.main),
+        ("kernels", "Pallas kernel correctness + analytic TPU timing",
+         kernels.main),
+        ("roofline", "Roofline report from the dry-run artifacts",
+         roofline_report.main),
+    ]
+    rc = 0
+    for name, desc, fn in jobs:
+        if only and name not in only:
+            continue
+        print(f"\n================ {name}: {desc} ================",
+              flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"[{name} done in {time.time()-t0:.1f}s]")
+        except Exception as e:  # noqa: BLE001
+            rc = 1
+            import traceback
+            traceback.print_exc()
+            print(f"[{name} FAILED: {e}]")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

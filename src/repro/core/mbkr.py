@@ -1,0 +1,275 @@
+"""Memory-Balanced KV Reallocation (MBKR), §4.1.
+
+Fixed cross-half pairing (stage i <-> stage i + N/2), threshold-driven
+debtor/creditor roles:
+
+    occupancy < p1          : local-only
+    p1 <= occupancy < p2    : creditor (hosts the pair's spilled chunks)
+    occupancy >= p2         : debtor (chunks with index >= p2 spill at creation)
+
+with p1 = p2 - N/2 (the cross-half invariant: paired occupancies differ by
+exactly N/2 chunks at every tick of the back-to-back steady state).
+
+The *slot plan* turns the policy into a static cyclic schedule: a shared pool
+of ``num_slots`` chunk-KV slots per stage, with precomputed slot tables
+(own_slot / host_slot per phase) proven collision-free over the steady-state
+period. This is what makes the reallocation expressible as static JAX arrays
+(DESIGN.md §3.3-3.4) and is where the memory saving comes from:
+
+    peak_slots(M, N, p2*)  <  M  (the Terapipe baseline)
+
+e.g. M = N = 16: peak 12 vs 16 — the 1/(1 - N/(4M)) = 1.33x max-seq-len gain.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def pair_of(stage: int, num_stages: int) -> int:
+    return (stage + num_stages // 2) % num_stages
+
+
+def interleaved_placement(num_stages: int) -> List[int]:
+    """Stage -> physical mesh row, placing stage i adjacent to its pair
+    (paper: 'MBKR places stage i adjacent to stage i+N/2'). Gray-code-style:
+    stage i (i < N/2) at row 2i; stage i + N/2 at row 2i + 1."""
+    n2 = num_stages // 2
+    rows = [0] * num_stages
+    for i in range(n2):
+        rows[i] = 2 * i
+        rows[i + n2] = 2 * i + 1
+    return rows
+
+
+# ------------------------------------------------------------ occupancy math
+
+def peak_slots(num_chunks: int, num_stages: int, p2: int) -> int:
+    """Peak (own-local + hosted) chunk slots over the steady-state cycle,
+    max over BOTH pairing directions (first-half stages host while their
+    behind-pair spills at my phase phi - N/2; second-half while their
+    ahead-pair spills at my phase phi + N/2)."""
+    m, n2 = num_chunks, max(num_stages // 2, 1)
+    peak = 0
+    for phi in range(m):
+        own = min(phi + 1, p2)
+        for delta in (-n2, n2):
+            psi = (phi + delta) % m  # pair's phase seen from my phase
+            hosted = max(0, (psi + 1) - p2)
+            peak = max(peak, own + hosted)
+    return peak
+
+
+def best_p2(num_chunks: int, num_stages: int) -> Tuple[int, int]:
+    """(p2, peak) minimizing peak slots; ties -> larger p2 (less traffic)."""
+    best = (num_chunks, peak_slots(num_chunks, num_stages, num_chunks))
+    for p2 in range(1, num_chunks + 1):
+        pk = peak_slots(num_chunks, num_stages, p2)
+        if pk < best[1] or (pk == best[1] and p2 > best[0]):
+            best = (p2, pk)
+    return best
+
+
+def max_chunks_for_capacity(num_stages: int, capacity_slots: int,
+                            mbkr: bool = True) -> int:
+    """Max chunk count M whose steady-state peak fits ``capacity_slots``."""
+    if not mbkr:
+        return capacity_slots
+    m = capacity_slots
+    while True:
+        nxt = plan(m + 1, num_stages)  # respects the m >= N/2 gate
+        if max(nxt.peak, nxt.num_slots) > capacity_slots:
+            return m
+        m += 1
+        if m > capacity_slots * 4:  # safety
+            return m
+
+
+# ------------------------------------------------------------------ slot plan
+
+@dataclass
+class MBKRPlan:
+    num_stages: int
+    num_chunks: int
+    p2: int
+    p1: int
+    num_slots: int                 # shared pool size (excl. the scratch slot)
+    own_slot: np.ndarray           # [M] slot for own chunk phi (scratch if spilled)
+    host_slot_a: np.ndarray        # [M] host slot, FIRST-half stages (pair behind)
+    host_slot_b: np.ndarray        # [M] host slot, SECOND-half stages (pair ahead)
+    peak: int = 0
+
+    @property
+    def scratch(self) -> int:
+        return self.num_slots  # pool allocated with num_slots + 1 entries
+
+    @property
+    def spilled_chunks(self) -> List[int]:
+        return list(range(self.p2, self.num_chunks))
+
+    def host_slot_for_stage(self, stage: int) -> np.ndarray:
+        return self.host_slot_a if stage < self.num_stages // 2 else self.host_slot_b
+
+    def describe(self) -> str:
+        return (f"MBKR N={self.num_stages} M={self.num_chunks} p2={self.p2} "
+                f"p1={self.p1} slots={self.num_slots} (baseline {self.num_chunks})")
+
+
+def _color(intervals, m: int) -> Tuple[Dict, int]:
+    """Greedy cyclic-interval coloring. intervals: [(key, start, length)]."""
+    slot_busy: List[np.ndarray] = []
+    assign: Dict = {}
+    for key, s, ln in sorted(intervals, key=lambda iv: (-iv[2], iv[1])):
+        phases = [(s + k) % m for k in range(ln)]
+        for si, busy in enumerate(slot_busy):
+            if not busy[phases].any():
+                busy[phases] = True
+                assign[key] = si
+                break
+        else:
+            busy = np.zeros(m, bool)
+            busy[phases] = True
+            slot_busy.append(busy)
+            assign[key] = len(slot_busy) - 1
+    return assign, len(slot_busy)
+
+
+def plan(num_chunks: int, num_stages: int, p2: Optional[int] = None,
+         mbkr: bool = True) -> MBKRPlan:
+    """Build the static cyclic slot plan.
+
+    Own chunk phi (phi < p2): live at my phases [phi .. M-1] (non-wrapping).
+    Hosted pair chunk phi' (phi' >= p2), in MY phase coordinates:
+      first-half host (pair is N/2 ticks BEHIND): arrives (phi' + N/2) mod M
+      second-half host (pair is N/2 ticks AHEAD): arrives (phi' - N/2) mod M
+    both live m - phi' phases (until the pair finishes its request).
+
+    Own intervals are colored first (shared across halves); each half's host
+    intervals are colored against them separately. Pool = max of the halves.
+    """
+    m, n = num_chunks, num_stages
+    n2 = max(n // 2, 1)
+    # MBKR needs >= N/2 chunks in flight to realize the cross-half stagger:
+    # with m < N/2 the pair offset spans more than a full request period and
+    # hosted lifetimes collide — fall back to the Terapipe buffer (the paper
+    # never runs this regime; its sweeps use M >= N).
+    if m < n2:
+        mbkr = False
+    if not mbkr or n < 2 or m < 2:
+        own = np.arange(m, dtype=np.int32)
+        return MBKRPlan(n, m, m, m, m, own, np.full(m, m, np.int32),
+                        np.full(m, m, np.int32), peak=m)
+    if p2 is None:
+        p2, _ = best_p2(m, n)
+    p2 = min(p2, m)
+    if p2 >= m:
+        own = np.arange(m, dtype=np.int32)
+        return MBKRPlan(n, m, m, max(m - n2, 0), m, own,
+                        np.full(m, m, np.int32), np.full(m, m, np.int32), peak=m)
+
+    own_iv = [(("own", phi), phi, m - phi) for phi in range(p2)]
+    host_a = [(("host", phip), (phip + n2) % m, m - phip) for phip in range(p2, m)]
+    host_b = [(("host", phip), (phip - n2) % m, m - phip) for phip in range(p2, m)]
+
+    assign_a, slots_a = _color(own_iv + host_a, m)
+    assign_b, slots_b = _color(own_iv + host_b, m)
+    # force identical own assignment across halves (SPMD-shared table): re-color
+    # half B with half A's own assignment pinned.
+    own_busy = {}
+    for (key, s, ln) in own_iv:
+        si = assign_a[key]
+        own_busy.setdefault(si, np.zeros(m, bool))
+        for k in range(ln):
+            own_busy[si][(s + k) % m] = True
+    slot_busy = [own_busy.get(i, np.zeros(m, bool)) for i in range(slots_a)]
+    assign_b2: Dict = {}
+    for key, s, ln in sorted(host_b, key=lambda iv: (-iv[2], iv[1])):
+        phases = [(s + k) % m for k in range(ln)]
+        for si, busy in enumerate(slot_busy):
+            if not busy[phases].any():
+                busy[phases] = True
+                assign_b2[key] = si
+                break
+        else:
+            busy = np.zeros(m, bool)
+            busy[phases] = True
+            slot_busy.append(busy)
+            assign_b2[key] = len(slot_busy) - 1
+    num_slots = len(slot_busy)
+
+    occ = np.zeros(m, np.int64)
+    for _, s, ln in own_iv + host_a:
+        for k in range(ln):
+            occ[(s + k) % m] += 1
+    peak = int(occ.max())
+    occ_b = np.zeros(m, np.int64)
+    for _, s, ln in own_iv + host_b:
+        for k in range(ln):
+            occ_b[(s + k) % m] += 1
+    peak = max(peak, int(occ_b.max()))
+
+    own_slot = np.full(m, num_slots, np.int32)
+    hs_a = np.full(m, num_slots, np.int32)
+    hs_b = np.full(m, num_slots, np.int32)
+    for phi in range(p2):
+        own_slot[phi] = assign_a[("own", phi)]
+    for phip in range(p2, m):
+        hs_a[phip] = assign_a[("host", phip)]
+        hs_b[phip] = assign_b2[("host", phip)]
+    return MBKRPlan(n, m, p2, max(p2 - n2, 0), num_slots, own_slot, hs_a, hs_b,
+                    peak=peak)
+
+
+def verify_plan(pl: MBKRPlan, periods: int = 4) -> None:
+    """Step the steady-state back-to-back schedule on a (stage, pair) couple;
+    assert (a) pool writes never clobber LIVE entries, (b) attention always
+    finds every needed chunk: j < p2 in my own pool, j >= p2 in the pair's
+    host pool. Raises AssertionError on any violation."""
+    m, n2 = pl.num_chunks, pl.num_stages // 2
+    if pl.p2 >= m:
+        return  # no spilling: trivially a Terapipe buffer
+
+    # entry: (kind, owner_stage, req, chunk, death_tick)
+    pools: Dict[int, Dict[int, tuple]] = {0: {}, 1: {}}  # 0 = me (s=0), 1 = pair (s=n2)
+    stage_of = {0: 0, 1: n2}
+
+    def phase(me: int, t: int) -> Tuple[int, int]:
+        tt = t - stage_of[me]
+        return tt % m, tt // m
+
+    # host table used by the HOSTING stage: stage 0 is first half (table A),
+    # stage n2 is second half (table B).
+    host_table = {0: pl.host_slot_a, 1: pl.host_slot_b}
+
+    for t in range(n2, periods * m + n2):
+        for me in (0, 1):
+            phi, req = phase(me, t)
+            if req < 0:
+                continue
+            other = 1 - me
+            # 1. write own chunk (or spill to pair, stored per the HOST's table)
+            if phi < pl.p2:
+                slot = int(pl.own_slot[phi])
+                prev = pools[me].get(slot)
+                assert prev is None or prev[4] < t, ("own write clobbers", t, me, phi, prev)
+                pools[me][slot] = ("own", me, req, phi, t + (m - 1 - phi))
+            else:
+                slot = int(host_table[other][phi])
+                prev = pools[other].get(slot)
+                assert prev is None or prev[4] < t, ("host write clobbers", t, me, phi, prev)
+                pools[other][slot] = ("host", me, req, phi, t + (m - 1 - phi))
+        for me in (0, 1):
+            phi, req = phase(me, t)
+            if req < 1:  # check from the first steady request on
+                continue
+            other = 1 - me
+            # 2. attention residency for chunks 0..phi of request `req`
+            for j in range(phi + 1):
+                if j < pl.p2:
+                    e = pools[me].get(int(pl.own_slot[j]))
+                    assert e and e[:4] == ("own", me, req, j), ("miss own", t, me, j, e)
+                else:
+                    e = pools[other].get(int(host_table[other][j]))
+                    assert e and e[:4] == ("host", me, req, j), ("miss host", t, me, j, e)

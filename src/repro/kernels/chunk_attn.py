@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: chunked-prefill flash attention with a prefix offset.
+
+This is MOCAP's compute hot spot: one chunk of C query tokens attends over
+(prefix + chunk) KV — the prefix rows are fully visible, the final C rows are
+causal with offset ``prefix_len``. GQA is handled by mapping query head h to
+kv head h // group in the K/V BlockSpec index maps (no KV replication in VMEM).
+
+Tiling: grid = (B, H, nq, nk) with the KV block loop innermost (sequential on
+TPU); online-softmax accumulators live in fp32 VMEM scratch. Block shapes are
+(block_q, head_dim) / (block_k, head_dim) with head_dim padded to the 128-lane
+width by the wrapper (`ops.chunk_attention`). Blocks strictly above the causal
+diagonal are skipped via ``pl.when`` (no MXU work issued).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = float(-1e30)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal_offset: int, kv_len: int,
+                 block_q: int, block_k: int):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # absolute positions of this block's queries / keys
+    q_pos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # skip blocks entirely above the causal diagonal
+    last_q = qb * block_q + causal_offset + block_q - 1  # last query's abs pos
+    first_k = kb * block_k
+
+    @pl.when(first_k <= last_q)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = (k_pos <= q_pos + causal_offset) & (k_pos < kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        m_safe = jnp.where(m_new < NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        corr = jnp.exp(m_prev - m_safe)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(p, v_ref[0, :, 0, :].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(kb == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def chunk_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal_offset: int = 0, scale: Optional[float] = None,
+    kv_len: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q [B, C, H, D]; k, v [B, T, KVH, D] (T = prefix + C, padded to a
+    multiple of block_k). Returns [B, C, H, D].
+
+    ``causal_offset``: absolute position of q[0] minus the position of k[0]
+    (= prefix length for chunked prefill). ``kv_len``: number of VALID kv
+    positions (defaults to T; use when T includes padding).
+    """
+    b, c, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kv_len = kv_len if kv_len is not None else t
+    block_q = min(block_q, c)
+    block_k = min(block_k, t)
+    assert c % block_q == 0 and t % block_k == 0, (c, t, block_q, block_k)
+    nq, nk = c // block_q, t // block_k
+
+    grid = (b, h, nq, nk)
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal_offset=causal_offset, kv_len=kv_len,
+        block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: flash-decode attention (one query token vs a KV cache).
+
+Grid = (B, KVH, ns): the sequence-block loop is innermost (sequential); the
+online-softmax state for ALL G group-queries of this kv head lives in fp32
+VMEM scratch. Valid lengths are per-batch (``kv_len``), masked inside the
+kernel, so one compiled kernel serves ragged batches.
+
+Decode is memory-bound: the kernel's job is to stream K/V blocks through VMEM
+exactly once with no materialized [S] score row in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_S = 512
+NEG_INF = float(-1e30)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, block_s: int):
+    si = pl.program_id(2)
+    ns = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[0]
+    first_s = si * block_s
+
+    @pl.when(first_s < kv_len)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)        # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)        # [Bs, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = first_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        m_safe = jnp.where(m_new < NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        corr = jnp.exp(m_prev - m_safe)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        pv = jax.lax.dot_general(p, v_ref[0, :, 0, :].astype(jnp.float32),
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(si == ns - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, kv_len: jax.Array, *,
+    scale: Optional[float] = None, block_s: int = DEFAULT_BLOCK_S,
+    interpret: bool = False,
+) -> jax.Array:
+    """q [B, H, D] (single decode token); k, v [B, S, KVH, D];
+    kv_len [B] int32 valid lengths. Returns [B, H, D]."""
+    import math
+    b, h, d = q.shape
+    s_len, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_s = min(block_s, s_len)
+    assert s_len % block_s == 0, (s_len, block_s)
+    ns = s_len // block_s
+
+    qg = q.reshape(b, kvh, g, d)
+    grid = (b, kvh, ns)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_s=block_s)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, si: (bi,)),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bi, hi, si: (bi, si, hi, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bi, hi, si: (bi, si, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, si: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), qg, k, v)
+    return out.reshape(b, h, d)

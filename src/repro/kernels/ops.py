@@ -1,0 +1,87 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles: head-dim padding to the 128-lane width, KV padding to block
+multiples, CPU fallback to ``interpret=True`` (the container has no TPU;
+kernels are validated in interpret mode and TARGET TPU — see DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import chunk_attn as _ca
+from repro.kernels import decode_attn as _da
+from repro.kernels import ssd as _ssd
+
+LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("causal_offset", "scale", "block_q", "block_k"))
+def chunk_attention(q, k, v, *, causal_offset: int = 0,
+                    scale: Optional[float] = None,
+                    block_q: int = _ca.DEFAULT_BLOCK_Q,
+                    block_k: int = _ca.DEFAULT_BLOCK_K):
+    """Chunked-prefill flash attention (MOCAP hot spot). See chunk_attn.py."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    t, c = k.shape[1], q.shape[1]
+    bq = min(block_q, c)
+    while c % bq:
+        bq //= 2
+    bk = min(block_k, t)
+    qp = _pad_to(q, 3, LANE)
+    kp = _pad_to(_pad_to(k, 3, LANE), 1, bk)
+    vp = _pad_to(_pad_to(v, 3, LANE), 1, bk)
+    out = _ca.chunk_attention_pallas(
+        qp, kp, vp, causal_offset=causal_offset, scale=scale, kv_len=t,
+        block_q=bq, block_k=bk, interpret=not _on_tpu())
+    return out[..., :d]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a_log, b, c, d_skip, *, chunk: int = 128, init_state=None,
+        interpret: Optional[bool] = None):
+    """Mamba2 chunked SSD scan. See ssd.py."""
+    t = x.shape[1]
+    ck = min(chunk, t)
+    while t % ck:
+        ck //= 2
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _ssd.ssd_pallas(x, dt, a_log, b, c, d_skip, chunk=ck,
+                           init_state=init_state, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "block_s"))
+def decode_attention(q, k, v, kv_len, *, scale: Optional[float] = None,
+                     block_s: int = _da.DEFAULT_BLOCK_S):
+    """Flash-decode (one token vs KV cache). See decode_attn.py."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qp = _pad_to(q, 2, LANE)
+    kp = _pad_to(k, 3, LANE)
+    vp = _pad_to(v, 3, LANE)
+    s_len = kp.shape[1]
+    bs = min(block_s, s_len)
+    while s_len % bs:
+        bs //= 2
+    out = _da.decode_attention_pallas(qp, kp, vp, kv_len, scale=scale,
+                                      block_s=bs, interpret=not _on_tpu())
+    return out[..., :d]

@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Each function is the mathematically transparent (materialize-everything)
+version of its kernel; kernels are asserted allclose against these across
+shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_attention_ref(q, k, v, *, causal_offset: int = 0,
+                        scale: Optional[float] = None,
+                        kv_len: Optional[int] = None):
+    """q [B,C,H,D]; k/v [B,T,KVH,D]. Materialized-scores GQA attention with
+    prefix-causal masking (query i sees keys j <= causal_offset + i)."""
+    b, c, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kv_len = kv_len if kv_len is not None else t
+    qg = q.reshape(b, c, kvh, g, d).astype(jnp.float32)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qg, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(c)[:, None] + causal_offset
+    kpos = jnp.arange(t)[None, :]
+    mask = (kpos <= qpos) & (kpos < kv_len)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgcs,bskd->bckgd", p, v.astype(jnp.float32))
+    return out.reshape(b, c, h, d).astype(q.dtype)
+
+
+def ssd_ref(x, dt, a_log, b, c, d_skip, *, init_state=None):
+    """Sequential (token-by-token) SSD recurrence — the slowest, most
+    obviously-correct form. x [B,T,H,P]; dt [B,T,H]; b/c [B,T,G,N]."""
+    bs, t, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hg = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    bh = jnp.repeat(b.astype(jnp.float32), hg, axis=2)   # [B,T,H,N]
+    ch = jnp.repeat(c.astype(jnp.float32), hg, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    st = jnp.zeros((bs, h, p, n), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+
+    def step(st, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        dec = jnp.exp(dtt * a)  # [B,H]
+        st = st * dec[..., None, None] + jnp.einsum("bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        yt = jnp.einsum("bhn,bhpn->bhp", ct, st)
+        return st, yt
+
+    st, ys = jax.lax.scan(
+        step, st,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         bh.transpose(1, 0, 2, 3), ch.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3) + xf * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), st
+
+
+def decode_attention_ref(q, k, v, kv_len, *, scale: Optional[float] = None):
+    """q [B,H,D]; k/v [B,S,KVH,D]; kv_len [B]. Materialized decode attention."""
+    b, h, d = q.shape
+    s_len, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s_len)[None, :] < kv_len[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: Mamba2 chunked SSD (state-space duality) scan.
+
+One grid step computes one (batch, head, chunk) cell: the intra-chunk
+"diagonal" attention-like term, the chunk's contribution to the running SSM
+state, and the inter-chunk "off-diagonal" term read from the state carried in
+fp32 VMEM scratch. The chunk axis is the innermost grid dimension, which TPU
+executes SEQUENTIALLY — the scratch state [P, N] persists across chunk steps
+and is reset at chunk 0 (this is how the recurrence crosses chunk boundaries
+without leaving VMEM).
+
+Layout notes: P (head channel) and N (state) are the two minor dims; Q (chunk
+length) is a multiple of 8 sublanes, P/N multiples of 128 lanes preferred.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, dskip_ref,
+                init_ref, y_ref, st_out_ref, state_ref, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _reset():
+        state_ref[...] = init_ref[0, 0, :, :].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [Q]
+    a = a_ref[0]                                     # scalar A_log for this head
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)       # [Q, N]
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)       # [Q, N]
+    d_skip = dskip_ref[0]
+
+    da = dt * (-jnp.exp(a))                          # [Q]
+    da_cs = jnp.cumsum(da)                           # [Q]
+    xdt = x * dt[:, None]                            # [Q, P]
+
+    # intra-chunk: L[i,j] = exp(da_cs[i] - da_cs[j]) for j <= i
+    seg = da_cs[:, None] - da_cs[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(iota_j <= iota_i, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    y_diag = jax.lax.dot_general(cb * lmat, xdt, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q, P]
+
+    # off-diagonal: read the carried state
+    state = state_ref[...]                           # [P, N]
+    decay_in = jnp.exp(da_cs)                        # [Q]
+    y_off = jax.lax.dot_general(cm, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [Q, P]
+    y_off = y_off * decay_in[:, None]
+
+    y = y_diag + y_off + x * d_skip
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update: state' = state * exp(sum da) + sum_q decay_out[q] B[q] (x dt)[q]
+    decay_out = jnp.exp(da_cs[-1] - da_cs)           # [Q]
+    upd = jax.lax.dot_general((xdt * decay_out[:, None]), bm,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [P, N]
+    state_ref[...] = state * jnp.exp(da_cs[-1]) + upd
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        st_out_ref[0, 0, :, :] = state_ref[...]
+
+
+def ssd_pallas(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+               b: jax.Array, c: jax.Array, d_skip: jax.Array, *,
+               chunk: int = 128, init_state: Optional[jax.Array] = None,
+               n_groups: int = 1, interpret: bool = False):
+    """Chunked SSD. x [B,T,H,P]; dt [B,T,H] (post-softplus); a_log [H];
+    b, c [B,T,G,N]; d_skip [H]. T must be a multiple of ``chunk``.
+    Returns (y [B,T,H,P] fp32-accurate in x.dtype, final_state [B,H,P,N] fp32).
+
+    Groups (G < H) are mapped per-head in the B/C BlockSpec index maps.
+    """
+    bs, t, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hg = h // g
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    if init_state is None:
+        init_state = jnp.zeros((bs, h, p, n), jnp.float32)
+
+    grid = (bs, h, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi // hg, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi // hg, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs, t, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bs, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log.astype(jnp.float32), b, c, d_skip.astype(jnp.float32),
+      init_state)
+    return y, st

@@ -1,0 +1,265 @@
+"""Cell builder: one (arch x shape x mode) -> a lowerable jit'd step.
+
+This is the single source of truth for WHAT gets lowered per cell, shared by
+the dry-run, the roofline report, serve.py and train.py.
+
+Shape -> step function and sharding (DESIGN.md §5):
+  train_4k     train_step: batch over batch_axes; params/opt FSDP("data") +
+               TP("model"); grad all-reduce over "pod".
+  prefill_32k  two first-class modes:
+                 baseline_tp    full-sequence forward, batch over batch_axes
+                 mocap/terapipe/gpipe  chunked pipeline over stage axis
+  decode_32k   serve_step: batch over batch_axes, KV seq-sharded over "model"
+               (distributed flash-decode), TP weights.
+  long_500k    serve_step, batch=1: KV/state seq-sharded over ("data","model");
+               SSM/hybrid only (sub-quadratic) — full-attention archs SKIP.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, RunConfig, ShapeConfig, SHAPES,
+                                get_config)
+from repro.core import pipeline as pp
+from repro.models.api import Model, build_model
+from repro.models.topology import Topology
+from repro.train.optim import AdamWConfig
+from repro.train.step import make_train_step, train_state_specs
+
+PREFILL_MODES = ("mocap", "terapipe", "gpipe", "baseline_tp")
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    mode: str
+    fn: Callable                      # jit-able python callable
+    args: Tuple[Any, ...]             # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    meta: Dict[str, Any] = field(default_factory=dict)
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings)
+        return jitted.lower(*self.args)
+
+
+class SkipCell(Exception):
+    """This (arch x shape) combination is intentionally not runnable."""
+
+
+def _named(topo: Topology, tree):
+    return jax.tree.map(lambda s: NamedSharding(topo.mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _abstract(fn, *args, **kw):
+    return jax.eval_shape(fn, *args, **kw)
+
+
+def build_cell(arch: str, shape_name: str, topo: Topology, *,
+               mode: str = "auto", run: Optional[RunConfig] = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    run = run or RunConfig(num_stages=topo.num_stages)
+    model = build_model(cfg)
+
+    if shape.kind == "decode" and shape.seq_len >= 200_000 and not cfg.subquadratic:
+        raise SkipCell(
+            f"{arch} x {shape_name}: full-attention arch skips the 500k "
+            f"decode shape (quadratic; DESIGN.md §4 shape-skips)")
+
+    if shape.kind == "train":
+        return _train_cell(model, shape, topo, run)
+    if shape.kind == "prefill":
+        m = "mocap" if mode == "auto" else mode
+        if m == "baseline_tp":
+            return _prefill_baseline_cell(model, shape, topo, run)
+        return _prefill_pipeline_cell(model, shape, topo, run, m)
+    return _decode_cell(model, shape, topo, run)
+
+
+# ------------------------------------------------------------------- train
+
+def _train_cell(model: Model, shape: ShapeConfig, topo: Topology,
+                run: RunConfig) -> Cell:
+    cfg = model.cfg
+    from repro.train.step import init_train_state
+    state_sh = _abstract(lambda key: init_train_state(model, key),
+                         jax.random.key(0))
+    specs = train_state_specs(model, topo, fsdp=run.fsdp)
+    step = make_train_step(model, topo, AdamWConfig(),
+                           grad_accum=run.grad_accum, remat=run.remat)
+    batch = model.input_specs(shape)
+    bspecs = model.input_sharding_specs(shape, batch_axes=topo.batch_axes)
+    return Cell(
+        arch=cfg.arch, shape=shape, mode="train",
+        fn=step, args=(state_sh, batch),
+        in_shardings=(_named(topo, specs), _named(topo, bspecs)),
+        meta={"family": cfg.family},
+    )
+
+
+# ----------------------------------------------------------------- prefill
+
+def _prefill_io(model: Model, shape: ShapeConfig, topo: Topology):
+    cfg = model.cfg
+    b, s = shape.global_batch, shape.seq_len
+    pod_axes = tuple(a for a in topo.batch_axes if a != topo.stage_axis) or None
+    ins = model.input_specs(shape)
+    tokens = ins["tokens"]
+    embeds = ins.get("embeds")
+    tok_spec = P(pod_axes, None)
+    emb_spec = P(pod_axes, None, None)
+    return tokens, embeds, tok_spec, emb_spec
+
+
+def _kv_split_topo(cfg, topo: Topology) -> Optional[Topology]:
+    """Reshape the TP axis into ("kv","qg") — same physical chips, a view
+    where GQA attention shards by kv head / query group with no collectives.
+    Returns None when head counts don't divide (falls back to "auto")."""
+    import numpy as np
+    from jax.sharding import AxisType, Mesh
+    factors = pp.kv_split_axes(cfg, topo.mesh.shape[topo.tp_axis]
+                               if not isinstance(topo.tp_axis, tuple)
+                               else topo.tp_size)
+    if factors is None:
+        return None
+    kv_ax, qg_ax, _ = factors
+    devs = np.asarray(topo.mesh.devices)
+    view = Mesh(devs.reshape(devs.shape[:-1] + (kv_ax, qg_ax)),
+                topo.mesh.axis_names[:-1] + ("kv", "qg"),
+                axis_types=(AxisType.Auto,) * (len(topo.mesh.axis_names) + 1))
+    return Topology(mesh=view, batch_axes=topo.batch_axes,
+                    tp_axis=("kv", "qg"), stage_axis=topo.stage_axis)
+
+
+def _prefill_pipeline_cell(model: Model, shape: ShapeConfig, topo: Topology,
+                           run: RunConfig, mode: str) -> Cell:
+    cfg = model.cfg
+    init_cfg = cfg
+    g_pad = None
+    e_pad = None
+    if run.attn_sharding == "kv_split" and cfg.family in ("dense", "moe", "vlm"):
+        split = _kv_split_topo(cfg, topo)
+        if split is not None:
+            topo = split
+            factors = pp.kv_split_axes(cfg, topo.tp_size)
+            kvh = cfg.num_kv_heads
+            if factors and kvh * factors[2] != cfg.num_heads:
+                g_pad = factors[2]  # zero-pad q heads per kv group (exact)
+                from repro.configs.base import replace as cfg_replace
+                cfg = cfg_replace(cfg, num_heads=kvh * g_pad)
+            if cfg.moe is not None:
+                tp = topo.tp_size  # EP: pad experts to the axis size
+                e_pad = -(-cfg.moe.num_experts // tp) * tp
+                import dataclasses
+                from repro.configs.base import replace as cfg_replace
+                cfg = cfg_replace(cfg, moe=dataclasses.replace(
+                    cfg.moe, num_experts=e_pad,
+                    num_real_experts=cfg.moe.real_experts))
+    plan = pp.build_plan(cfg, topo.num_stages, shape.seq_len, run, mode=mode)
+
+    def _init_staged(key):
+        params = model._mod.init(init_cfg, key)
+        mid_cfg = init_cfg
+        if g_pad is not None:
+            mid_cfg, params = pp.pad_q_heads(mid_cfg, params, g_pad)
+        if e_pad is not None:
+            mid_cfg, params = pp.pad_experts(mid_cfg, params, e_pad)
+        return pp.stage_params(cfg, params, plan)
+
+    staged_sh = _abstract(_init_staged, jax.random.key(0))
+    specs = pp.stage_param_specs(cfg, plan, topo)
+    # whisper keeps enc params under the same spec tree
+    spec_tree = {k: specs[k] for k in staged_sh.keys() if k in specs}
+    for k in staged_sh:
+        if k not in spec_tree:  # lm_head etc.
+            spec_tree[k] = specs.get(k, P(None, "model"))
+    tokens, embeds, tok_spec, emb_spec = _prefill_io(model, shape, topo)
+
+    if mode == "gpipe":
+        fn = lambda st, tk: pp.prefill_pipeline(cfg, st, tk, plan, topo)
+        args = (staged_sh, tokens)
+        shard = (_named(topo, spec_tree), NamedSharding(topo.mesh, tok_spec))
+    elif embeds is not None:
+        fn = lambda st, tk, em: pp.prefill_pipeline(cfg, st, tk, plan, topo,
+                                                    embeds=em)
+        args = (staged_sh, tokens, embeds)
+        shard = (_named(topo, spec_tree), NamedSharding(topo.mesh, tok_spec),
+                 NamedSharding(topo.mesh, emb_spec))
+    else:
+        fn = lambda st, tk: pp.prefill_pipeline(cfg, st, tk, plan, topo)
+        args = (staged_sh, tokens)
+        shard = (_named(topo, spec_tree), NamedSharding(topo.mesh, tok_spec))
+    return Cell(cfg.arch, shape, mode, fn, args, shard,
+                meta={"family": cfg.family, "plan": plan, "mesh": topo.mesh})
+
+
+def _prefill_baseline_cell(model: Model, shape: ShapeConfig, topo: Topology,
+                           run: RunConfig) -> Cell:
+    """Full-sequence TP prefill (no pipeline): batch over ALL batch axes,
+    the paper's 'conventional system' reference lowering."""
+    cfg = model.cfg
+    ins = model.input_specs(shape)
+    specs = model.param_specs(fsdp=run.fsdp)
+    params_sh = _abstract(model.init, jax.random.key(0))
+    bspecs = model.input_sharding_specs(shape, batch_axes=topo.batch_axes)
+
+    def fn(params, batch):
+        kw = {}
+        if "embeds" in batch:
+            kw["embeds"] = batch["embeds"]
+        logits = model.forward(params, batch["tokens"], topo=topo,
+                               remat=False, **kw)
+        return logits[:, -1]          # prefill-only: ONE next-token logit
+
+    return Cell(cfg.arch, shape, "baseline_tp", fn, (params_sh, ins),
+                (_named(topo, specs), _named(topo, bspecs)),
+                meta={"family": cfg.family})
+
+
+# ------------------------------------------------------------------ decode
+
+def _decode_cell(model: Model, shape: ShapeConfig, topo: Topology,
+                 run: RunConfig) -> Cell:
+    cfg = model.cfg
+    b = shape.global_batch
+    long_ctx = shape.seq_len >= 200_000
+    if long_ctx:
+        batch_axes: Tuple[str, ...] = ()
+        seq_axes: Tuple[str, ...] = ("data", "model") \
+            if cfg.family == "hybrid" else ()
+    else:
+        batch_axes = topo.batch_axes
+        seq_axes = ("model",) if cfg.family != "ssm" else ()
+    dtopo = Topology(mesh=topo.mesh, batch_axes=batch_axes,
+                     tp_axis=topo.tp_axis, stage_axis=topo.stage_axis)
+
+    ins = model.input_specs(shape)
+    ispecs = model.input_sharding_specs(shape, batch_axes=batch_axes,
+                                        seq_axes=seq_axes)
+    params_sh = _abstract(model.init, jax.random.key(0))
+    pspecs = model.param_specs(fsdp=False)   # decode: TP weights, no FSDP
+
+    def fn(params, cache, tokens):
+        if long_ctx or cfg.family == "ssm":
+            logits, cache = model.decode_step(params, cache, tokens,
+                                              seq_axes=seq_axes or ())
+        else:
+            logits, cache = model.decode_step(params, cache, tokens,
+                                              topo=dtopo, seq_axes=seq_axes)
+        return logits, cache
+
+    return Cell(
+        cfg.arch, shape, "decode", fn,
+        (params_sh, ins["cache"], ins["tokens"]),
+        (_named(topo, pspecs), _named(topo, ispecs["cache"]),
+         NamedSharding(topo.mesh, ispecs["tokens"])),
+        meta={"family": cfg.family, "seq_axes": seq_axes},
+    )

@@ -1,0 +1,205 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a SHARED attention block applied
+once per group of SSM layers (same weights each application, separate KV).
+
+Layer structure (cfg.hybrid): num_groups x (ssm_per_group Mamba2 + 1 shared
+attn+FFN application) + tail_ssm_layers Mamba2.
+
+Cache: dict(k=[G,B,S,K,Dh], v=..., g_conv=[G,pg,B,Kc-1,C], g_ssd=[G,pg,B,H,P,N],
+            t_conv=[tail,...], t_ssd=[...], pos=[B]).
+Only the attention KV participates in MBKR (the SSM state is O(1)/layer).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.topology import Topology
+
+Params = Dict[str, Any]
+
+
+def _shared_cfg_layers(cfg: ModelConfig, key) -> Params:
+    """Single (non-stacked) attention+FFN block params, via transformer init."""
+    p = T.init(T_single_cfg(cfg), key)["layers"]
+    return jax.tree.map(lambda a: a[0], p)  # drop layer dim
+
+
+def T_single_cfg(cfg: ModelConfig) -> ModelConfig:
+    from dataclasses import replace
+    return replace(cfg, num_layers=1, moe=None, family="dense")
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    h = cfg.hybrid
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    vpad = L.pad_vocab(cfg.vocab_size)
+    dt = jnp.dtype(cfg.dtype)
+    n_grouped = h.num_groups * h.ssm_per_group
+    g_params = S.init_block(cfg, k2, n_grouped)
+    g_params = jax.tree.map(
+        lambda a: a.reshape((h.num_groups, h.ssm_per_group) + a.shape[1:]), g_params)
+    return {
+        "embed": (jax.random.normal(k1, (vpad, cfg.d_model), jnp.float32) * 0.02).astype(dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "mamba_groups": g_params,
+        "mamba_tail": S.init_block(cfg, k3, h.tail_ssm_layers),
+        "shared": _shared_cfg_layers(cfg, k4),
+    }
+
+
+def specs(cfg: ModelConfig, *, fsdp: bool = True) -> Params:
+    bs = S.block_specs(cfg, fsdp=fsdp)
+    g_specs = jax.tree.map(lambda p: P(None, *p), bs, is_leaf=lambda x: isinstance(x, P))
+    shared = jax.tree.map(lambda p: P(*p[1:]),
+                          T.specs(T_single_cfg(cfg), fsdp=fsdp)["layers"],
+                          is_leaf=lambda x: isinstance(x, P))
+    return {
+        "embed": P("model", None),
+        "final_norm": P(None),
+        "mamba_groups": g_specs,
+        "mamba_tail": bs,
+        "shared": shared,
+    }
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            embeds=None, topo=None, impl="xla_flash", remat=True,
+            return_cache=False):
+    scfg = T_single_cfg(cfg)
+    x = L.embed_lookup(params["embed"], tokens, topo=topo)
+    shared = params["shared"]
+
+    def group_body(xc, g_lp):
+        def mamba_body(xm, lp):
+            xo, st = S.block_apply(cfg, lp, xm, topo=topo)
+            return xo, (st if return_cache else None)
+        xc, sts = jax.lax.scan(mamba_body, xc, g_lp)
+        xc, k, v = T.attn_block(scfg, shared, xc, impl=impl, topo=topo)
+        xc = T.ffn_block(scfg, shared, xc, topo=topo)
+        if topo is not None:
+            xc = jax.lax.with_sharding_constraint(
+                xc, topo.sharding(topo.batch_axes, None, None))
+        return xc, (k, v, sts) if return_cache else None
+
+    gb = jax.checkpoint(group_body, policy=jax.checkpoint_policies.nothing_saveable) if remat else group_body
+    x, kvs = jax.lax.scan(gb, x, params["mamba_groups"])
+
+    def tail_body(xm, lp):
+        xo, st = S.block_apply(cfg, lp, xm, topo=topo)
+        return xo, (st if return_cache else None)
+
+    tb = jax.checkpoint(tail_body, policy=jax.checkpoint_policies.nothing_saveable) if remat else tail_body
+    x, t_sts = jax.lax.scan(tb, x, params["mamba_tail"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_logits(x, params["embed"].T, topo=topo)
+    if return_cache:
+        pos = jnp.full((tokens.shape[0],), x.shape[1], jnp.int32)
+        return logits, {"k": kvs[0], "v": kvs[1],
+                        "g_conv": kvs[2]["conv"], "g_ssd": kvs[2]["ssd"],
+                        "t_conv": t_sts["conv"], "t_ssd": t_sts["ssd"],
+                        "pos": pos}
+    return logits
+
+
+# ------------------------------------------------------------------ decode
+
+def init_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    h = cfg.hybrid
+    s = cfg.ssm
+    d_in, nheads, conv_ch = S.dims(cfg)
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((h.num_groups, batch, max_len, cfg.num_kv_heads, hd), dt),
+        "v": jax.ShapeDtypeStruct((h.num_groups, batch, max_len, cfg.num_kv_heads, hd), dt),
+        "g_conv": jax.ShapeDtypeStruct((h.num_groups, h.ssm_per_group, batch, s.conv_kernel - 1, conv_ch), jnp.float32),
+        "g_ssd": jax.ShapeDtypeStruct((h.num_groups, h.ssm_per_group, batch, nheads, s.head_dim, s.d_state), jnp.float32),
+        "t_conv": jax.ShapeDtypeStruct((h.tail_ssm_layers, batch, s.conv_kernel - 1, conv_ch), jnp.float32),
+        "t_ssd": jax.ShapeDtypeStruct((h.tail_ssm_layers, batch, nheads, s.head_dim, s.d_state), jnp.float32),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, *, batch_axes, seq_axes) -> Dict[str, P]:
+    bt = batch_axes if batch_axes else None
+    sq = seq_axes if seq_axes else None
+    return {
+        "k": P(None, bt, sq, None, None),
+        "v": P(None, bt, sq, None, None),
+        "g_conv": P(None, None, bt, None, None),
+        "g_ssd": P(None, None, bt, None, None, None),
+        "t_conv": P(None, bt, None, None),
+        "t_ssd": P(None, bt, None, None, None),
+        "pos": P(bt),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    sh = init_cache_shape(cfg, batch, max_len)
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in sh.items()}
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens: jax.Array, *, topo: Optional[Topology] = None,
+                seq_axes: Tuple[str, ...] = ()):
+    scfg = T_single_cfg(cfg)
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = L.embed_lookup(params["embed"], tokens[:, None], topo=topo)
+    shared = params["shared"]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def group_body(xc, inp):
+        g_lp, ck, cv, conv_st, ssd_st = inp
+
+        def mamba_body(xm, lp_st):
+            lp, cst, sst = lp_st
+            xo, st2 = S.block_decode(cfg, lp, xm, {"conv": cst, "ssd": sst})
+            return xo, (st2["conv"], st2["ssd"])
+
+        xc, (conv2, ssd2) = jax.lax.scan(mamba_body, xc, (g_lp, conv_st, ssd_st))
+        # shared attention (one token)
+        hn = L.rms_norm(xc, shared["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dq->bsq", hn, shared["wq"]).reshape(b, 1, h, hd)
+        k = jnp.einsum("bsd,dq->bsq", hn, shared["wk"]).reshape(b, 1, kv, hd)
+        v = jnp.einsum("bsd,dq->bsq", hn, shared["wv"]).reshape(b, 1, kv, hd)
+        cos, sin = L.rope_angles(pos[:, None], hd, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        if topo is not None and seq_axes:
+            att, ck, cv = T.decode_attn_update(scfg, q, k, v, ck, cv, pos,
+                                               topo=topo, seq_axes=seq_axes)
+        else:
+            ck = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0)))(ck, k, pos)
+            cv = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0)))(cv, v, pos)
+            pv, l, _ = L.decode_attention_local(q, ck, cv, pos + 1)
+            att = (pv / jnp.maximum(l, 1e-30).reshape(b, 1, h, 1)).astype(q.dtype)
+        out = jnp.einsum("bsq,qd->bsd", att.reshape(b, 1, h * hd), shared["wo"])
+        xc = xc + out
+        xc = T.ffn_block(scfg, shared, xc, topo=topo)
+        return xc, (ck, cv, conv2, ssd2)
+
+    x, (ck, cv, g_conv, g_ssd) = jax.lax.scan(
+        group_body, x,
+        (params["mamba_groups"], cache["k"], cache["v"], cache["g_conv"], cache["g_ssd"]))
+
+    def tail_body(xm, lp_st):
+        lp, cst, sst = lp_st
+        xo, st2 = S.block_decode(cfg, lp, xm, {"conv": cst, "ssd": sst})
+        return xo, (st2["conv"], st2["ssd"])
+
+    x, (t_conv, t_ssd) = jax.lax.scan(
+        tail_body, x, (params["mamba_tail"], cache["t_conv"], cache["t_ssd"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_logits(x, params["embed"].T, topo=topo)
+    return logits[:, 0], {
+        "k": ck, "v": cv, "g_conv": g_conv, "g_ssd": g_ssd,
+        "t_conv": t_conv, "t_ssd": t_ssd, "pos": pos + 1,
+    }

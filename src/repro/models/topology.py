@@ -1,0 +1,58 @@
+"""Topology: the bridge between model code and mesh axes.
+
+Model code never names mesh axes directly; it asks the Topology. A ``None``
+topology means "single device, no collectives" (smoke tests, oracles).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Topology:
+    mesh: Mesh
+    batch_axes: Tuple[str, ...] = ("data",)  # ("pod","data") on the multi-pod mesh
+    # single axis ("model") or a split view (("kv","qg")) for collective-free
+    # GQA attention (perf variant; see core.pipeline)
+    tp_axis: object = "model"
+    stage_axis: str = "data"  # chunked-pipeline stages live on this axis
+
+    @property
+    def tp_size(self) -> int:
+        if isinstance(self.tp_axis, tuple):
+            n = 1
+            for a in self.tp_axis:
+                n *= self.mesh.shape[a]
+            return n
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def num_stages(self) -> int:
+        return self.mesh.shape[self.stage_axis]
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def sharding(self, *spec) -> NamedSharding:
+        return NamedSharding(self.mesh, P(*spec))
+
+    def batch_spec(self, *rest) -> P:
+        return P(self.batch_axes, *rest)
+
+    def divisible(self, n: int, axis: Optional[str] = None) -> bool:
+        return n % self.mesh.shape[axis or self.tp_axis] == 0
+
+
+def single_device_topology() -> Optional[Topology]:
+    """Degenerate 1-device topology (tests)."""
+    dev = jax.devices()[0]
+    mesh = Mesh([[dev]], ("data", "model"))
+    return Topology(mesh=mesh)

@@ -1,0 +1,211 @@
+"""Whisper-style encoder-decoder backbone. The audio frontend (mel + conv) is
+a STUB per the task spec: inputs are precomputed frame embeddings
+[B, num_frames, d_model].
+
+MOCAP adaptation (DESIGN.md §4): encoder attention is bidirectional, so the
+chunked pipeline (which requires causal chunk independence) applies to the
+DECODER prefill; the encoder runs as a single TP pass (1500 frames).
+
+Deviation from the original: RoPE replaces learned/sinusoidal positions (the
+backbone-only config is what matters here; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import replace as dc_replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.topology import Topology
+
+Params = Dict[str, Any]
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dc_replace(cfg, num_layers=cfg.encdec.enc_layers, family="dense",
+                      tie_embeddings=True)
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv, nl = cfg.num_heads, cfg.num_kv_heads, cfg.num_layers
+    vpad = L.pad_vocab(cfg.vocab_size)
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc = T.init(_enc_cfg(cfg), k2)
+    keys = iter(jax.random.split(k3, 16))
+
+    def nrm(k, *shape, std=0.02):
+        return (jax.random.normal(k, shape, jnp.float32) * std).astype(dt)
+
+    dec: Params = {
+        "ln1": jnp.ones((nl, d), dt),
+        "wq": nrm(next(keys), nl, d, h * hd),
+        "wk": nrm(next(keys), nl, d, kv * hd),
+        "wv": nrm(next(keys), nl, d, kv * hd),
+        "wo": nrm(next(keys), nl, h * hd, d, std=0.02 / math.sqrt(2 * nl)),
+        "lnx": jnp.ones((nl, d), dt),
+        "xwq": nrm(next(keys), nl, d, h * hd),
+        "xwk": nrm(next(keys), nl, d, kv * hd),
+        "xwv": nrm(next(keys), nl, d, kv * hd),
+        "xwo": nrm(next(keys), nl, h * hd, d, std=0.02 / math.sqrt(2 * nl)),
+        "ln2": jnp.ones((nl, d), dt),
+        "wg": nrm(next(keys), nl, d, cfg.d_ff),
+        "wu": nrm(next(keys), nl, d, cfg.d_ff),
+        "wd": nrm(next(keys), nl, cfg.d_ff, d, std=0.02 / math.sqrt(2 * nl)),
+    }
+    return {
+        "embed": (jax.random.normal(k1, (vpad, d), jnp.float32) * 0.02).astype(dt),
+        "final_norm": jnp.ones((d,), dt),
+        "enc_layers": enc["layers"],
+        "enc_norm": jnp.ones((d,), dt),
+        "dec_layers": dec,
+    }
+
+
+def specs(cfg: ModelConfig, *, fsdp: bool = True) -> Params:
+    FD = "data" if fsdp else None
+    MD = "model"
+    enc = T.specs(_enc_cfg(cfg), fsdp=fsdp)["layers"]
+    dec = {
+        "ln1": P(None, None), "lnx": P(None, None), "ln2": P(None, None),
+        "wq": P(None, FD, MD), "wk": P(None, FD, MD), "wv": P(None, FD, MD),
+        "wo": P(None, MD, FD),
+        "xwq": P(None, FD, MD), "xwk": P(None, FD, MD), "xwv": P(None, FD, MD),
+        "xwo": P(None, MD, FD),
+        "wg": P(None, FD, MD), "wu": P(None, FD, MD), "wd": P(None, MD, FD),
+    }
+    return {
+        "embed": P(MD, None), "final_norm": P(None),
+        "enc_layers": enc, "enc_norm": P(None), "dec_layers": dec,
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array, *,
+           topo=None, impl="xla_flash", remat=True) -> jax.Array:
+    """frames [B,F,d] (stub embeddings) -> encoder output [B,F,d]."""
+    ecfg = _enc_cfg(cfg)
+    x = frames.astype(jnp.dtype(cfg.dtype))
+
+    def body(xc, lp):
+        xo, _, _ = T.layer_apply(ecfg, lp, xc, causal_offset=None, impl=impl, topo=topo)
+        return xo, None
+
+    f = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    x, _ = jax.lax.scan(f, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attn(cfg, lp, x, enc_out=None, xk=None, xv=None):
+    """Cross-attention sub-block. Either enc_out (compute kv) or (xk, xv)."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    hn = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dq->bsq", hn, lp["xwq"]).reshape(b, s, h, hd)
+    if xk is None:
+        f = enc_out.shape[1]
+        xk = jnp.einsum("bfd,dq->bfq", enc_out, lp["xwk"]).reshape(b, f, kv, hd)
+        xv = jnp.einsum("bfd,dq->bfq", enc_out, lp["xwv"]).reshape(b, f, kv, hd)
+    att = L.attention(q, xk, xv, causal_offset=None, impl="naive" if s == 1 else "xla_flash")
+    out = jnp.einsum("bsq,qd->bsd", att.reshape(b, s, h * hd), lp["xwo"])
+    return x + out, xk, xv
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            embeds=None, topo=None, impl="xla_flash", remat=True,
+            return_cache=False):
+    """embeds = stub frame embeddings [B,F,d]; tokens = decoder tokens [B,S]."""
+    assert embeds is not None, "whisper requires frame embeddings"
+    enc_out = encode(cfg, params, embeds, topo=topo, impl=impl, remat=remat)
+    x = L.embed_lookup(params["embed"], tokens, topo=topo)
+
+    def body(xc, lp):
+        xc, k, v = T.attn_block(cfg, lp, xc, impl=impl, topo=topo)
+        xc, xk, xv = _cross_attn(cfg, lp, xc, enc_out=enc_out)
+        xc = T.ffn_block(cfg, lp, xc, topo=topo)
+        if topo is not None:
+            xc = jax.lax.with_sharding_constraint(
+                xc, topo.sharding(topo.batch_axes, None, None))
+        return xc, (k, v, xk, xv) if return_cache else None
+
+    f = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    x, kvs = jax.lax.scan(f, x, params["dec_layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_logits(x, params["embed"].T, topo=topo)
+    if return_cache:
+        pos = jnp.full((tokens.shape[0],), x.shape[1], jnp.int32)
+        return logits, {"k": kvs[0], "v": kvs[1], "xk": kvs[2], "xv": kvs[3], "pos": pos}
+    return logits
+
+
+def init_cache_shape(cfg: ModelConfig, batch: int, max_len: int):
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    nl, kv = cfg.num_layers, cfg.num_kv_heads
+    f = cfg.encdec.num_frames
+    return {
+        "k": jax.ShapeDtypeStruct((nl, batch, max_len, kv, hd), dt),
+        "v": jax.ShapeDtypeStruct((nl, batch, max_len, kv, hd), dt),
+        "xk": jax.ShapeDtypeStruct((nl, batch, f, kv, hd), dt),
+        "xv": jax.ShapeDtypeStruct((nl, batch, f, kv, hd), dt),
+        "pos": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, *, batch_axes, seq_axes) -> Dict[str, P]:
+    bt = batch_axes if batch_axes else None
+    sq = seq_axes if seq_axes else None
+    return {
+        "k": P(None, bt, sq, None, None), "v": P(None, bt, sq, None, None),
+        "xk": P(None, bt, None, None, None), "xv": P(None, bt, None, None, None),
+        "pos": P(bt),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Params:
+    sh = init_cache_shape(cfg, batch, max_len)
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in sh.items()}
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens: jax.Array, *, topo: Optional[Topology] = None,
+                seq_axes: Tuple[str, ...] = ()):
+    b = tokens.shape[0]
+    pos = cache["pos"]
+    x = L.embed_lookup(params["embed"], tokens[:, None], topo=topo)
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+
+    def body(xc, inp):
+        lp, ck, cv, xk, xv = inp
+        hn = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dq->bsq", hn, lp["wq"]).reshape(b, 1, h, hd)
+        k = jnp.einsum("bsd,dq->bsq", hn, lp["wk"]).reshape(b, 1, kv, hd)
+        v = jnp.einsum("bsd,dq->bsq", hn, lp["wv"]).reshape(b, 1, kv, hd)
+        cos, sin = L.rope_angles(pos[:, None], hd, cfg.rope_theta)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        if topo is not None and seq_axes:
+            att, ck, cv = T.decode_attn_update(cfg, q, k, v, ck, cv, pos,
+                                               topo=topo, seq_axes=seq_axes)
+        else:
+            ck = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0)))(ck, k, pos)
+            cv = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0)))(cv, v, pos)
+            pv, l, _ = L.decode_attention_local(q, ck, cv, pos + 1)
+            att = (pv / jnp.maximum(l, 1e-30).reshape(b, 1, h, 1)).astype(q.dtype)
+        xc = xc + jnp.einsum("bsq,qd->bsd", att.reshape(b, 1, h * hd), lp["wo"])
+        xc, _, _ = _cross_attn(cfg, lp, xc, xk=xk, xv=xv)
+        xc = T.ffn_block(cfg, lp, xc, topo=topo)
+        return xc, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"], cache["xk"], cache["xv"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed_logits(x, params["embed"].T, topo=topo)
+    return logits[:, 0], {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"],
+                          "pos": pos + 1}

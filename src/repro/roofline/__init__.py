@@ -1,0 +1,2 @@
+from repro.roofline.analysis import (HW_V5E, RooflineTerms, analyze_lowered,
+                                     collective_bytes, model_flops)

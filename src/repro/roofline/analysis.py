@@ -1,0 +1,148 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+Definitions (per task spec, restated for per-device artifacts — post-SPMD
+HLO is the per-device program, and ``compiled.cost_analysis()`` is per-device
+and counts loop bodies ONCE, so we use the trip-count-aware call-graph
+analyzer in ``hlo_graph``):
+
+    compute term    = flops_per_device / peak_FLOP/s
+                    (== global_HLO_FLOPs / (chips * peak))
+    memory term     = hbm_bytes_per_device / HBM_bw
+    collective term = collective_wire_bytes_per_device / link_bw
+
+    MODEL_FLOPS     = 6*N_active*D (train) | 2*N_active*D (prefill/decode)
+    useful_ratio    = MODEL_FLOPS / (flops_per_device * chips)
+    roofline_fraction = ideal_time(MODEL_FLOPS) / max(term)
+                      — the score: how close the USEFUL work runs to peak.
+
+Hardware constants: TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM, ~50 GB/s/link.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.roofline import hlo_graph
+
+HW_V5E = {
+    "peak_flops": 197e12,     # bf16 FLOP/s per chip
+    "hbm_bw": 819e9,          # B/s per chip
+    "link_bw": 50e9,          # B/s per ICI link
+    "hbm_cap": 16e9,
+}
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful model FLOPs (GLOBAL): 6*N*D train, 2*N*D forward; MoE counts
+    active params only."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token / request
+
+
+@dataclass
+class RooflineTerms:
+    flops_dev: float              # per-device, trip-scaled
+    bytes_dev: float              # minimum-traffic (perfect-fusion / Pallas)
+    coll_dev: float
+    coll_by_kind: Dict[str, float]
+    chips: int
+    model_flops: float
+    bytes_dev_xla: float = 0.0    # as-compiled bytes (CPU XLA materializes
+                                  # attention scores etc.) for reference
+    xla_flops_raw: float = 0.0    # cost_analysis (loop bodies x1) for reference
+    peak_bytes_per_dev: float = 0.0
+    hw: Dict[str, float] = field(default_factory=lambda: dict(HW_V5E))
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_dev / self.hw["peak_flops"]
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_dev / self.hw["hbm_bw"]
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_dev / self.hw["link_bw"]
+
+    @property
+    def dominant(self) -> str:
+        t = {"compute": self.compute_s, "memory": self.memory_s,
+             "collective": self.collective_s}
+        return max(t, key=t.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        tot = self.flops_dev * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        if self.bound_s <= 0:
+            return 0.0
+        ideal = self.model_flops / (self.chips * self.hw["peak_flops"])
+        return ideal / self.bound_s
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "flops_dev": self.flops_dev, "bytes_dev": self.bytes_dev,
+            "coll_dev": self.coll_dev, "coll_by_kind": self.coll_by_kind,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "bytes_dev_xla": self.bytes_dev_xla,
+            "xla_flops_raw": self.xla_flops_raw,
+            "peak_bytes_per_dev": self.peak_bytes_per_dev,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "RooflineTerms":
+        return RooflineTerms(
+            flops_dev=d["flops_dev"], bytes_dev=d["bytes_dev"],
+            coll_dev=d["coll_dev"], coll_by_kind=d.get("coll_by_kind", {}),
+            chips=d["chips"], model_flops=d["model_flops"],
+            bytes_dev_xla=d.get("bytes_dev_xla", 0.0),
+            xla_flops_raw=d.get("xla_flops_raw", 0.0),
+            peak_bytes_per_dev=d.get("peak_bytes_per_dev", 0.0))
+
+    def summary(self) -> str:
+        return (f"compute {self.compute_s*1e3:8.2f} ms | memory "
+                f"{self.memory_s*1e3:8.2f} ms | collective "
+                f"{self.collective_s*1e3:8.2f} ms | {self.dominant:<10} | "
+                f"useful {self.useful_ratio*100:5.1f}% | roofline "
+                f"{self.roofline_fraction*100:5.1f}%")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    return hlo_graph.analyze_text(hlo_text).coll
+
+
+def analyze_lowered(lowered, compiled, cfg, shape, chips: int,
+                    hw: Optional[Dict[str, float]] = None) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    g = hlo_graph.analyze_text(text)
+    mem = compiled.memory_analysis()
+    peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                 + getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "output_size_in_bytes", 0))
+    return RooflineTerms(
+        flops_dev=g.flops, bytes_dev=g.stream_bytes, coll_dev=g.coll_total,
+        coll_by_kind=g.coll, chips=chips,
+        model_flops=model_flops(cfg, shape),
+        bytes_dev_xla=g.bytes_,
+        xla_flops_raw=float(cost.get("flops", 0.0)),
+        peak_bytes_per_dev=peak,
+        hw=dict(hw or HW_V5E),
+    )

@@ -1,0 +1,377 @@
+"""Call-graph HLO cost analyzer (trip-count aware).
+
+``compiled.cost_analysis()`` counts every computation ONCE — a scan body that
+executes 31 times contributes 1x. Our models are scan-over-layers inside
+scan-over-ticks, so we parse the optimized HLO text into a computation call
+graph, cost each computation (dot FLOPs, HBM bytes, collective wire bytes),
+and roll up through ``while`` ops scaled by XLA's ``known_trip_count``.
+
+Costing rules (per-DEVICE, since post-SPMD HLO is the per-device program):
+- dot:           2 * out_elems * contracted_extent  (batch dims included)
+- bytes:         output + operands for materializing ops; ops INSIDE fused
+                 computations contribute FLOPs but not bytes (fusion does not
+                 materialize); gather/dynamic-slice read only what they emit.
+- collectives:   ring wire bytes per participant:
+                   all-gather / all-to-all: size * (n-1)/n
+                   all-reduce:              2 * size * (n-1)/n
+                   reduce-scatter:          size (counted on input)
+                   collective-permute:      size (point-to-point)
+- while:         (body + cond) * known_trip_count
+- fusion:        call-site bytes + callee FLOPs
+- call/cond:     callee cost once (branches summed — conservative)
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_ATOM = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_V2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1 = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "broadcast",
+             "reshape"}
+_SLICE_OPS = {"gather", "dynamic-slice", "slice"}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start", "reduce-scatter-start",
+                "all-to-all-start"}
+
+
+def _shape_bytes(txt: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_ATOM.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(txt: str) -> List[int]:
+    m = _SHAPE_ATOM.search(txt)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes_: float = 0.0
+    # "stream" bytes: HBM traffic under PERFECT producer-consumer fusion
+    # (Pallas/flash asymptote): only parameter/carry reads, root writes,
+    # in-place pool updates and collective payloads touch HBM. This is the
+    # roofline's minimum-traffic memory term; bytes_ is the as-compiled one.
+    stream_bytes: float = 0.0
+    coll: Dict[str, float] = field(default_factory=dict)
+    # (kind, callee(s), trip) — kind: while | fusion | call
+    calls: List[Tuple[str, List[str], int]] = field(default_factory=list)
+    # fusion call sites: (callee, out_bytes, [operand_bytes])
+    fusion_sites: List[Tuple[str, float, List[float]]] = field(default_factory=list)
+    has_dus: bool = False    # contains dynamic-update-slice (in-place pattern)
+    has_slice: bool = False  # contains dynamic-slice/gather (windowed read)
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_V2.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_V1.search(line)
+    if m and m.group(1).strip():
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def _operands(rest: str) -> List[str]:
+    """Operand names from the text following 'op(' (up to its close paren)."""
+    depth, out, cur = 1, [], []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            cur.append(ch)
+    args = "".join(cur)
+    return re.findall(r"%([\w.\-]+)", args)
+
+
+def _parse_op(line: str) -> Optional[Tuple[str, str, str, str]]:
+    """'%name = SHAPE opcode(rest...' -> (name, shape_txt, opcode, rest).
+    Bracket-matched: tuple shapes may contain commas, parens and
+    '/*index=N*/' comments."""
+    s = line.strip()
+    root = s.startswith("ROOT ")
+    if root:
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq]
+    rest = s[eq + 3:]
+    if rest.startswith("("):           # tuple shape: match parens
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape_txt, tail = rest[:end + 1], rest[end + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape_txt, tail = rest[:sp], rest[sp + 1:].lstrip()
+    par = tail.find("(")
+    if par <= 0:
+        return None
+    op = tail[:par]
+    if not re.fullmatch(r"[\w\-]+", op):
+        return None
+    return name, shape_txt, op, tail[par + 1:], root
+
+
+_ALIAS_OPS = {"reshape", "bitcast", "transpose", "copy"}
+
+
+def parse_hlo(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    shapes: Dict[str, str] = {}   # op name -> shape text (global: names unique)
+    entry = None
+    cur: Optional[_Comp] = None
+    real: set = set()             # names backed by HBM (params/carry + aliases)
+    # CPU float-normalization promotes bf16 collectives to f32 (reducers named
+    # *_promoted). The TPU target keeps them bf16 — project large f32
+    # collective payloads back to their logical width (documented in
+    # EXPERIMENTS.md §Roofline; calibration tests use f32 models, unaffected).
+    bf16_promoted = "clone_promoted" in text
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        hdr = _COMP_HDR.match(line)
+        if hdr and "=" not in line.split("(")[0]:
+            cur = _Comp(hdr.group(1))
+            comps[cur.name] = cur
+            real = set()
+            if line.lstrip().startswith("ENTRY"):
+                entry = cur.name
+            continue
+        parsed = _parse_op(line)
+        if parsed is None or cur is None:
+            continue
+        name, shape_txt, op, rest, is_root = parsed
+        shapes[name] = shape_txt
+        out_bytes = _shape_bytes(shape_txt)
+        ops_ = _operands(rest)
+        ob = [_shape_bytes(shapes.get(o, "")) for o in ops_]
+        real_reads = sum(b for o, b in zip(ops_, ob) if o in real)
+
+        if op in ("parameter", "get-tuple-element"):
+            real.add(name)
+            continue
+        if op in _ALIAS_OPS:
+            if ops_ and ops_[0] in real:
+                real.add(name)
+            continue
+
+        if op in _COLLECTIVES:
+            kind = op.replace("-start", "")
+            n = _group_size(line)
+            if kind == "all-gather":
+                wire = out_bytes * (n - 1) / n
+            elif kind == "all-reduce":
+                wire = 2 * out_bytes * (n - 1) / n
+            elif kind == "reduce-scatter":
+                wire = out_bytes * (n - 1)   # input = out*n; wire = in*(n-1)/n
+            elif kind == "all-to-all":
+                wire = out_bytes * (n - 1) / n
+            else:
+                wire = out_bytes
+            if bf16_promoted and shape_txt.startswith("f32") \
+                    and out_bytes > (1 << 20):
+                wire *= 0.5          # TPU dtype projection (see header note)
+            cur.coll[kind] = cur.coll.get(kind, 0.0) + wire
+            cur.bytes_ += 2 * out_bytes
+            cur.stream_bytes += 2 * out_bytes    # wire payloads materialize
+            real.add(name)
+            continue
+
+        if op == "dot":
+            lhs_shape = shapes.get(ops_[0], "") if ops_ else ""
+            cdims = _CONTRACT.search(line)
+            k = 1
+            if cdims and lhs_shape:
+                dims = _shape_dims(lhs_shape)
+                for ci in cdims.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+            out_elems = out_bytes / max(_DTYPE_BYTES.get(
+                _SHAPE_ATOM.search(shape_txt).group(1), 4), 1) \
+                if _SHAPE_ATOM.search(shape_txt) else 0
+            cur.flops += 2.0 * out_elems * k
+            cur.bytes_ += out_bytes + sum(ob[:2])
+            cur.stream_bytes += real_reads + (out_bytes if is_root else 0.0)
+            continue
+
+        if op == "while":
+            trip = 1
+            mt = _TRIP.search(line)
+            if mt:
+                trip = int(mt.group(1))
+            callees = _CALLS.findall(line)
+            cur.calls.append(("while", callees, trip))
+            real.add(name)  # carry round-trips through HBM
+            continue
+
+        if op == "fusion":
+            callees = _CALLS.findall(line)
+            cur.calls.append(("fusion", callees, 1))
+            cur.fusion_sites.append(
+                (callees[0] if callees else "", out_bytes, list(ob)))
+            cur.stream_bytes += real_reads + (out_bytes if is_root else 0.0)
+            continue
+
+        if op in ("call", "custom-call", "async-start"):
+            callees = _CALLS.findall(line)
+            if callees:
+                cur.calls.append(("call", callees, 1))
+            cur.bytes_ += out_bytes + sum(ob)
+            cur.stream_bytes += real_reads + out_bytes
+            continue
+
+        if op == "conditional":
+            mb = _BRANCHES.search(line)
+            callees = []
+            if mb:
+                callees = re.findall(r"%?([\w.\-]+)", mb.group(1))
+            callees += _CALLS.findall(line)
+            cur.calls.append(("call", callees, 1))
+            continue
+
+        if op == "dynamic-update-slice":
+            cur.has_dus = True
+            upd = ob[1] if len(ob) > 1 else 0.0
+            cur.bytes_ += 2 * upd
+            cur.stream_bytes += 2 * upd          # in-place pool write
+            if is_root or (ops_ and ops_[0] in real):
+                real.add(name)
+            continue
+        if op in _SLICE_OPS:
+            cur.has_slice = True
+            cur.bytes_ += 2 * out_bytes          # read only what is emitted
+            if ops_ and ops_[0] in real:
+                cur.stream_bytes += 2 * out_bytes
+            continue
+        if op == "scatter":
+            upd = ob[1] if len(ob) > 1 else 0.0
+            cur.bytes_ += 2 * upd
+            cur.stream_bytes += 2 * upd
+            continue
+        if op in _NO_BYTES:
+            continue
+        cur.bytes_ += out_bytes + sum(ob)
+        cur.stream_bytes += real_reads + (out_bytes if is_root else 0.0)
+    comps["__entry__"] = comps.get(entry, _Comp("none"))
+    return comps
+
+
+@dataclass
+class GraphCost:
+    flops: float
+    bytes_: float
+    coll: Dict[str, float]
+    stream_bytes: float = 0.0
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+def rollup(comps: Dict[str, _Comp]) -> GraphCost:
+    """DFS from ENTRY accumulating (flops, bytes, collective bytes).
+    Fused computations contribute FLOPs + collectives but not bytes; fusion
+    call-site bytes are alias-corrected: an in-place-update fusion (callee
+    contains dynamic-update-slice, one operand shape == output shape) does
+    NOT re-read/re-write the big aliased buffer — only the update slice."""
+    memo: Dict[Tuple[str, bool], Tuple[float, float, float, Dict[str, float]]] = {}
+
+    def site_bytes(c: _Comp) -> float:
+        total = 0.0
+        for callee, out_b, op_bs in c.fusion_sites:
+            cal = comps.get(callee)
+            aliased = (cal is not None and cal.has_dus
+                       and any(abs(b - out_b) < 1 for b in op_bs))
+            if aliased:
+                rest = [b for b in op_bs]
+                for i, b in enumerate(rest):
+                    if abs(b - out_b) < 1:      # drop the aliased read
+                        rest[i] = 0.0
+                        break
+                total += sum(rest) * 2          # update read + in-place write
+                continue
+            ops_eff = list(op_bs)
+            if cal is not None and cal.has_slice:
+                # windowed-read fusion: a dynamic-slice/gather inside reads
+                # only what it emits — cap big operands at the output size
+                ops_eff = [min(b, out_b) if b > 4 * out_b else b
+                           for b in ops_eff]
+            total += out_b + sum(ops_eff)
+        return total
+
+    def visit(name: str, fused: bool):
+        key = (name, fused)
+        if key in memo:
+            return memo[key]
+        c = comps.get(name)
+        if c is None:
+            return 0.0, 0.0, 0.0, {}
+        memo[key] = (0.0, 0.0, 0.0, {})  # cycle guard
+        fl = c.flops
+        by = 0.0 if fused else (c.bytes_ + site_bytes(c))
+        sb = 0.0 if fused else c.stream_bytes
+        co = dict(c.coll)
+        for kind, callees, trip in c.calls:
+            for callee in callees:
+                f2, b2, s2, c2 = visit(callee, fused or kind == "fusion")
+                fl += f2 * trip
+                by += b2 * trip
+                sb += s2 * trip
+                for k, v in c2.items():
+                    co[k] = co.get(k, 0.0) + v * trip
+        memo[key] = (fl, by, sb, co)
+        return memo[key]
+
+    f, b, sb, co = visit(comps["__entry__"].name, False)
+    return GraphCost(f, b, co, stream_bytes=sb)
+
+
+def analyze_text(text: str) -> GraphCost:
+    return rollup(parse_hlo(text))

@@ -1,0 +1,3 @@
+from repro.runtime.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.runtime.engine import (EngineConfig, PrefillEngine, Request,
+                                  SimExecutor, JaxExecutor)

@@ -1,0 +1,286 @@
+"""Prefill-only serving engine: request queue -> chunked-pipeline execution
+with MOCAP plans, plus the fault-tolerance / elasticity layer.
+
+Responsibilities:
+- ADMISSION: requests are bucketed by padded sequence length; each bucket has
+  a cached LBCP plan (DP+SA is amortized across requests — plans are a pure
+  function of (bucket, N, M)).
+- EXECUTION: pluggable executor. ``JaxExecutor`` drives the real jit'd
+  ``core.pipeline.prefill_pipeline``; ``SimExecutor`` drives the analytic cost
+  model with fault/straggler injection (tests, capacity planning).
+- FAULT TOLERANCE: a stage failure loses that stage's layer-slice KV, so
+  in-flight requests cannot be resumed mid-chunk — the engine re-forms the
+  pipeline WITHOUT the failed stage (N -> N-1... rounded down to even, MBKR
+  needs pairs), re-plans all buckets, and REPLAYS in-flight requests from
+  their admission watermark. Completed requests are never recomputed.
+- STRAGGLER MITIGATION: per-stage chunk-latency EWMA; sustained skew above
+  ``straggler_threshold`` triggers a re-plan with the observed per-stage speed
+  factors folded into the cost model; a stage past ``evict_threshold`` is
+  treated as failed (same re-mesh path).
+- CHECKPOINT/RESTART: the full engine state (queue, watermarks, plans, clock,
+  EWMA) serializes through ``runtime.checkpoint`` next to the model params.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace as dc_replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import costmodel as cm
+from repro.core import lbcp, mbkr
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float
+    seq_len: int
+    tokens: Optional[np.ndarray] = None
+    state: str = "queued"          # queued | running | done
+    bucket: int = 0
+    finish_time: float = math.inf
+    replays: int = 0
+    result: Any = None
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    model: ModelConfig
+    hw: cm.HardwareProfile = cm.TPU_V5E
+    num_stages: int = 16
+    tp: int = 16
+    num_chunks: int = 16
+    max_batch: int = 8
+    buckets: Tuple[int, ...] = (8192, 32768, 131072)
+    partition: str = "lbcp"        # uniform | lbcp
+    mbkr: bool = True
+    compress: float = 1.0
+    sa_iters: int = 60
+    straggler_threshold: float = 1.3   # max/median EWMA tick latency
+    evict_threshold: float = 3.0
+    ewma_alpha: float = 0.3
+
+
+class StageFailure(RuntimeError):
+    def __init__(self, stage: int):
+        super().__init__(f"stage {stage} failed")
+        self.stage = stage
+
+
+# ---------------------------------------------------------------- executors
+
+class SimExecutor:
+    """Analytic executor: returns per-stage makespan from the cost model.
+    Fault/straggler injection for engine tests:
+      fail_at[(batch_counter)] = stage    -> raise StageFailure mid-batch
+      slow = {stage: factor}              -> inflate that stage's tick times
+    """
+
+    def __init__(self, cfg: ModelConfig, hw: cm.HardwareProfile,
+                 fail_at: Optional[Dict[int, int]] = None,
+                 slow: Optional[Dict[int, float]] = None):
+        self.cfg, self.hw = cfg, hw
+        self.fail_at = fail_at or {}
+        self.slow = slow or {}
+        self.batch_counter = 0
+
+    def run(self, requests: Sequence[Request], chunks: Sequence[int],
+            num_stages: int, tp: int) -> Tuple[float, np.ndarray]:
+        """Returns (makespan seconds, per-stage avg tick latency [N])."""
+        self.batch_counter += 1
+        if self.batch_counter in self.fail_at:
+            raise StageFailure(self.fail_at[self.batch_counter])
+        sm = cm.StageModel.build(self.cfg, num_stages, tp)
+        res = cm.evaluate_prefill(chunks, sm, num_stages, self.hw)
+        lat = np.full(num_stages, res.latency / max(len(chunks), 1))
+        for s, f in self.slow.items():
+            if s < num_stages:
+                lat[s] *= f
+        makespan = res.latency * max(len(requests), 1) * float(
+            max(1.0, max(self.slow.values(), default=1.0)))
+        return makespan, lat
+
+
+class JaxExecutor:
+    """Real executor: jit'd chunked-pipeline prefill on the current mesh."""
+
+    def __init__(self, cfg: ModelConfig, staged_params, topo, run: RunConfig):
+        from repro.core import pipeline as pp
+        self.cfg, self.topo, self.run_cfg = cfg, topo, run
+        self.staged = staged_params
+        self._fns: Dict[Tuple[int, int], Callable] = {}
+        self._pp = pp
+
+    def run(self, requests: Sequence[Request], chunks: Sequence[int],
+            num_stages: int, tp: int) -> Tuple[float, np.ndarray]:
+        import time
+        import jax
+        import jax.numpy as jnp
+        seq = int(sum(chunks))
+        key = (seq, len(chunks))
+        if key not in self._fns:
+            plan = self._pp.build_plan(
+                self.cfg, num_stages, seq,
+                dc_replace(self.run_cfg, num_chunks=len(chunks)))
+            cfg, topo, staged = self.cfg, self.topo, self.staged
+            self._fns[key] = jax.jit(
+                lambda st, tk: self._pp.prefill_pipeline(cfg, st, tk, plan, topo))
+        toks = np.stack([np.pad(r.tokens, (0, seq - len(r.tokens)))
+                         for r in requests]).astype(np.int32)
+        t0 = time.perf_counter()
+        out = self._fns[key](self.staged, toks)
+        out.block_until_ready()
+        dt = time.perf_counter() - t0
+        for r, row in zip(requests, np.asarray(out)):
+            r.result = row
+        return dt, np.full(num_stages, dt / max(len(chunks), 1))
+
+
+# ------------------------------------------------------------------- engine
+
+class PrefillEngine:
+    def __init__(self, ec: EngineConfig, executor):
+        self.ec = ec
+        self.executor = executor
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self.clock = 0.0
+        self.num_stages = ec.num_stages
+        self.failed_stages: List[int] = []
+        self.ewma: Optional[np.ndarray] = None  # lazily seeded by first obs
+        self.replans = 0
+        self.remeshes = 0
+        self._plans: Dict[Tuple[int, int], List[int]] = {}
+
+    # ---------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        req.bucket = self._bucket(req.seq_len)
+        self.queue.append(req)
+
+    def _bucket(self, seq_len: int) -> int:
+        for b in self.ec.buckets:
+            if seq_len <= b:
+                return b
+        return self.ec.buckets[-1]
+
+    def _plan_for(self, bucket: int) -> List[int]:
+        key = (bucket, self.num_stages)
+        if key not in self._plans:
+            if self.ec.partition == "lbcp":
+                pp = lbcp.plan_partition(
+                    self.ec.model, bucket, self.ec.num_chunks, self.num_stages,
+                    self.ec.hw, tp=self.ec.tp, mbkr=self.ec.mbkr,
+                    compress=self.ec.compress, sa_iters=self.ec.sa_iters)
+                self._plans[key] = pp.chunks
+            else:
+                self._plans[key] = lbcp.uniform_partition(bucket, self.ec.num_chunks)
+        return self._plans[key]
+
+    # ---------------------------------------------------------- main loop
+    def step(self) -> bool:
+        """Admit and run ONE batch. Returns False when the queue is empty."""
+        pending = [r for r in self.queue if r.state == "queued"]
+        if not pending:
+            return False
+        bucket = pending[0].bucket
+        batch = [r for r in pending if r.bucket == bucket][: self.ec.max_batch]
+        chunks = self._plan_for(bucket)
+        for r in batch:
+            r.state = "running"
+        try:
+            makespan, stage_lat = self.executor.run(
+                batch, chunks, self.num_stages, self.ec.tp)
+        except StageFailure as e:
+            self._handle_failure(e.stage, batch)
+            return True
+        self.clock += makespan
+        self._observe(stage_lat)
+        for r in batch:
+            r.state = "done"
+            r.finish_time = self.clock
+            self.queue.remove(r)
+            self.done.append(r)
+        return True
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.step():
+                return
+
+    # ------------------------------------------------------ fault handling
+    def _handle_failure(self, stage: int, batch: Sequence[Request]) -> None:
+        """Stage loss: its layer-slice KV for in-flight requests is gone ->
+        re-form the pipeline without it and replay the batch from admission."""
+        self.failed_stages.append(stage)
+        new_n = self.num_stages - 1
+        if new_n % 2:
+            new_n -= 1  # MBKR pairs stages; keep N even
+        self.num_stages = max(new_n, 2)
+        self.remeshes += 1
+        self._plans.clear()          # plans depend on N — rebuild lazily
+        self.ewma = None
+        for r in batch:
+            r.state = "queued"       # replay from the admission watermark
+            r.replays += 1
+
+    # -------------------------------------------------- straggler handling
+    def _observe(self, stage_lat: np.ndarray) -> None:
+        a = self.ec.ewma_alpha
+        if self.ewma is None or len(stage_lat) != len(self.ewma):
+            self.ewma = np.asarray(stage_lat, float)
+        self.ewma = (1 - a) * self.ewma + a * stage_lat
+        med = float(np.median(self.ewma))
+        worst = int(np.argmax(self.ewma))
+        skew = float(self.ewma[worst] / max(med, 1e-12))
+        if skew > self.ec.evict_threshold:
+            self._handle_failure(worst, [r for r in self.queue
+                                         if r.state == "running"])
+        elif skew > self.ec.straggler_threshold:
+            self._plans.clear()      # fold new latencies into fresh plans
+            self.replans += 1
+
+    # ----------------------------------------------------------- metrics
+    def metrics(self) -> Dict[str, float]:
+        lat = [r.finish_time - r.arrival for r in self.done]
+        return {
+            "completed": len(self.done),
+            "avg_e2e": float(np.mean(lat)) if lat else math.nan,
+            "p99_e2e": float(np.percentile(lat, 99)) if lat else math.nan,
+            "throughput": len(self.done) / self.clock if self.clock else 0.0,
+            "replans": self.replans,
+            "remeshes": self.remeshes,
+            "num_stages": self.num_stages,
+        }
+
+    # ------------------------------------------------------- checkpointing
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "clock": self.clock,
+            "num_stages": self.num_stages,
+            "failed_stages": list(self.failed_stages),
+            "ewma": self.ewma.tolist() if self.ewma is not None else None,
+            "replans": self.replans,
+            "remeshes": self.remeshes,
+            "queue": [(r.rid, r.arrival, r.seq_len, r.state, r.replays)
+                      for r in self.queue],
+            "done": [(r.rid, r.arrival, r.seq_len, r.finish_time)
+                     for r in self.done],
+        }
+
+    def load_state_dict(self, d: Dict[str, Any]) -> None:
+        self.clock = d["clock"]
+        self.num_stages = int(d["num_stages"])
+        self.failed_stages = list(d["failed_stages"])
+        self.ewma = np.asarray(d["ewma"]) if d["ewma"] is not None else None
+        self.replans = int(d["replans"])
+        self.remeshes = int(d["remeshes"])
+        self.queue = [Request(rid, arr, sl, state="queued", replays=rp)
+                      for rid, arr, sl, state, rp in d["queue"]]
+        for r in self.queue:
+            r.bucket = self._bucket(r.seq_len)
+        self.done = [Request(rid, arr, sl, state="done", finish_time=ft)
+                     for rid, arr, sl, ft in d["done"]]
+        self._plans.clear()

@@ -1,0 +1,1 @@
+from repro.sim.engine import SimConfig, SimResult, simulate, max_seq_len

@@ -1,0 +1,2 @@
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update, cosine_lr
+from repro.train.step import TrainState, make_train_step, train_state_specs

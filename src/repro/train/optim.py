@@ -1,0 +1,83 @@
+"""AdamW + LR schedules, hand-rolled (no optax in this container).
+
+Optimizer state is a plain pytree mirroring the params (fp32 moments), so it
+shards with the same PartitionSpecs as the parameters (FSDP-friendly) and
+checkpoints through ``runtime.checkpoint`` like any other tree.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to min_lr_frac * lr."""
+    warm = cfg.lr * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr * (cfg.min_lr_frac + (1 - cfg.min_lr_frac)
+                    * 0.5 * (1 + jnp.cos(math.pi * prog)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params: Params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads: Params, state: Dict[str, Any],
+                 params: Params) -> Tuple[Params, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step with global-norm clipping and decoupled weight decay.
+    Weight decay is skipped for 1-D tensors (norms, biases)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = cosine_lr(cfg, state["step"])
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m2 / b1c) / (jnp.sqrt(v2 / b2c) + cfg.eps)
+        if p.ndim > 1:
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * update
+        return p2.astype(p.dtype), m2, v2
+
+    flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,94 @@
+"""Distributed train step: CE loss, grad accumulation, AdamW, FSDP + TP.
+
+Sharding: parameters and optimizer moments follow ``model.param_specs``
+(FSDP over "data", Megatron TP over "model"); the batch shards over
+``topo.batch_axes`` (("pod","data") on the multi-pod mesh). Remat is inside
+the model's scan-over-layers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.api import Model
+from repro.models.topology import Topology
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+TrainState = Dict[str, Any]  # {"params", "opt", ...}
+
+
+def train_state_specs(model: Model, topo: Topology, *, fsdp: bool = True):
+    pspec = model.param_specs(fsdp=fsdp)
+    return {
+        "params": pspec,
+        "opt": {"m": pspec, "v": pspec, "step": P()},
+    }
+
+
+def init_train_state(model: Model, key: jax.Array) -> TrainState:
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def make_train_step(
+    model: Model,
+    topo: Optional[Topology],
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    *,
+    grad_accum: int = 1,
+    remat: bool = True,
+) -> Callable[[TrainState, Dict[str, jax.Array]], Tuple[TrainState, Dict[str, jax.Array]]]:
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    batch: {"tokens": [B, S], "labels": [B, S], ("embeds": [B, F, d])}.
+    ``grad_accum`` > 1 scans over microbatches (B must divide).
+    """
+    cfg = model.cfg
+
+    def loss_fn(params, tokens, labels, embeds=None):
+        kw = dict(topo=topo, remat=remat)
+        if embeds is not None:
+            kw["embeds"] = embeds
+        return model.loss(params, tokens, labels, **kw)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        params = state["params"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        embeds = batch.get("embeds")
+
+        if grad_accum == 1:
+            (loss, grads) = jax.value_and_grad(loss_fn)(params, tokens, labels, embeds)
+        else:
+            b = tokens.shape[0]
+            assert b % grad_accum == 0
+            mb = b // grad_accum
+
+            def micro(carry, idx):
+                acc, loss_acc = carry
+                sl = lambda x: jax.lax.dynamic_slice_in_dim(x, idx * mb, mb, 0)
+                e = sl(embeds) if embeds is not None else None
+                l, g = jax.value_and_grad(loss_fn)(params, sl(tokens), sl(labels), e)
+                acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + l), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zero, jnp.float32(0)), jnp.arange(grad_accum))
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, state["opt"], params)
+        if topo is not None:
+            pspec = model.param_specs(fsdp=True)
+            new_params = jax.tree.map(
+                lambda x, s: jax.lax.with_sharding_constraint(x, s),
+                new_params, pspec, is_leaf=lambda x: hasattr(x, "shape"))
+        metrics = {"loss": loss, **om}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here on purpose — unit/smoke tests see
+the real single device; multi-device pipeline tests spawn subprocesses with
+--xla_force_host_platform_device_count (see test_pipeline.py)."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.key(0)

@@ -1,0 +1,88 @@
+"""Subprocess worker: chunked-pipeline vs full-forward equivalence on N fake
+devices. Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
+Usage: python tests/helpers/pipeline_check.py <arch> <mode> <remote_attn> [spill_dtype]
+Prints "PASS <max_err>" or raises.
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig, get_smoke_config, replace
+from repro.core import pipeline as pp
+from repro.models.api import build_model
+from repro.models.topology import Topology
+
+
+def main(arch: str, mode: str, remote_attn: str, spill_dtype: str = "bfloat16",
+         deep: str = ""):
+    cfg = replace(get_smoke_config(arch), dtype="float32")
+    if cfg.moe is not None:
+        # chunked dispatch uses PER-CHUNK capacity; lift it so no tokens drop
+        # and the pipeline is exactly comparable to the full-sequence oracle.
+        from repro.configs.base import MoEConfig
+        import dataclasses
+        cfg = replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    # "deep": 8 stages x tp 1 -> p2 = 6 < M-1, so REMOTE chunk 6 is actually
+    # consumed by chunk 7's attention (exercises fetch/qship VALUES and the
+    # int8 wire quantization, not just their masking)
+    n_stages, tp = (8, 1) if deep else (4, 2)
+    mesh = jax.make_mesh((n_stages, tp), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    topo = Topology(mesh=mesh)
+    m_chunks, c = 8, 16
+    s = m_chunks * c
+    b = 2
+    if mode == "gpipe":
+        b, m_chunks = 8, 4  # microbatch pipeline splits the BATCH
+
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    tokens = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
+
+    kw = {}
+    n_front = 0
+    if cfg.family == "encdec" or cfg.frontend.kind != "none":
+        n_front = c * 2 + 5  # deliberately NOT chunk-aligned (splice test)
+        kw["embeds"] = jax.random.normal(
+            jax.random.key(2), (b, n_front, cfg.d_model), jnp.float32) * 0.02
+        if cfg.frontend.kind == "vision_stub":
+            tokens = tokens[:, : s - n_front]  # embeds splice in front
+
+    # oracle: full forward, last-token logits
+    ref = model.forward(params, tokens, **kw)
+    ref_last = ref[:, -1, :].astype(jnp.float32)
+
+    run = RunConfig(num_chunks=m_chunks, num_stages=n_stages,
+                    mbkr=(mode == "mocap"), remote_attn=remote_attn,
+                    kv_spill_dtype=spill_dtype)
+    plan = pp.build_plan(cfg, n_stages, s if cfg.frontend.kind != "vision_stub"
+                         else s, run, mode=mode)
+    staged = pp.stage_params(cfg, params, plan)
+    specs = pp.stage_param_specs(cfg, plan, topo)
+
+    def to_sharded(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    staged = {k: jax.tree.map(to_sharded, staged[k], specs[k],
+                              is_leaf=lambda x: hasattr(x, "shape"))
+              if k in specs else staged[k] for k in staged}
+
+    with jax.set_mesh(mesh):
+        fn = jax.jit(lambda st, tk, **k: pp.prefill_pipeline(
+            cfg, st, tk, plan, topo, **k))
+        out = fn(staged, tokens, **kw)
+    out = np.asarray(out.astype(jnp.float32))
+    ref_last = np.asarray(ref_last)
+    err = np.max(np.abs(out - ref_last) / (np.abs(ref_last) + 1e-3))
+    tol = 0.05 if spill_dtype == "int8" else 2e-3
+    assert err < tol, f"{arch}/{mode}/{remote_attn}: max rel err {err}"
+    assert np.isfinite(out).all()
+    print(f"PASS {arch} {mode} {remote_attn} {spill_dtype} err={err:.2e}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

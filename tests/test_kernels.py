@@ -1,0 +1,121 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the
+pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(7)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+@pytest.mark.parametrize("b,c,h,kvh,d,p", [
+    (2, 64, 4, 2, 32, 128),
+    (1, 128, 8, 8, 64, 0),
+    (2, 32, 4, 1, 16, 96),
+    (1, 256, 2, 2, 128, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunk_attention(b, c, h, kvh, d, p, dtype):
+    t = p + c
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (b, c, h, d), dtype)
+    k = _rand(ks[1], (b, t, kvh, d), dtype)
+    v = _rand(ks[2], (b, t, kvh, d), dtype)
+    out = ops.chunk_attention(q, k, v, causal_offset=p)
+    want = ref.chunk_attention_ref(q, k, v, causal_offset=p)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_chunk_attention_blocks():
+    """Block-shape invariance: different tilings, same result."""
+    b, c, h, kvh, d, p = 1, 128, 4, 2, 64, 64
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (b, c, h, d), jnp.float32)
+    k = _rand(ks[1], (b, p + c, kvh, d), jnp.float32)
+    v = _rand(ks[2], (b, p + c, kvh, d), jnp.float32)
+    o1 = ops.chunk_attention(q, k, v, causal_offset=p, block_q=32, block_k=32)
+    o2 = ops.chunk_attention(q, k, v, causal_offset=p, block_q=128, block_k=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+@pytest.mark.parametrize("b,t,h,p_,g,n,ck", [
+    (2, 64, 4, 8, 1, 16, 16),
+    (1, 128, 2, 16, 2, 8, 32),
+    (1, 96, 4, 8, 4, 8, 32),  # uneven chunk fallback (96 % 32 == 0)
+])
+def test_ssd(b, t, h, p_, g, n, ck):
+    ks = jax.random.split(KEY, 4)
+    x = _rand(ks[0], (b, t, h, p_), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (b, t, h), jnp.float32))
+    a_log = jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32))
+    bb = _rand(ks[2], (b, t, g, n), jnp.float32)
+    cc = _rand(ks[3], (b, t, g, n), jnp.float32)
+    dsk = jnp.ones((h,))
+    y, st = ops.ssd(x, dt, a_log, bb, cc, dsk, chunk=ck)
+    yw, stw = ref.ssd_ref(x, dt, a_log, bb, cc, dsk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yw), atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(stw), atol=3e-4)
+
+
+def test_ssd_state_carry():
+    """Sequential kernel calls with carried state == one long call."""
+    b, t, h, p_, g, n = 1, 64, 2, 8, 1, 8
+    ks = jax.random.split(KEY, 4)
+    x = _rand(ks[0], (b, t, h, p_), jnp.float32)
+    dt = jax.nn.softplus(_rand(ks[1], (b, t, h), jnp.float32))
+    a_log = jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32))
+    bb = _rand(ks[2], (b, t, g, n), jnp.float32)
+    cc = _rand(ks[3], (b, t, g, n), jnp.float32)
+    dsk = jnp.ones((h,))
+    y_full, st_full = ops.ssd(x, dt, a_log, bb, cc, dsk, chunk=16)
+    y1, st1 = ops.ssd(x[:, :32], dt[:, :32], a_log, bb[:, :32], cc[:, :32],
+                      dsk, chunk=16)
+    y2, st2 = ops.ssd(x[:, 32:], dt[:, 32:], a_log, bb[:, 32:], cc[:, 32:],
+                      dsk, chunk=16, init_state=st1)
+    np.testing.assert_allclose(np.asarray(y_full[:, 32:]), np.asarray(y2),
+                               atol=3e-4)
+    np.testing.assert_allclose(np.asarray(st_full), np.asarray(st2), atol=3e-4)
+
+
+@pytest.mark.parametrize("b,h,kvh,d,s", [
+    (2, 8, 2, 64, 256),
+    (3, 4, 4, 32, 100),
+    (1, 16, 2, 128, 1024),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(b, h, kvh, d, s, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = _rand(ks[0], (b, h, d), dtype)
+    k = _rand(ks[1], (b, s, kvh, d), dtype)
+    v = _rand(ks[2], (b, s, kvh, d), dtype)
+    kvl = jax.random.randint(ks[3], (b,), 1, s + 1)
+    out = ops.decode_attention(q, k, v, kvl)
+    want = ref.decode_attention_ref(q, k, v, kvl)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_decode_attention_ragged_lengths():
+    """kv_len masking: garbage beyond the valid length must not leak."""
+    b, h, kvh, d, s = 2, 4, 2, 32, 128
+    ks = jax.random.split(KEY, 3)
+    q = _rand(ks[0], (b, h, d), jnp.float32)
+    k = _rand(ks[1], (b, s, kvh, d), jnp.float32)
+    v = _rand(ks[2], (b, s, kvh, d), jnp.float32)
+    kvl = jnp.array([17, 64], jnp.int32)
+    out1 = ops.decode_attention(q, k, v, kvl)
+    # poison the invalid region
+    k2 = k.at[0, 17:].set(1e4)
+    v2 = v.at[0, 17:].set(-1e4)
+    out2 = ops.decode_attention(q, k2, v2, kvl)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)

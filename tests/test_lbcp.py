@@ -1,0 +1,101 @@
+"""LBCP (Alg. 1) tests: DP vs brute force on small instances, SA refinement,
+and the balance/shrinking-chunk structure the paper predicts."""
+import itertools
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config
+from repro.core import costmodel as cm
+from repro.core import lbcp
+
+
+def brute_force(sq, m, n, eval_chunk):
+    best, best_obj = None, math.inf
+    for cuts in itertools.combinations(range(1, sq), m - 1):
+        bounds = (0,) + cuts + (sq,)
+        ks = [bounds[i + 1] - bounds[i] for i in range(m)]
+        ts = [eval_chunk(k, s) for k, s in zip(ks, bounds[:-1])]
+        obj = sum(ts) + (n - 1) * max(ts)
+        if obj < best_obj:
+            best, best_obj = ks, obj
+    return best, best_obj
+
+
+@pytest.mark.parametrize("sq,m,n", [(12, 3, 4), (10, 4, 2), (14, 2, 8)])
+def test_dp_matches_brute_force(sq, m, n):
+    # quadratic-in-prefix cost, like attention
+    def ec(k, s):
+        return k * (s + k / 2) + 3.0 * k
+
+    def ec_vec(ks, s):
+        return np.array([ec(int(k), s) for k in ks], float)
+
+    chunks, obj = lbcp.dp_partition(sq, m, n, ec_vec)
+    want, want_obj = brute_force(sq, m, n, ec)
+    assert obj == pytest.approx(want_obj, rel=1e-9)
+    assert sum(chunks) == sq
+
+
+@settings(max_examples=25, deadline=None)
+@given(sq=st.integers(6, 16), m=st.integers(2, 4), n=st.integers(2, 8),
+       a=st.floats(0.1, 5.0), b=st.floats(0.0, 3.0))
+def test_dp_optimal_property(sq, m, n, a, b):
+    if m > sq:
+        return
+
+    def ec(k, s):
+        return a * k * (s + k / 2) + b * k
+
+    def ec_vec(ks, s):
+        return np.array([ec(int(k), s) for k in ks], float)
+
+    chunks, obj = lbcp.dp_partition(sq, m, n, ec_vec)
+    _, want_obj = brute_force(sq, m, n, ec)
+    assert obj <= want_obj * (1 + 1e-9)
+
+
+def test_plan_partition_structure():
+    """Attention growth => strictly easier later chunks (sizes shrink)."""
+    cfg = get_config("llama3-70b")
+    p = lbcp.plan_partition(cfg, 65536, 8, 16, cm.WSC_PAPER, sa_iters=60)
+    assert sum(p.chunks) == 65536
+    assert p.chunks[0] > p.chunks[-1]
+    # chunk times under the analytic model are more balanced than uniform
+    sm = cm.StageModel.build(cfg, 16, 1)
+    t_lbcp = [cm.chunk_compute_time(sm, c, sum(p.chunks[:i]), cm.WSC_PAPER)
+              for i, c in enumerate(p.chunks)]
+    u = lbcp.uniform_partition(65536, 8)
+    t_uni = [cm.chunk_compute_time(sm, c, sum(u[:i]), cm.WSC_PAPER)
+             for i, c in enumerate(u)]
+    cv = lambda t: np.std(t) / np.mean(t)
+    assert cv(t_lbcp) < cv(t_uni)
+
+
+def test_linear_cost_gives_uniform():
+    """Attention-free (SSM): chunk cost is linear => uniform is optimal."""
+    def ec_vec(ks, s):
+        return ks.astype(float) * 2.0
+
+    chunks, _ = lbcp.dp_partition(16, 4, 8, ec_vec)
+    assert chunks == [4, 4, 4, 4]
+
+
+def test_sa_never_worse_than_dp_init():
+    cfg = get_config("llama3-70b")
+    p = lbcp.plan_partition(cfg, 32768, 8, 16, cm.WSC_PAPER, sa_iters=120,
+                            seed=1)
+    # re-evaluate the DP-only (uniform-free) baseline through the same model
+    from repro.core.lbcp import _evaluate_full
+    sm = cm.StageModel.build(cfg, 16, 1)
+    _, _, e2e_best, _ = _evaluate_full(p.chunks, sm, 16, cm.WSC_PAPER,
+                                       p.mbkr_plan, 8)
+    assert e2e_best <= p.t_e2e * (1 + 1e-6)
+
+
+def test_uniform_partition_sums():
+    for s, m in [(100, 7), (4096, 16), (65536, 3)]:
+        u = lbcp.uniform_partition(s, m)
+        assert sum(u) == s and len(u) == m and max(u) - min(u) <= 1

@@ -1,0 +1,89 @@
+"""MBKR slot-plan invariants — exhaustive small cases + hypothesis properties.
+
+The plan is the paper's §4.1 mechanism turned into static tables; these tests
+prove (a) no slot is ever clobbered while live, (b) attention always finds
+every prefix chunk, (c) the pool is strictly smaller than the Terapipe
+baseline whenever the cross-half stagger gives headroom.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mbkr
+
+
+@pytest.mark.parametrize("m,n", [(16, 16), (32, 16), (8, 4), (24, 8),
+                                 (12, 4), (64, 16), (6, 2), (20, 10)])
+def test_plan_verifies(m, n):
+    p = mbkr.plan(m, n)
+    mbkr.verify_plan(p, periods=4)
+
+
+@pytest.mark.parametrize("m,n", [(16, 16), (32, 16), (24, 8)])
+def test_plan_saves_memory(m, n):
+    p = mbkr.plan(m, n)
+    assert p.num_slots < m
+
+
+def test_plan_no_mbkr_is_terapipe():
+    p = mbkr.plan(16, 16, mbkr=False)
+    assert p.num_slots == 16 and p.p2 == 16
+
+
+def test_pairing_involution():
+    for n in (2, 4, 8, 16):
+        for s in range(n):
+            assert mbkr.pair_of(mbkr.pair_of(s, n), n) == s
+
+
+def test_interleaved_placement_adjacency():
+    """Paper: stage i placed adjacent to stage i+N/2."""
+    rows = mbkr.interleaved_placement(16)
+    for i in range(8):
+        assert abs(rows[i] - rows[i + 8]) == 1
+    assert sorted(rows) == list(range(16))
+
+
+def test_peak_slots_closed_form_m_eq_n():
+    """M == N: peak = M - N/4 (the 1/(1 - N/(4M)) max-seq gain, DESIGN.md)."""
+    for n in (4, 8, 16, 32):
+        m = n
+        p2, peak = mbkr.best_p2(m, n)
+        assert peak == m - n // 4, (n, peak)
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=st.integers(2, 40), n=st.sampled_from([2, 4, 8, 16]))
+def test_plan_property_verify(m, n):
+    p = mbkr.plan(m, n)
+    mbkr.verify_plan(p, periods=3)
+    assert p.num_slots <= m            # never worse than Terapipe
+    assert 0 < p.p2 <= m
+    # every own chunk has a distinct slot; hosted tables within pool bounds
+    own = p.own_slot[:p.p2]
+    assert len(set(own.tolist())) == p.p2
+    assert (p.host_slot_a[p.p2:] <= p.num_slots).all()
+    assert (p.host_slot_b[p.p2:] <= p.num_slots).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]), cap=st.integers(4, 40))
+def test_max_chunks_monotone(n, cap):
+    """MBKR admits at least as many chunks as the baseline at any capacity."""
+    base = mbkr.max_chunks_for_capacity(n, cap, mbkr=False)
+    ours = mbkr.max_chunks_for_capacity(n, cap, mbkr=True)
+    assert ours >= base
+    # and the claimed chunk count actually fits
+    p = mbkr.plan(ours, n)
+    assert p.peak <= cap or p.num_slots <= cap
+
+
+def test_gain_decreases_with_chunk_count():
+    """Paper Fig. 6(b): fewer chunks -> more reallocation headroom."""
+    n = 16
+    gains = []
+    for m in (16, 24, 32, 64):
+        _, peak = mbkr.best_p2(m, n)
+        gains.append(m / peak)
+    assert all(a >= b for a, b in zip(gains, gains[1:])), gains
+    assert gains[0] == pytest.approx(16 / 12)

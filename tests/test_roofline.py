@@ -1,0 +1,85 @@
+"""HLO graph analyzer calibration: known FLOPs/bytes/collective cases run in
+a subprocess with 8 fake devices (mesh collectives need > 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SNIPPET = r"""
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from repro.roofline.hlo_graph import analyze_text
+
+mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+sh = NamedSharding(mesh, P("data", None))
+rep = NamedSharding(mesh, P(None, None))
+A = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+
+# 1. sharded matmul: per-device flops = 2*1024^3/8
+g = analyze_text(jax.jit(lambda a, b: a @ b, in_shardings=(sh, rep))
+                 .lower(A, A).compile().as_text())
+assert abs(g.flops - 2 * 1024**3 / 8) < 1e4, g.flops
+
+# 2. scan trip scaling: 10 * 2*256^3
+def f(x):
+    def body(c, _):
+        return c @ c, None
+    return jax.lax.scan(body, x, None, length=10)[0]
+g2 = analyze_text(jax.jit(f).lower(jnp.ones((256, 256))).compile().as_text())
+assert abs(g2.flops - 10 * 2 * 256**3) / g2.flops < 0.01, g2.flops
+
+# 3. all-gather wire bytes: 4MB * 7/8
+g3 = analyze_text(jax.jit(lambda x: jax.lax.with_sharding_constraint(x * 2, rep),
+                          in_shardings=(sh,)).lower(A).compile().as_text())
+ag = g3.coll.get("all-gather", 0)
+assert abs(ag - 4 * 1024 * 1024 * 7 / 8) < 1e4, g3.coll
+
+# 4. psum -> all-reduce wire bytes: 2 * size * 7/8
+def h(x):
+    return jax.shard_map(lambda y: jax.lax.psum(y, "data"), mesh=mesh,
+                         in_specs=P("data", None), out_specs=P(None, None),
+                         axis_names={"data"})(x)
+g4 = analyze_text(jax.jit(h).lower(A).compile().as_text())
+ar = g4.coll.get("all-reduce", 0)
+want = 2 * (1024 * 1024 * 4 / 8) * 8 * 7 / 8  # out is full [1024,1024]? local psum output = [128*8...]
+# out shape replicated [1024,1024]? psum over shard_map: out [128,1024] per dev -> wire = 2*out*(7/8)
+assert ar > 0, g4.coll
+print("CALIBRATION OK")
+"""
+
+
+def test_hlo_graph_calibration():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", SNIPPET], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    assert "CALIBRATION OK" in r.stdout
+
+
+def test_model_flops_formulas():
+    from repro.configs.base import SHAPES, get_config
+    from repro.roofline.analysis import model_flops
+    cfg = get_config("qwen3-8b")
+    n = cfg.param_count()
+    assert model_flops(cfg, SHAPES["train_4k"]) == pytest.approx(
+        6 * n * 4096 * 256, rel=1e-9)
+    assert model_flops(cfg, SHAPES["prefill_32k"]) == pytest.approx(
+        2 * n * 32768 * 32, rel=1e-9)
+    moe = get_config("qwen2-moe-a2.7b")
+    assert moe.active_param_count() < moe.param_count() * 0.35
+
+
+def test_roofline_terms_math():
+    from repro.roofline.analysis import RooflineTerms
+    t = RooflineTerms(flops_dev=197e12, bytes_dev=819e9 / 2, coll_dev=0.0,
+                      coll_by_kind={}, chips=2, model_flops=2 * 197e12)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(0.5)
+    assert t.dominant == "compute"
+    assert t.useful_ratio == pytest.approx(1.0)
+    assert t.roofline_fraction == pytest.approx(1.0)
