@@ -1,0 +1,40 @@
+"""JAX API-drift shims so the repo runs on both current and older jax.
+
+- ``shard_map``: jax >= 0.6 exposes ``jax.shard_map(..., axis_names=...,
+  check_vma=...)``; older releases have ``jax.experimental.shard_map`` with
+  the complementary ``auto``/``check_rep`` spelling. One entry point maps
+  between them (axis_names -> auto = mesh axes minus manual; check_vma ->
+  check_rep).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[frozenset] = None,
+              check_vma: Optional[bool] = None):
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    mapped = _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+    def with_mesh_ctx(*args):
+        # old jax resolves PartitionSpec-based with_sharding_constraint
+        # inside the body against the ambient mesh context
+        with mesh:
+            return mapped(*args)
+    return with_mesh_ctx

@@ -10,6 +10,8 @@ import math
 from dataclasses import dataclass, replace
 from typing import List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import ModelConfig
 
 
@@ -135,6 +137,46 @@ def spill_time(sm: StageModel, c: int, hw: HardwareProfile, hops: int = 1,
     return kv_chunk_bytes(sm, c) * compress * hops / (hw.link_bw * hw.link_eff)
 
 
+def chunk_cost_arrays(
+    sm: StageModel,
+    chunks: Sequence[int],
+    hw: HardwareProfile,
+    *,
+    mbkr_plan: Optional["object"] = None,  # core.mbkr.MBKRPlan
+    compress: float = 1.0,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Per-chunk cost vectors shared by the analytic evaluator, the event
+    simulator, and the chunk-level scheduler.
+
+    Returns ``(dur, comm, kvb, spill_t, fetch_t)``, each ``[M]``:
+      dur     compute seconds of chunk i on one stage (prefix-aware)
+      comm    stage-boundary activation transfer seconds
+      kvb     stage-KV bytes written by chunk i
+      spill_t MBKR debtor spill seconds (chunks with index >= p2)
+      fetch_t MBKR remote-KV re-read seconds (prefix chunks hosted at the pair)
+    """
+    m = len(chunks)
+    dur = np.zeros(m)
+    comm = np.zeros(m)
+    kvb = np.zeros(m)
+    spill_t = np.zeros(m)
+    fetch_t = np.zeros(m)
+    p2 = m if mbkr_plan is None else mbkr_plan.p2
+    link = hw.link_bw * hw.link_eff
+    prefix = 0
+    for i, c in enumerate(chunks):
+        dur[i] = chunk_compute_time(sm, c, prefix, hw)
+        comm[i] = boundary_comm_time(sm.cfg, c, hw)
+        kvb[i] = kv_chunk_bytes(sm, c)
+        prefix += c
+    for i, c in enumerate(chunks):
+        if i >= p2:
+            spill_t[i] = spill_time(sm, c, hw, compress=compress)
+        if i > p2:
+            fetch_t[i] = kvb[p2:i].sum() * compress / link
+    return dur, comm, kvb, spill_t, fetch_t
+
+
 # ------------------------------------------------- analytic pipeline schedule
 
 @dataclass
@@ -165,27 +207,14 @@ def evaluate_prefill(
     """
     m = len(chunks)
     cfg = sm.cfg
-    prefix = [0] * m
-    for i in range(1, m):
-        prefix[i] = prefix[i - 1] + chunks[i - 1]
     p2 = m if mbkr_plan is None else mbkr_plan.p2
     n2 = num_stages // 2
 
     # per (stage, chunk) compute times + mbkr extras (same across stages for a
     # uniform stage slice; serve time appears at the paired stage's schedule)
-    t = [[0.0] * m for _ in range(num_stages)]
-    spill_t = [0.0] * m
-    fetch_t = [0.0] * m
-    for i, c in enumerate(chunks):
-        base = chunk_compute_time(sm, c, prefix[i], hw)
-        if i >= p2:
-            spill_t[i] = spill_time(sm, c, hw, compress=compress)
-        n_remote = max(0, min(i, m) - p2) if p2 < m else 0
-        if n_remote > 0:
-            remote_bytes = sum(kv_chunk_bytes(sm, chunks[j]) for j in range(p2, i))
-            fetch_t[i] = remote_bytes * compress / (hw.link_bw * hw.link_eff)
-        for s in range(num_stages):
-            t[s][i] = base
+    dur, _, _, spill_t, fetch_t = chunk_cost_arrays(
+        chunks=chunks, sm=sm, hw=hw, mbkr_plan=mbkr_plan, compress=compress)
+    t = [[float(dur[i]) for i in range(m)] for _ in range(num_stages)]
     realloc = 0.0
 
     finish = [[0.0] * m for _ in range(num_stages)]

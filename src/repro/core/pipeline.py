@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import mbkr
 from repro.models import layers as L
@@ -842,7 +843,7 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     tok_spec = P(pod_axes if pod_axes else None, None)
     out_spec = P(pod_axes if pod_axes else None, None)
 
-    x_last = jax.shard_map(
+    x_last = compat.shard_map(
         body, mesh=topo.mesh,
         in_specs=(sl_specs, _manual_only(specs["embed"], manual),
                   _manual_only(specs["final_norm"], manual),
@@ -916,7 +917,7 @@ def _gpipe_prefill(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     specs = stage_param_specs(cfg, plan, topo)
     sl_specs = _manual_tree(specs["stage_layers"], manual)
     tok_spec = P(pod_axes if pod_axes else None, None)
-    x_last = jax.shard_map(
+    x_last = compat.shard_map(
         body, mesh=topo.mesh,
         in_specs=(sl_specs, _manual_only(specs["embed"], manual),
                   _manual_only(specs["final_norm"], manual), tok_spec),

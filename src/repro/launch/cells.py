@@ -124,7 +124,8 @@ def _kv_split_topo(cfg, topo: Topology) -> Optional[Topology]:
     where GQA attention shards by kv head / query group with no collectives.
     Returns None when head counts don't divide (falls back to "auto")."""
     import numpy as np
-    from jax.sharding import AxisType, Mesh
+    from jax.sharding import Mesh
+    from repro.launch.mesh import _axis_kw
     factors = pp.kv_split_axes(cfg, topo.mesh.shape[topo.tp_axis]
                                if not isinstance(topo.tp_axis, tuple)
                                else topo.tp_size)
@@ -134,7 +135,7 @@ def _kv_split_topo(cfg, topo: Topology) -> Optional[Topology]:
     devs = np.asarray(topo.mesh.devices)
     view = Mesh(devs.reshape(devs.shape[:-1] + (kv_ax, qg_ax)),
                 topo.mesh.axis_names[:-1] + ("kv", "qg"),
-                axis_types=(AxisType.Auto,) * (len(topo.mesh.axis_names) + 1))
+                **_axis_kw(len(topo.mesh.axis_names) + 1))
     return Topology(mesh=view, batch_axes=topo.batch_axes,
                     tp_axis=("kv", "qg"), stage_axis=topo.stage_axis)
 

@@ -16,15 +16,23 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
 
 from repro.models.topology import Topology
+
+try:  # jax >= 0.5: explicit axis types
+    from jax.sharding import AxisType
+except ImportError:  # older jax: meshes are Auto-typed implicitly
+    AxisType = None
+
+
+def _axis_kw(n: int) -> dict:
+    return {"axis_types": (AxisType.Auto,) * n} if AxisType is not None else {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kw(len(axes)))
 
 
 def make_topology(*, multi_pod: bool = False) -> Topology:
@@ -36,6 +44,5 @@ def make_topology(*, multi_pod: bool = False) -> Topology:
 
 def make_test_topology(num_stages: int = 4, tp: int = 2) -> Topology:
     """Small mesh over however many (fake) devices the process has."""
-    mesh = jax.make_mesh((num_stages, tp), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((num_stages, tp), ("data", "model"), **_axis_kw(2))
     return Topology(mesh=mesh)

@@ -7,10 +7,21 @@ scale.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --arch qwen3-8b --requests 12 --executor jax
+
+Continuous chunk-level scheduling (cross-request pipelining, repro.sched):
+
+  PYTHONPATH=src python -m repro.launch.serve --executor sim \
+      --scheduler continuous --policy edf --arrival-rate 4 --slo-ms 2000 \
+      --trace-out artifacts/sched_trace.json
+
+--arrival-rate R > 0 draws open-loop Poisson arrivals at R req/s (0 =
+closed-loop burst at t=0); --policy picks the admission order (fcfs | sjf |
+edf); --slo-ms stamps deadlines so EDF and the SLO-attainment metric bite.
 """
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import numpy as np
@@ -20,8 +31,8 @@ from repro.core import costmodel as cm
 from repro.core import pipeline as pp
 from repro.models.api import build_model
 from repro.models.topology import Topology
-from repro.runtime.engine import (EngineConfig, JaxExecutor, PrefillEngine,
-                                  Request, SimExecutor)
+from repro.runtime.engine import (ContinuousEngine, EngineConfig, JaxExecutor,
+                                  PrefillEngine, Request, SimExecutor)
 
 
 def main(argv=None) -> int:
@@ -34,6 +45,18 @@ def main(argv=None) -> int:
     ap.add_argument("--num-chunks", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scheduler", default="batch",
+                    choices=("batch", "continuous"),
+                    help="batch = batch-synchronous PrefillEngine; "
+                         "continuous = cross-request chunk pipelining")
+    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "sjf", "edf"),
+                    help="continuous-mode admission policy")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrivals (req/s); 0 = closed loop")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request SLO (deadline = arrival + slo)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-format JSON scheduler trace here")
     args = ap.parse_args(argv)
 
     if args.executor == "sim":
@@ -62,20 +85,50 @@ def main(argv=None) -> int:
                           buckets=(args.seq,), partition="uniform")
         executor = JaxExecutor(cfg, staged, topo, run)
 
-    eng = PrefillEngine(ec, executor)
+    slo = args.slo_ms / 1e3 if args.slo_ms else None
+    if args.scheduler == "continuous":
+        eng = ContinuousEngine(ec, executor, policy=args.policy, slo=slo,
+                               trace=args.trace_out is not None)
+    else:
+        eng = PrefillEngine(ec, executor)
+
+    from repro.sched import poisson_arrivals
+    if args.scheduler == "batch" and args.arrival_rate > 0:
+        # the batch-synchronous engine admits everything at clock 0 and its
+        # E2E metric is finish - arrival: staggered arrivals would produce
+        # negative latencies there, so open-loop arrivals are continuous-only
+        print("note: --arrival-rate requires --scheduler continuous; "
+              "running the batch engine as a closed loop (arrivals at t=0)")
+        args.arrival_rate = 0.0
+    arrivals = poisson_arrivals(args.arrival_rate, args.requests,
+                                seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for i in range(args.requests):
         toks = rng.integers(0, ec.model.vocab_size, size=args.seq).astype(np.int32)
-        eng.submit(Request(rid=i, arrival=0.0, seq_len=args.seq,
+        eng.submit(Request(rid=i, arrival=float(arrivals[i]), seq_len=args.seq,
                            tokens=toks if args.executor == "jax" else None))
     t0 = time.time()
     eng.run_until_drained()
     wall = time.time() - t0
     m = eng.metrics()
-    print(f"completed {m['completed']} requests in {wall:.2f}s wall | "
-          f"engine clock {eng.clock:.3f}s | avg E2E {m['avg_e2e']:.3f}s | "
-          f"p99 {m['p99_e2e']:.3f}s | {m['throughput']:.3f} req/s | "
-          f"stages {m['num_stages']}")
+    if args.scheduler == "continuous":
+        slo_txt = (f" | SLO {m['slo_met']}/{m['slo_total']}"
+                   if m["slo_total"] else "")
+        print(f"[{args.policy}] completed {m['completed']} "
+              f"(rejected {m['rejected']}) in {wall:.2f}s wall | "
+              f"sched clock {m['makespan']:.3f}s | "
+              f"avg TTFT {m['avg_ttft']:.3f}s | p99 {m['p99_ttft']:.3f}s | "
+              f"avg queue {m['avg_queue_wait']:.3f}s | "
+              f"{m['throughput']:.3f} req/s | "
+              f"bubble {m['bubble_frac']*100:.1f}%{slo_txt}")
+        if args.trace_out:
+            path = eng.trace.export(args.trace_out)
+            print(f"trace -> {path}")
+    else:
+        print(f"completed {m['completed']} requests in {wall:.2f}s wall | "
+              f"engine clock {eng.clock:.3f}s | avg E2E {m['avg_e2e']:.3f}s | "
+              f"p99 {m['p99_e2e']:.3f}s | {m['throughput']:.3f} req/s | "
+              f"stages {m['num_stages']}")
     if args.executor == "jax":
         done = sorted(eng.done, key=lambda r: r.rid)[:3]
         for r in done:

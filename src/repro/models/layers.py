@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.topology import Topology
 
 DEFAULT_BLOCK_K = 1024
@@ -289,7 +290,7 @@ def embed_lookup(table: jax.Array, tokens: jax.Array, *, topo: Optional[Topology
         vec = jnp.where(ok[..., None], vec, 0)
         return jax.lax.psum(vec, topo.tp_axis)
 
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=topo.mesh,
         in_specs=(P(topo.tp_axis, None), topo.batch_spec(None)),
         out_specs=topo.batch_spec(None, None),

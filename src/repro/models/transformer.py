@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models.topology import Topology
@@ -278,7 +279,7 @@ def decode_attn_update(cfg, q, k_new, v_new, ck, cv, pos, *, topo,
     qspec = P(bt, None, None, None)
     cspec = P(bt, seq_axes, None, None)
     kvnew = P(bt, None, None, None)
-    return jax.shard_map(
+    return compat.shard_map(
         local, mesh=topo.mesh,
         in_specs=(qspec, kvnew, kvnew, cspec, cspec, P(bt)),
         out_specs=(qspec, cspec, cspec),

@@ -19,6 +19,13 @@ Responsibilities:
   treated as failed (same re-mesh path).
 - CHECKPOINT/RESTART: the full engine state (queue, watermarks, plans, clock,
   EWMA) serializes through ``runtime.checkpoint`` next to the model params.
+
+Two engines share the executors:
+- ``PrefillEngine``: BATCH-SYNCHRONOUS — one bucket-batch runs to completion
+  before the next forms; every request pays the pipeline fill/drain bubble.
+- ``ContinuousEngine``: drives the executor through the chunk-level scheduler
+  (``repro.sched``) for cross-request pipelining — bubble-free across request
+  boundaries, policy-ordered (FCFS/SJF/EDF) KV-lease-gated admission.
 """
 from __future__ import annotations
 
@@ -44,6 +51,14 @@ class Request:
     finish_time: float = math.inf
     replays: int = 0
     result: Any = None
+    deadline: float = math.inf     # absolute SLO deadline (continuous mode)
+
+
+def bucket_of(buckets: Sequence[int], seq_len: int) -> int:
+    for b in buckets:
+        if seq_len <= b:
+            return b
+    return buckets[-1]
 
 
 @dataclass(frozen=True)
@@ -77,6 +92,14 @@ class SimExecutor:
     Fault/straggler injection for engine tests:
       fail_at[(batch_counter)] = stage    -> raise StageFailure mid-batch
       slow = {stage: factor}              -> inflate that stage's tick times
+
+    BATCH-SYNCHRONOUS semantics: requests in a batch run to completion one
+    after another, each paying the full pipeline fill/drain (this is the
+    baseline that ``ContinuousEngine`` + ``sched.ChunkScheduler`` eliminate).
+    Straggler factors scale only the affected stage's task durations; the
+    per-request makespan is recomputed from per-stage times by the shared
+    list-scheduling core, so an off-critical-path slow stage no longer
+    inflates the whole makespan.
     """
 
     def __init__(self, cfg: ModelConfig, hw: cm.HardwareProfile,
@@ -87,20 +110,34 @@ class SimExecutor:
         self.slow = slow or {}
         self.batch_counter = 0
 
+    def stage_scale(self, num_stages: int) -> np.ndarray:
+        scale = np.ones(num_stages)
+        for s, f in self.slow.items():
+            if s < num_stages:
+                scale[s] = max(float(f), 1e-9)
+        return scale
+
+    def chunk_costs(self, chunks: Sequence[int], num_stages: int, tp: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(per-chunk task seconds, per-chunk boundary comm seconds)."""
+        sm = cm.StageModel.build(self.cfg, num_stages, tp)
+        dur, comm, _, _, _ = cm.chunk_cost_arrays(sm, chunks, self.hw)
+        return dur, comm
+
     def run(self, requests: Sequence[Request], chunks: Sequence[int],
             num_stages: int, tp: int) -> Tuple[float, np.ndarray]:
         """Returns (makespan seconds, per-stage avg tick latency [N])."""
+        from repro.sim.engine import schedule_request
         self.batch_counter += 1
         if self.batch_counter in self.fail_at:
             raise StageFailure(self.fail_at[self.batch_counter])
-        sm = cm.StageModel.build(self.cfg, num_stages, tp)
-        res = cm.evaluate_prefill(chunks, sm, num_stages, self.hw)
-        lat = np.full(num_stages, res.latency / max(len(chunks), 1))
-        for s, f in self.slow.items():
-            if s < num_stages:
-                lat[s] *= f
-        makespan = res.latency * max(len(requests), 1) * float(
-            max(1.0, max(self.slow.values(), default=1.0)))
+        dur, comm, = self.chunk_costs(chunks, num_stages, tp)
+        scale = self.stage_scale(num_stages)
+        finish = schedule_request(dur, comm, num_stages, np.zeros(num_stages),
+                                  stage_scale=scale)
+        lat_req = float(finish[-1][-1])
+        lat = np.full(num_stages, dur.mean()) * scale
+        makespan = lat_req * max(len(requests), 1)
         return makespan, lat
 
 
@@ -161,10 +198,7 @@ class PrefillEngine:
         self.queue.append(req)
 
     def _bucket(self, seq_len: int) -> int:
-        for b in self.ec.buckets:
-            if seq_len <= b:
-                return b
-        return self.ec.buckets[-1]
+        return bucket_of(self.ec.buckets, seq_len)
 
     def _plan_for(self, bucket: int) -> List[int]:
         key = (bucket, self.num_stages)
@@ -181,12 +215,20 @@ class PrefillEngine:
 
     # ---------------------------------------------------------- main loop
     def step(self) -> bool:
-        """Admit and run ONE batch. Returns False when the queue is empty."""
+        """Admit and run ONE batch. Returns False when the queue is empty.
+
+        The batch's bucket is the one holding the OLDEST eligible request
+        (by arrival, then rid) across all buckets — not the first queue
+        entry's bucket, which would let one hot bucket starve the others
+        (head-of-line blocking). Within the bucket, oldest requests first.
+        """
         pending = [r for r in self.queue if r.state == "queued"]
         if not pending:
             return False
-        bucket = pending[0].bucket
-        batch = [r for r in pending if r.bucket == bucket][: self.ec.max_batch]
+        oldest = min(pending, key=lambda r: (r.arrival, r.rid))
+        bucket = oldest.bucket
+        batch = sorted((r for r in pending if r.bucket == bucket),
+                       key=lambda r: (r.arrival, r.rid))[: self.ec.max_batch]
         chunks = self._plan_for(bucket)
         for r in batch:
             r.state = "running"
@@ -257,6 +299,19 @@ class PrefillEngine:
 
     # ------------------------------------------------------- checkpointing
     def state_dict(self) -> Dict[str, Any]:
+        """JSON-serializable engine state for ``runtime.checkpoint``.
+
+        ROUND-TRIPS: clock, num_stages, failed_stages, ewma, replans,
+        remeshes; per QUEUED request (rid, arrival, seq_len, state, replays);
+        per DONE request (rid, arrival, seq_len, finish_time).
+
+        INTENTIONALLY DROPPED: ``Request.tokens`` and ``Request.result``
+        (host arrays belong to the data plane — the caller re-submits tokens
+        after restore), a queued request's ``finish_time`` (always inf until
+        completion), and ``bucket`` (recomputed from seq_len on load). A
+        running request is restored as queued: execution is not resumable
+        mid-batch, so it replays from its admission watermark.
+        """
         return {
             "clock": self.clock,
             "num_stages": self.num_stages,
@@ -284,3 +339,139 @@ class PrefillEngine:
         self.done = [Request(rid, arr, sl, state="done", finish_time=ft)
                      for rid, arr, sl, ft in d["done"]]
         self._plans.clear()
+
+
+# -------------------------------------------------------- continuous engine
+
+class ContinuousEngine:
+    """Continuous-serving engine: drives the executor THROUGH the chunk-level
+    scheduler (``sched.ChunkScheduler``) so the pipeline never drains between
+    requests — the next request's chunk 0 enters stage 0 the moment the
+    previous request's tail chunk vacates it.
+
+    - ``SimExecutor``: makespans come from the scheduler's true overlapped
+      schedule (the shared ``sim.engine.schedule_request`` list-scheduling
+      core) — NOT the batch-synchronous per-request serialization; the
+      executor's per-stage straggler factors fold in via ``stage_scale``.
+    - ``JaxExecutor``: requests execute as chunk-interleaved token batches in
+      scheduler admission order — consecutive same-bucket admissions are
+      stacked (up to ``max_batch``) so every pipeline tick carries one chunk
+      from each request in the wave, and a newly arrived request joins the
+      next wave instead of waiting for the whole queue to drain.
+
+    Admission is policy-ordered (fcfs | sjf | edf) and gated by the
+    ``KVLeaseManager``, whose per-stage budget is the MBKR slot pool
+    provisioned for ``inflight`` concurrent requests (clamped to physical KV
+    capacity). ``slo`` (seconds), when set, stamps each submitted request's
+    deadline = arrival + slo; EDF orders by it and metrics report attainment.
+    """
+
+    def __init__(self, ec: EngineConfig, executor, *, policy: str = "fcfs",
+                 slo: Optional[float] = None, inflight: int = 2,
+                 trace: bool = False):
+        from repro.sched import (ChunkPlan, ChunkScheduler, KVLeaseManager,
+                                 TraceRecorder, slot_budget_bytes)
+        self.ec = ec
+        self.executor = executor
+        self.slo = slo
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self._consumed = 0        # scheduler.admitted prefix already drained
+        self._plan_cls = ChunkPlan
+        self._plans: Dict[int, Any] = {}
+        self._sm = cm.StageModel.build(ec.model, ec.num_stages, ec.tp)
+
+        # MBKR slot budget for `inflight` concurrent requests, <= capacity
+        mplan = mbkr.plan(ec.num_chunks, ec.num_stages, mbkr=ec.mbkr)
+        cmax = -(-max(ec.buckets) // ec.num_chunks)
+        weights = ec.model.param_count() * 2 / (ec.num_stages * max(ec.tp, 1))
+        capacity = max(ec.hw.hbm_cap - weights, 0.0) * max(ec.tp, 1)
+        budget = slot_budget_bytes(
+            max(inflight, 1) * mplan.num_slots,
+            max(cm.kv_chunk_bytes(self._sm, cmax), 1.0),
+            ec.num_stages, capacity=capacity if capacity > 0 else None)
+        self.lease = KVLeaseManager(ec.num_stages, budget)
+        self.trace = TraceRecorder(enabled=trace)
+        scale = (executor.stage_scale(ec.num_stages)
+                 if hasattr(executor, "stage_scale") else None)
+        self.scheduler = ChunkScheduler(
+            ec.num_stages, self._chunk_plan, policy=policy, lease=self.lease,
+            trace=self.trace, compress=ec.compress, stage_scale=scale)
+
+    # ---------------------------------------------------------- admission
+    def submit(self, req: Request) -> None:
+        req.bucket = bucket_of(self.ec.buckets, req.seq_len)
+        if self.slo is not None and not math.isfinite(req.deadline):
+            req.deadline = req.arrival + self.slo
+        self.queue.append(req)
+
+    def _chunk_plan(self, bucket: int):
+        """Per-bucket LBCP chunk plan + analytic cost vectors (cached).
+        For the jax executor the analytic costs order/gate admission only —
+        execution timing is real."""
+        if bucket not in self._plans:
+            ec = self.ec
+            if ec.partition == "lbcp":
+                pp = lbcp.plan_partition(
+                    ec.model, bucket, ec.num_chunks, ec.num_stages, ec.hw,
+                    tp=ec.tp, mbkr=ec.mbkr, compress=ec.compress,
+                    sa_iters=ec.sa_iters)
+                chunks, mplan = pp.chunks, pp.mbkr_plan
+            else:
+                chunks = lbcp.uniform_partition(bucket, ec.num_chunks)
+                mplan = (mbkr.plan(ec.num_chunks, ec.num_stages)
+                         if ec.mbkr and not ec.model.attn_free else None)
+            self._plans[bucket] = self._plan_cls.build(
+                bucket, chunks, self._sm, ec.hw, mbkr_plan=mplan,
+                compress=ec.compress)
+        return self._plans[bucket]
+
+    # ---------------------------------------------------------- main loop
+    def run_until_drained(self) -> None:
+        from repro.sched import SchedRequest
+        for r in self.queue:
+            if r.state != "queued":
+                continue
+            self.scheduler.submit(SchedRequest(
+                rid=r.rid, arrival=r.arrival, seq_len=r.seq_len,
+                bucket=r.bucket, deadline=r.deadline, payload=r))
+        # scheduler.admitted is cumulative across calls — only drain the new
+        # suffix so run_until_drained stays re-entrant (submit/drain cycles)
+        order = self.scheduler.run()[self._consumed:]
+        self._consumed += len(order)
+        for sr in order:
+            req: Request = sr.payload
+            req.state = "done"
+            req.finish_time = sr.finish_time
+            self.queue.remove(req)
+            self.done.append(req)
+        for sr in self.scheduler.requests:
+            if sr.state == "rejected" and sr.payload in self.queue:
+                sr.payload.state = "rejected"
+                self.queue.remove(sr.payload)
+        if not isinstance(self.executor, SimExecutor):
+            self._execute_real(order)
+
+    def _execute_real(self, order) -> None:
+        """Chunk-interleaved token batches: stack consecutive same-bucket
+        admissions up to max_batch and run each wave through the executor."""
+        i = 0
+        while i < len(order):
+            bucket = order[i].bucket
+            wave = [order[i]]
+            i += 1
+            while (i < len(order) and order[i].bucket == bucket
+                   and len(wave) < self.ec.max_batch):
+                wave.append(order[i])
+                i += 1
+            chunks = list(self._chunk_plan(bucket).chunks)
+            self.executor.run([sr.payload for sr in wave], chunks,
+                              self.ec.num_stages, self.ec.tp)
+
+    # ----------------------------------------------------------- metrics
+    @property
+    def clock(self) -> float:
+        return self.scheduler.metrics.makespan
+
+    def metrics(self) -> Dict[str, float]:
+        return self.scheduler.summary()

@@ -1,0 +1,185 @@
+"""Shared KV-pool lease manager for cross-request chunk pipelining.
+
+With one request in flight, MBKR's static slot plan (``core.mbkr``) proves
+per-stage occupancy stays within ``num_slots`` chunk slots. Continuous
+scheduling admits the NEXT request's chunks into early stages while the
+previous request's KV still drains from late stages — and may mix buckets
+whose chunks have different byte sizes — so the slot-plan guarantee no longer
+comes for free. The lease manager restores it by accounting:
+
+- a LEASE per admitted request: the full timestamped alloc/free event stream
+  the request will generate at every stage (local chunk KV below p2, hosted
+  spill bytes at the MBKR pair stage from p2 on), known analytically at
+  admission time because stages are in-order FIFOs;
+- a per-stage byte BUDGET (the MBKR slot pool: ``num_slots`` x the largest
+  admitted chunk's KV bytes, never more than the stage's physical capacity);
+- an admission check: a request is admitted only if merging its lease into
+  the committed timeline keeps every stage's peak occupancy <= budget — the
+  scheduler defers (or ultimately rejects) the request otherwise.
+
+The high-water mark per stage is tracked so tests can assert the invariant
+``hwm <= budget`` under arbitrary concurrent workloads.
+"""
+from __future__ import annotations
+
+import math
+from bisect import insort
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class LeaseEvent:
+    stage: int
+    time: float
+    nbytes: float        # positive = alloc, negative = free
+
+
+@dataclass
+class Lease:
+    """One admitted request's reservation: its full event stream plus the
+    time at which the last byte is released (all stages drained)."""
+    rid: int
+    events: Tuple[LeaseEvent, ...]
+    release_time: float
+
+
+def request_lease_events(
+    rid: int,
+    finish: np.ndarray,            # [M][N] chunk completion times
+    kvb: Sequence[float],          # [M] chunk KV bytes
+    p2: int,
+    pair: Sequence[int],           # stage -> MBKR pair stage
+    compress: float = 1.0,
+) -> Lease:
+    """Build the lease for one scheduled request from its chunk finish times.
+
+    Chunk i's KV materializes at the stage when the chunk completes there
+    (locally for i < p2, at the pair stage scaled by ``compress`` for spilled
+    chunks); everything a request holds at stage s frees when its tail chunk
+    clears s — the same lifecycle the event simulator's memory tracker uses.
+    """
+    m, n = finish.shape
+    ev: List[LeaseEvent] = []
+    local = sum(kvb[:p2])
+    hosted = sum(kvb[p2:]) * compress
+    for s in range(n):
+        for i in range(m):
+            if i < p2:
+                ev.append(LeaseEvent(s, float(finish[i][s]), float(kvb[i])))
+            else:
+                ev.append(LeaseEvent(pair[s], float(finish[i][s]),
+                                     float(kvb[i]) * compress))
+        t_drain = float(finish[m - 1][s])
+        if local:
+            ev.append(LeaseEvent(s, t_drain, -float(local)))
+        if hosted:
+            ev.append(LeaseEvent(pair[s], t_drain, -float(hosted)))
+    release = float(finish[m - 1].max())
+    return Lease(rid, tuple(ev), release)
+
+
+class KVLeaseManager:
+    """Per-stage KV occupancy accounting with admission control.
+
+    ``budget[s]`` is in bytes (derive it from an MBKR plan with
+    ``slot_budget_bytes``). Frees sort before allocs at equal timestamps —
+    the slot plan reuses a slot at the very tick its tenant dies.
+    """
+
+    def __init__(self, num_stages: int, budget: Sequence[float]):
+        assert len(budget) == num_stages
+        self.num_stages = num_stages
+        self.budget = np.asarray(budget, float)
+        # committed timeline per stage: sorted (time, delta) with frees first
+        self._timeline: List[List[Tuple[float, float]]] = [
+            [] for _ in range(num_stages)]
+        self.leases: Dict[int, Lease] = {}
+        self.hwm = np.zeros(num_stages)
+        self._refused_rids: set = set()
+
+    @property
+    def refusals(self) -> int:
+        """DISTINCT requests ever refused (a deferred request retried many
+        times counts once)."""
+        return len(self._refused_rids)
+
+    # ------------------------------------------------------------- queries
+    def _peak_with(self, stage: int, extra: List[Tuple[float, float]]) -> float:
+        ev = sorted(self._timeline[stage] + extra)
+        cur = peak = 0.0
+        for _, d in ev:
+            cur += d
+            peak = max(peak, cur)
+        return peak
+
+    def _fit_peaks(self, lease: Lease) -> Optional[Dict[int, float]]:
+        """Per-touched-stage peaks with the lease merged in, or None if any
+        stage would exceed its budget."""
+        per_stage: Dict[int, List[Tuple[float, float]]] = {}
+        for e in lease.events:
+            per_stage.setdefault(e.stage, []).append((e.time, e.nbytes))
+        peaks: Dict[int, float] = {}
+        for s, extra in per_stage.items():
+            pk = self._peak_with(s, extra)
+            if pk > self.budget[s] * (1 + 1e-9):
+                return None
+            peaks[s] = pk
+        return peaks
+
+    def would_fit(self, lease: Lease) -> bool:
+        return self._fit_peaks(lease) is not None
+
+    # ------------------------------------------------------------ mutation
+    def admit(self, lease: Lease) -> bool:
+        """Commit the lease if it fits every stage's budget; else refuse."""
+        peaks = self._fit_peaks(lease)
+        if peaks is None:
+            self._refused_rids.add(lease.rid)
+            return False
+        for e in lease.events:
+            insort(self._timeline[e.stage], (e.time, e.nbytes))
+        for s, pk in peaks.items():   # only touched stages can move the hwm
+            self.hwm[s] = max(self.hwm[s], pk)
+        self.leases[lease.rid] = lease
+        return True
+
+    def next_release(self, after: float) -> float:
+        """Earliest committed lease release strictly after ``after`` — the
+        next instant a deferred admission is worth retrying."""
+        times = [l.release_time for l in self.leases.values()
+                 if l.release_time > after]
+        return min(times) if times else math.inf
+
+    def prune(self, before: float) -> None:
+        """Drop fully-released leases that ended before ``before`` (their
+        alloc/free pairs cancel; keeps timelines from growing unboundedly)."""
+        from collections import Counter
+        dead = [rid for rid, l in self.leases.items()
+                if l.release_time < before]
+        if not dead:
+            return
+        drop = Counter((e.stage, e.time, e.nbytes)
+                       for rid in dead for e in self.leases[rid].events)
+        for s in range(self.num_stages):
+            keep = []
+            for t, d in self._timeline[s]:
+                if drop.get((s, t, d), 0) > 0:
+                    drop[(s, t, d)] -= 1
+                else:
+                    keep.append((t, d))
+            self._timeline[s] = keep
+        for rid in dead:
+            del self.leases[rid]
+
+
+def slot_budget_bytes(num_slots: int, chunk_bytes: float, num_stages: int,
+                      capacity: Optional[float] = None) -> np.ndarray:
+    """Per-stage byte budget for the MBKR slot pool: ``num_slots`` slots sized
+    for the largest chunk, clamped to the physical KV capacity if given."""
+    b = num_slots * chunk_bytes
+    if capacity is not None:
+        b = min(b, capacity)
+    return np.full(num_stages, float(b))

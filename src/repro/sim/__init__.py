@@ -1,1 +1,2 @@
-from repro.sim.engine import SimConfig, SimResult, simulate, max_seq_len
+from repro.sim.engine import (SimConfig, SimResult, max_seq_len,
+                              schedule_request, simulate)

@@ -96,6 +96,60 @@ class _MemTrack:
         return out
 
 
+# ---------------------------------------------------------- list scheduling
+
+def schedule_request(
+    task_cost: Sequence[float],
+    comm: Sequence[float],
+    num_stages: int,
+    stage_free: np.ndarray,
+    *,
+    release: float = 0.0,
+    stage_scale: Optional[Sequence[float]] = None,
+    extra_of=None,
+    on_task=None,
+) -> np.ndarray:
+    """Deterministic list-scheduling core: append ONE request's in-order chunk
+    tasks to free-running per-stage FIFOs.
+
+    Chunk i at stage s starts at max(stage s free, chunk i done at stage s-1
+    plus the boundary transfer, chunk i-1 done at stage s, and ``release`` for
+    the head task (0, 0) — the request's tokens are not available earlier).
+
+    ``stage_free`` is MUTATED: calling this back-to-back for a stream of
+    requests yields the continuously-pipelined (bubble-free across request
+    boundaries) schedule; this is the shared core under the event-driven
+    simulator branch, ``SimExecutor``, and ``sched.ChunkScheduler``.
+
+    Optional hooks: ``stage_scale[s]`` multiplies stage s's task durations
+    (straggler modeling); ``extra_of(s, t0)`` returns extra busy seconds due
+    before the task (MBKR creditor serve obligations); ``on_task(i, s, t0,
+    tf)`` observes each scheduled task (memory/traffic accounting, tracing).
+
+    Returns ``finish[M][N]`` task completion times.
+    """
+    m = len(task_cost)
+    finish = np.zeros((m, num_stages))
+    for i in range(m):
+        for s in range(num_stages):
+            ready = release if (i == 0 and s == 0) else 0.0
+            if s:
+                ready = max(ready, finish[i][s - 1] + comm[i])
+            if i:
+                ready = max(ready, finish[i - 1][s])
+            t0 = max(ready, float(stage_free[s]))
+            extra = extra_of(s, t0) if extra_of is not None else 0.0
+            d = float(task_cost[i]) + extra
+            if stage_scale is not None:
+                d *= float(stage_scale[s])
+            tf = t0 + d
+            finish[i][s] = tf
+            stage_free[s] = tf
+            if on_task is not None:
+                on_task(i, s, t0, tf)
+    return finish
+
+
 # ------------------------------------------------------------------ engine
 
 def _kv_capacity(cfg: ModelConfig, hw: cm.HardwareProfile, num_stages: int,
@@ -169,20 +223,10 @@ def _sim_chunked(sc: SimConfig, sm: cm.StageModel, cap: float) -> SimResult:
         chunks = pp.chunks
     else:
         chunks = lbcp.uniform_partition(s_len, m)
-    prefix = np.concatenate([[0], np.cumsum(chunks)[:-1]])
-
-    # ---- per-chunk costs
-    dur = np.array([cm.chunk_compute_time(sm, c, int(prefix[i]), hw)
-                    for i, c in enumerate(chunks)])
-    comm = np.array([cm.boundary_comm_time(cfg, c, hw) for c in chunks])
-    kvb = np.array([cm.kv_chunk_bytes(sm, c) for c in chunks])
-    spill_t = np.zeros(m)
-    fetch_t = np.zeros(m)
-    for i in range(m):
-        if i >= p2:
-            spill_t[i] = kvb[i] * sc.compress / (hw.link_bw * hw.link_eff)
-        if i > p2:
-            fetch_t[i] = kvb[p2:i].sum() * sc.compress / (hw.link_bw * hw.link_eff)
+    # ---- per-chunk costs (shared vectors; p2 == m when MBKR is off)
+    dur, comm, kvb, spill_t, fetch_t = cm.chunk_cost_arrays(
+        sm, chunks, hw, mbkr_plan=plan if use_mbkr else None,
+        compress=sc.compress)
 
     mem = _MemTrack(n)
     link_bytes = 0.0
@@ -226,43 +270,40 @@ def _sim_chunked(sc: SimConfig, sm: cm.StageModel, cap: float) -> SimResult:
     else:
         stage_free = np.zeros(n)
         serve_due = [[] for _ in range(n)]  # (time, extra busy) on creditor
+        task_cost = dur + fetch_t + spill_t
+        acct = {"link": 0.0}
+
+        def extra_of(s: int, t0: float) -> float:
+            # creditor serve obligations accrued before this task
+            extra = 0.0
+            due = serve_due[s]
+            while due and due[0][0] <= t0:
+                extra += due.pop(0)[1]
+            return extra
+
+        def on_task(i: int, s: int, t0: float, tf: float) -> None:
+            # memory: local store below p2, else spill to pair
+            # (creditor memory is RESERVED at spill initiation)
+            if i < p2:
+                mem.alloc(s, tf, kvb[i])
+            else:
+                mem.alloc(pair[s], tf, kvb[i] * sc.compress)
+                acct["link"] += kvb[i] * sc.compress
+                insort(serve_due[pair[s]], (tf, spill_t[i] * 0.5))
+            if fetch_t[i] > 0:
+                acct["link"] += kvb[p2:i].sum() * sc.compress
+                insort(serve_due[pair[s]], (t0, fetch_t[i] * 0.5))
+
         for r in range(b):
-            for i in range(m):
-                for s in range(n):
-                    ready = 0.0
-                    if s:
-                        ready = finish[r][i][s - 1] + comm[i]
-                    if i:
-                        ready = max(ready, finish[r][i - 1][s])
-                    elif r:
-                        ready = max(ready, finish[r - 1][m - 1][s])
-                    t0 = max(ready, stage_free[s])
-                    # creditor serve obligations accrued before this task
-                    extra = 0.0
-                    due = serve_due[s]
-                    while due and due[0][0] <= t0:
-                        extra += due.pop(0)[1]
-                    d = dur[i] + fetch_t[i] + spill_t[i] + extra
-                    tf = t0 + d
-                    finish[r][i][s] = tf
-                    stage_free[s] = tf
-                    # memory: local store below p2, else spill to pair
-                    # (creditor memory is RESERVED at spill initiation)
-                    if i < p2:
-                        mem.alloc(s, tf, kvb[i])
-                    else:
-                        mem.alloc(pair[s], tf, kvb[i] * sc.compress)
-                        link_bytes += kvb[i] * sc.compress
-                        insort(serve_due[pair[s]], (tf, spill_t[i] * 0.5))
-                    if fetch_t[i] > 0:
-                        link_bytes += kvb[p2:i].sum() * sc.compress
-                        insort(serve_due[pair[s]], (t0, fetch_t[i] * 0.5))
+            finish[r] = schedule_request(task_cost, comm, n, stage_free,
+                                         extra_of=extra_of, on_task=on_task)
             # request r's stage-KV frees once its LAST chunk clears stage s
             for s in range(n):
                 t_done = finish[r][m - 1][s]
                 mem.free(s, t_done, kvb[:p2].sum())
                 if p2 < m:
                     mem.free(pair[s], t_done, kvb[p2:].sum() * sc.compress)
+        link_bytes = acct["link"]
 
     peaks = mem.peaks()
     mk = float(finish[-1][-1][-1])

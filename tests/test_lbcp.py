@@ -5,6 +5,8 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip the
+#   module cleanly instead of erroring out the whole collection
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import get_config

@@ -7,6 +7,8 @@ baseline whenever the cross-half stagger gives headroom.
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; skip the
+#   module cleanly instead of erroring out the whole collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core import mbkr
