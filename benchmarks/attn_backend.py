@@ -1,0 +1,114 @@
+"""Attention-backend comparison: jnp reference vs pallas (interpret off-TPU).
+
+Times the two ``core.attention`` backends on the composite the pipeline hot
+loop actually runs per (layer, chunk): pool chunk_blocks (the stored-prefix
+scan) + the causal self block + finish. Off-TPU the pallas numbers are
+INTERPRET-mode (a correctness harness, expected slower than jnp on CPU —
+wall-clock wins need the Mosaic lowering on real TPU hardware); alongside
+wall time we report the analytic TPU-v5e roofline time for the same
+flops/bytes, which is backend-independent and is what the §Perf iterations
+reason with.
+
+Writes artifacts/bench/attn_backend.json. Usage:
+  PYTHONPATH=src python -m benchmarks.attn_backend [--iters 3] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import OUT_DIR, table
+from repro.core import attention as A
+from repro.roofline.analysis import HW_V5E
+
+# (b, c, kvh, g, d, n_pool_chunks): pipeline-shaped cases; --quick trims
+CASES = [
+    (1, 128, 2, 4, 64, 3),
+    (1, 256, 4, 4, 128, 3),
+    (2, 128, 8, 4, 128, 6),
+]
+
+
+def _composite(backend: A.AttentionBackend, qg, kpool, vpool, scale):
+    b, c, kvh, g, d = qg.shape
+    st = A.attn_init(b, c, kvh, g, d)
+
+    def body(carry, kv):
+        k, v = kv
+        return backend.chunk_block(qg, k, v, jnp.bool_(True), scale, carry), None
+
+    st, _ = jax.lax.scan(body, st, (kpool, vpool))
+    st = backend.self_block(qg, qg[:, :, :, 0], qg[:, :, :, 0], scale, st)
+    return A.attn_finish(st, jnp.float32)
+
+
+def _time(fn, *args, iters: int) -> float:
+    out = fn(*args)              # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(iters: int = 3, quick: bool = False) -> dict:
+    cases = CASES[:1] if quick else CASES
+    rows = []
+    for (b, c, kvh, g, d, npool) in cases:
+        ks = jax.random.split(jax.random.key(0), 3)
+        qg = jax.random.normal(ks[0], (b, c, kvh, g, d), jnp.float32)
+        kpool = jax.random.normal(ks[1], (npool, b, c, kvh, d), jnp.float32)
+        vpool = jax.random.normal(ks[2], (npool, b, c, kvh, d), jnp.float32)
+        scale = 1.0 / float(np.sqrt(d))
+        h = kvh * g
+        t_kv = (npool + 1) * c
+        flops = 4.0 * b * c * t_kv * h * d
+        bytes_ = 2.0 * (b * c * h * d * 2 + 2 * b * t_kv * kvh * d)  # bf16
+        tpu_s = max(flops / HW_V5E["peak_flops"], bytes_ / HW_V5E["hbm_bw"])
+
+        outs, times = {}, {}
+        for name in ("jnp", "pallas"):
+            be = A.get_backend(name)
+            fn = jax.jit(lambda q, kp, vp, be=be: _composite(be, q, kp, vp, scale))
+            times[name] = _time(fn, qg, kpool, vpool, iters=iters)
+            outs[name] = np.asarray(fn(qg, kpool, vpool))
+        parity = float(np.max(np.abs(outs["jnp"] - outs["pallas"])))
+        rows.append({
+            "shape": f"b{b} c{c} kv{kvh} g{g} d{d} pool{npool}",
+            "jnp_ms": round(times["jnp"] * 1e3, 2),
+            "pallas_interp_ms": round(times["pallas"] * 1e3, 2),
+            "parity_abs": f"{parity:.1e}",
+            "tpu_roofline_us": round(tpu_s * 1e6, 1),
+        })
+        assert parity < 1e-4, f"backend divergence: {parity}"
+
+    result = {
+        "device": str(jax.devices()[0].platform),
+        "note": ("pallas timings are interpret-mode off-TPU (correctness "
+                 "harness, not a speed claim); tpu_roofline_us is the "
+                 "analytic v5e bound for the composite"),
+        "iters": iters,
+        "rows": rows,
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, "attn_backend.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(table(rows, ["shape", "jnp_ms", "pallas_interp_ms", "parity_abs",
+                       "tpu_roofline_us"]))
+    print(f"-> {path}")
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    run(iters=a.iters, quick=a.quick)

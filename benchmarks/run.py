@@ -15,16 +15,18 @@ def main(argv=None) -> int:
                     help="smaller SA budgets / fewer probes")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig6a,fig6b,fig1c,"
-                         "lbcp_ablation,kernels,roofline,sched")
+                         "lbcp_ablation,kernels,attn_backend,roofline,sched")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import fig1c, fig6a, fig6b, kernels, lbcp_ablation
-    from benchmarks import roofline_report, sched_throughput
+    from benchmarks import attn_backend, fig1c, fig6a, fig6b, kernels
+    from benchmarks import lbcp_ablation, roofline_report, sched_throughput
 
     jobs = [
         ("sched", "Continuous chunk-level scheduling vs batch-synchronous",
          lambda: sched_throughput.main(quick=args.quick)),
+        ("attn_backend", "jnp vs pallas attention-backend comparison",
+         lambda: attn_backend.run(quick=args.quick)),
         ("fig6a", "Fig 6(a): E2E latency/throughput vs GPipe & Terapipe",
          fig6a.main),
         ("fig6b", "Fig 6(b): max sequence length vs Terapipe x #chunks",

@@ -11,13 +11,14 @@ import argparse
 import os
 import sys
 
-if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import compat
+
+compat.ensure_host_devices()
 
 import jax
 import jax.numpy as jnp
-
 from repro.configs.base import RunConfig, get_smoke_config, replace
 from repro.core import lbcp, mbkr, pipeline as pp
 from repro.core import costmodel as cm
@@ -30,11 +31,14 @@ def main():
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--chunks", type=int, default=8)
+    ap.add_argument("--attn-backend", default="jnp",
+                    choices=("jnp", "pallas"))
     args = ap.parse_args()
 
     cfg = replace(get_smoke_config(args.arch), dtype="float32")
     model = build_model(cfg)
-    topo = make_test_topology(num_stages=4, tp=2)
+    tp = compat.max_auto_tp(2)  # old jaxlib falls back to tp=1
+    topo = make_test_topology(num_stages=8 // tp, tp=tp)
     print(f"arch={args.arch} mesh={dict(topo.mesh.shape)} "
           f"stages={topo.num_stages} tp={topo.tp_size}")
 
@@ -55,10 +59,11 @@ def main():
     params = model.init(jax.random.key(0))
     toks = jax.random.randint(jax.random.key(1), (2, args.seq), 0,
                               cfg.vocab_size)
-    run = RunConfig(num_chunks=args.chunks, num_stages=topo.num_stages)
+    run = RunConfig(num_chunks=args.chunks, num_stages=topo.num_stages,
+                    attn_backend=args.attn_backend)
     plan = pp.build_plan(cfg, topo.num_stages, args.seq, run)
     staged = pp.stage_params(cfg, params, plan)
-    with jax.set_mesh(topo.mesh):
+    with compat.set_mesh(topo.mesh):
         logits = jax.jit(lambda st, tk: pp.prefill_pipeline(
             cfg, st, tk, plan, topo))(staged, toks)
     ref = model.forward(params, toks)[:, -1]

@@ -5,12 +5,88 @@
   the complementary ``auto``/``check_rep`` spelling. One entry point maps
   between them (axis_names -> auto = mesh axes minus manual; check_vma ->
   check_rep).
+- ``AxisType``: jax >= 0.5 types mesh axes explicitly
+  (``jax.sharding.AxisType.{Auto,Explicit,Manual}``); older meshes are
+  implicitly Auto. The shim exposes the real enum when present and a
+  placeholder otherwise so call sites can always say ``AxisType.Auto``.
+- ``make_mesh``: forwards ``axis_types`` only when the installed jax
+  understands it.
+- ``set_mesh``: jax >= 0.6 ``jax.set_mesh`` context manager; older jax uses
+  the mesh object itself as the context (``with mesh:``).
 """
 from __future__ import annotations
 
+import enum
+import inspect
 from typing import Optional
 
 import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType  # noqa: F401  (re-export)
+except ImportError:  # older jax: every axis is implicitly Auto
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def axis_types_kw(n: int) -> dict:
+    """``{"axis_types": (Auto,)*n}`` when the installed jax supports it."""
+    if _MAKE_MESH_TAKES_AXIS_TYPES:
+        return {"axis_types": (AxisType.Auto,) * n}
+    return {}
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+    """``jax.make_mesh`` that drops ``axis_types`` on jax builds predating it."""
+    if axis_types is not None and _MAKE_MESH_TAKES_AXIS_TYPES:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def set_mesh(mesh):
+    """Context manager activating ``mesh`` (jax.set_mesh or ``with mesh:``)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh  # old jax: Mesh is its own context manager
+
+
+def ensure_host_devices(n: int = 8) -> None:
+    """Give a bare CPU host ``n`` fake host-platform devices (the chunked
+    pipeline needs >= 2). No-op when the flag is already set or real
+    accelerators exist — the flag only affects the host platform. Must run
+    before the first jax backend use (device queries, array ops); importing
+    jax is fine."""
+    import os
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def max_auto_tp(tp: int) -> int:
+    """Clamp a GSPMD-auto TP degree to what the installed jaxlib can
+    partition inside shard_map: old jaxlib (no partial-auto SPMD) forces
+    tp = 1; newer jax passes ``tp`` through. The single place launch
+    scripts and test helpers consult for the tp-fallback policy."""
+    return tp if tp <= 1 or supports_partial_auto_spmd() else 1
+
+
+def supports_partial_auto_spmd() -> bool:
+    """True when shard_map over a SUBSET of mesh axes (manual stage axis,
+    GSPMD-auto TP axis of size > 1) can be partitioned by the installed
+    jaxlib. Old jaxlib rejects the lowering with "UNIMPLEMENTED: PartitionId
+    instruction is not supported for SPMD partitioning", so pipeline runs
+    there must keep every non-manual axis at size 1 (tp = 1). The
+    ``jax.shard_map`` attribute doubles as the capability marker: it appeared
+    alongside the partitioner fix.
+    """
+    return hasattr(jax, "shard_map")
 
 
 def shard_map(f, *, mesh, in_specs, out_specs,

@@ -220,6 +220,10 @@ class RunConfig:
     mbkr_spill_chunks: int = 0  # 0 -> auto (N//4)
     kv_spill_dtype: str = "bfloat16"  # beyond-paper: int8 spill compression
     remote_attn: str = "qship"  # fetch (paper-faithful) | qship (beyond-paper)
+    # attention inner-loop implementation (core.attention registry):
+    # "jnp" = pure-jnp online-softmax reference; "pallas" = the flash kernel
+    # kernels.ops.chunk_attention (interpret mode off-TPU, Mosaic on TPU)
+    attn_backend: str = "jnp"
     # "kv_split": reshape the TP axis into ("kv","qg") so GQA attention is
     # collective-free (beyond-paper perf variant; auto-falls-back when head
     # counts don't divide). "auto": plain 16-way model axis.

@@ -1,0 +1,214 @@
+"""Online-softmax attention state + the pluggable backend registry.
+
+MOCAP's attention for one chunk is a COMBINE of partial flash-attention
+states over several KV sources (own pool slots, remote fetch/qship partials,
+the causal self block). This module owns the state algebra — ``attn_init /
+attn_combine / attn_finish`` with state ``(m, l, acc)``: running max,
+denominator, unnormalized accumulator, all fp32 — and a registry of
+*backends* that compute one partial state:
+
+- ``jnp``    — the pure-jnp streaming reference (``attn_update``): einsum
+               scores, masked softmax, accumulate. Runs everywhere; the
+               numerics oracle.
+- ``pallas`` — the WaferLLM-style flash kernel ``kernels.ops.chunk_attention``
+               with ``return_state=True``: the kernel returns (m, l) plus
+               the UNNORMALIZED fp32 accumulator straight from VMEM scratch,
+               so kernel results join the same combine chain at full
+               precision even when the normalized output dtype is bf16
+               (interpret mode off-TPU, compiled on TPU).
+
+A backend supplies two block kinds (DESIGN.md §2.3):
+- ``self_block``  — causal attention of the chunk over its own fresh KV.
+- ``chunk_block`` — full-visibility attention over ONE stored chunk's KV,
+  gated by a traced ``valid`` scalar (the chunk participates iff its index is
+  below the consumer's phase). Gating must be exact: an invalid chunk
+  contributes the identity state (m=-inf, l=0, acc=0).
+
+Backends are selected per-plan via ``RunConfig.attn_backend`` ->
+``PipelinePlan.attn_backend``; registration is open for follow-ons (SSD
+backend for the ssm stage program, TPU-native qship kernel — ROADMAP).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = float(-1e30)  # finite -inf stand-in: keeps masked softmax NaN-free
+
+State = Tuple[jax.Array, jax.Array, jax.Array]  # (m, l, acc)
+
+
+# ======================================================= state algebra (fp32)
+
+def group_queries(q: jax.Array, kvh: int) -> jax.Array:
+    """[B,C,H,D] -> [B,C,K,G,D] (query heads grouped per kv head)."""
+    b, c, h, d = q.shape
+    return q.reshape(b, c, kvh, h // kvh, d)
+
+
+def attn_init(b: int, c: int, kvh: int, g: int, d: int) -> State:
+    return (jnp.full((b, kvh, g, c), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, c), jnp.float32),
+            jnp.zeros((b, kvh, g, c, d), jnp.float32))
+
+
+def attn_update(qg, k, v, mask, scale, st: State) -> State:
+    """One online-softmax block update (the jnp reference path).
+    qg [B,C,K,G,D]; k,v [B,Ck,K,D]; mask broadcastable to [B,K,G,C,Ck];
+    st = (m, l, acc) with m,l [B,K,G,C], acc [B,K,G,C,D]."""
+    m, l, acc = st
+    s = jnp.einsum("bckgd,bskd->bkgcs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    # fully-masked rows: exp against a safe max so p == 0 (not exp(0) == 1)
+    m_safe = jnp.where(m_new < NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe[..., None])
+    corr = jnp.exp(m - m_safe)
+    l_new = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgcs,bskd->bkgcd", p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * corr[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def attn_combine(st1: State, st2: State) -> State:
+    m1, l1, a1 = st1
+    m2, l2, a2 = st2
+    m = jnp.maximum(m1, m2)
+    m_safe = jnp.where(m < NEG_INF / 2, 0.0, m)
+    c1, c2 = jnp.exp(m1 - m_safe), jnp.exp(m2 - m_safe)
+    return m, l1 * c1 + l2 * c2, a1 * c1[..., None] + a2 * c2[..., None]
+
+
+def attn_finish(st: State, q_dtype) -> jax.Array:
+    m, l, acc = st
+    b, kvh, g, c, d = acc.shape
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, c, kvh * g, d).astype(q_dtype)
+
+
+# =========================================================== backend registry
+
+class AttentionBackend:
+    """One way to compute a partial attention state. Subclasses implement
+    ``self_block`` (causal, within-chunk) and ``chunk_block`` (one stored
+    chunk, full visibility, gated by a traced ``valid`` scalar); the combine
+    chain and finish are shared module-level functions."""
+
+    name = "abstract"
+
+    def self_block(self, qg, k, v, scale, st: State) -> State:
+        raise NotImplementedError
+
+    def chunk_block(self, qg, k, v, valid, scale, st: State) -> State:
+        raise NotImplementedError
+
+
+class JnpBackend(AttentionBackend):
+    """Pure-jnp streaming reference (runs on any jax backend)."""
+
+    name = "jnp"
+
+    def self_block(self, qg, k, v, scale, st: State) -> State:
+        c = qg.shape[1]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        return attn_update(qg, k, v, tri[None, None, None], scale, st)
+
+    def chunk_block(self, qg, k, v, valid, scale, st: State) -> State:
+        mask = valid[None, None, None, None, None]  # whole chunk on/off
+        return attn_update(qg, k, v, mask, scale, st)
+
+
+class PallasBackend(AttentionBackend):
+    """Flash kernel backend: ``kernels.ops.chunk_attention`` computes the
+    block, ``return_state`` exposes (m, l) plus the fp32 accumulator from
+    VMEM scratch (NOT reconstructed from the dtype-rounded normalized
+    output) so the result joins the combine chain at full precision.
+    Interpret mode off-TPU; real Mosaic lowering on TPU."""
+
+    name = "pallas"
+
+    @staticmethod
+    def _to_state(m, l, acc, kvh: int) -> State:
+        b, c, h, d = acc.shape
+        g = h // kvh
+        acc = acc.reshape(b, c, kvh, g, d).transpose(0, 2, 3, 1, 4)
+        return m.reshape(b, kvh, g, c), l.reshape(b, kvh, g, c), acc
+
+    def _kernel_state(self, qg, k, v, scale, causal_offset: int) -> State:
+        from repro.kernels import ops
+        b, c, kvh, g, d = qg.shape
+        q = qg.reshape(b, c, kvh * g, d)
+        _, m, l, acc = ops.chunk_attention(
+            q, k, v, causal_offset=causal_offset, scale=float(scale),
+            return_state=True)
+        return self._to_state(m, l, acc, kvh)
+
+    def self_block(self, qg, k, v, scale, st: State) -> State:
+        return attn_combine(st, self._kernel_state(qg, k, v, scale, 0))
+
+    def chunk_block(self, qg, k, v, valid, scale, st: State) -> State:
+        # full visibility: every query sees all Ck keys (offset >= Ck)
+        s2 = self._kernel_state(qg, k, v, scale, int(k.shape[1]))
+        s2 = (jnp.where(valid, s2[0], NEG_INF),
+              jnp.where(valid, s2[1], 0.0),
+              jnp.where(valid, s2[2], 0.0))
+        return attn_combine(st, s2)
+
+
+_BACKENDS: Dict[str, Callable[[], AttentionBackend]] = {}
+
+
+def register_backend(name: str, factory: Callable[[], AttentionBackend]) -> None:
+    _BACKENDS[name] = factory
+
+
+def get_backend(name: str) -> AttentionBackend:
+    if name not in _BACKENDS:
+        raise KeyError(f"unknown attention backend {name!r}; "
+                       f"registered: {sorted(_BACKENDS)}")
+    return _BACKENDS[name]()
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_BACKENDS))
+
+
+register_backend("jnp", JnpBackend)
+register_backend("pallas", PallasBackend)
+
+
+# ============================================================ pool traversal
+
+def pool_scan(backend: AttentionBackend, qg, kpool_l, vpool_l, slot_chunk,
+              limit, scale, st: State, slots: Optional[Any] = None) -> State:
+    """Accumulate attention over pool slots whose stored chunk < ``limit``.
+    kpool_l/vpool_l [slots+1, B, C, K, D] (this layer's slices).
+    ``slots``: optional static subset of slot indices to visit (the creditor
+    scan touches only the few host slots, not the whole pool)."""
+    if slots is not None:
+        if len(slots) == 0:
+            return st
+        idx = np.asarray(slots, np.int32)
+        kpool_l = kpool_l[idx]
+        vpool_l = vpool_l[idx]
+        chunk_ids = jnp.asarray(slot_chunk)[jnp.asarray(idx)]
+    else:
+        nslots = kpool_l.shape[0] - 1
+        if nslots <= 0:
+            return st
+        kpool_l = kpool_l[:nslots]
+        vpool_l = vpool_l[:nslots]
+        chunk_ids = jnp.asarray(slot_chunk[:nslots])
+
+    def body(carry, xs):
+        k, v, cid = xs
+        valid = (cid >= 0) & (cid < limit)
+        return backend.chunk_block(qg, k, v, valid, scale, carry), None
+
+    st, _ = jax.lax.scan(body, st, (kpool_l, vpool_l, chunk_ids))
+    return st

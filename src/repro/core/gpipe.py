@@ -1,0 +1,81 @@
+"""GPipe baseline driver: microbatch pipeline over the BATCH dim.
+
+Every microbatch carries the full sequence (full quadratic attention per
+tick, no KV pool) — the paper's Fig. 2(a) comparison point against MOCAP's
+chunked pipeline. Kept out of ``core.pipeline`` so the hot-path driver stays
+a thin scan loop; selected via ``PipelinePlan.mode == "gpipe"``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.configs.base import ModelConfig
+from repro.core.plan import PipelinePlan
+from repro.core.staging import (Params, batch_specs, manual_only, manual_tree,
+                                stage_param_specs)
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.topology import Topology
+
+
+def gpipe_prefill(cfg: ModelConfig, staged: Params, tokens: jax.Array,
+                  plan: PipelinePlan, topo: Topology) -> jax.Array:
+    n, m = plan.num_stages, plan.num_chunks
+    st_ax = topo.stage_axis
+    manual, pod_axes = batch_specs(topo)
+    dt = jnp.dtype(cfg.dtype)
+    ring_perm = [(i, (i + 1) % n) for i in range(n)]
+
+    def body(stage_layers, embed, final_norm, tokens):
+        stage = jax.lax.axis_index(st_ax)
+        stage_layers = jax.tree.map(lambda a: jnp.squeeze(a, 0), stage_layers)
+        b, s_full = tokens.shape
+        assert b % m == 0, f"gpipe: batch {b} must divide into {m} microbatches"
+        bm = b // m
+        x0 = jnp.zeros((bm, s_full, cfg.d_model), dt)
+        out0 = jnp.zeros((b, cfg.d_model), jnp.float32)
+
+        def tick(carry, t):
+            x_prev, out = carry
+            phase = t - stage
+            mb = jnp.clip(t, 0, m - 1)
+            tok_mb = jax.lax.dynamic_slice(tokens, (mb * bm, 0), (bm, s_full))
+            x_emb = jnp.take(embed, tok_mb, axis=0).astype(dt)
+            if cfg.embedding_multiplier != 1.0:
+                x_emb = x_emb * cfg.embedding_multiplier
+            x = jnp.where(stage == 0, x_emb, x_prev)
+
+            def layer_body(xc, lp):
+                xo, _, _ = T.layer_apply(cfg, lp, xc, impl="xla_flash", topo=None)
+                return xo, None
+            x_out, _ = jax.lax.scan(layer_body, x, stage_layers)
+            take = (stage == n - 1) & (phase >= 0) & (phase < m)
+            mbp = jnp.clip(phase, 0, m - 1)
+            upd = jnp.where(take, x_out[:, -1].astype(jnp.float32),
+                            jax.lax.dynamic_slice(out, (mbp * bm, 0),
+                                                  (bm, cfg.d_model)))
+            out = jax.lax.dynamic_update_slice(out, upd, (mbp * bm, 0))
+            x_next = jax.lax.ppermute(x_out, st_ax, ring_perm)
+            return (x_next, out), None
+
+        (xf, out), _ = jax.lax.scan(tick, (x0, out0), jnp.arange(m + n - 1))
+        return jax.lax.psum(jnp.where(stage == n - 1, out, 0.0), st_ax)
+
+    specs = stage_param_specs(cfg, plan, topo)
+    sl_specs = manual_tree(specs["stage_layers"], manual)
+    tok_spec = P(pod_axes if pod_axes else None, None)
+    x_last = compat.shard_map(
+        body, mesh=topo.mesh,
+        in_specs=(sl_specs, manual_only(specs["embed"], manual),
+                  manual_only(specs["final_norm"], manual), tok_spec),
+        out_specs=tok_spec, axis_names=manual, check_vma=False,
+    )(staged["stage_layers"], staged["embed"], staged["final_norm"], tokens)
+
+    x_last = L.rms_norm(x_last[:, None, :].astype(dt), staged["final_norm"],
+                        cfg.norm_eps)
+    w = staged["embed"].T if ("lm_head" not in staged) else staged["lm_head"]
+    logits = L.unembed_logits(x_last, w, scale=cfg.logits_scaling)
+    return logits[:, 0]

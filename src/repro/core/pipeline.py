@@ -1,685 +1,61 @@
-"""Executable chunked-pipeline prefill — MOCAP's execution model in JAX.
+"""Chunked-pipeline prefill driver — MOCAP's execution model in JAX.
 
-The paper's WSC pipeline maps onto the TPU mesh as (DESIGN.md §3):
+This module is the THIN top of a layered execution stack (DESIGN.md §2):
 
-- pipeline stage  = one slice of the mesh's ``stage`` axis (= ``topo.stage_axis``,
-  the 16-wide "data" axis of the production mesh); layers are sliced across
-  stages, tensor parallelism inside a stage uses the (GSPMD-auto) "model" axis.
-- chunk flow      = ``jax.lax.scan`` over ticks; the stage-boundary activation
-  transfer is a ring ``ppermute`` (+1 on the stage axis) — the paper's 1-hop
-  nearest-neighbour D2D transfer.
-- KV residency    = a per-stage slot POOL sized by the MBKR plan
-  (``core.mbkr.plan``): ``num_slots`` chunk-KV slots instead of the Terapipe
-  baseline's M. Chunks with index >= p2 are SPILLED at creation: one
-  ``ppermute`` by N/2 (the fixed cross-half pairing) moves them to the paired
-  stage's host slots.
-- remote access   = two modes:
-    * ``fetch``  (paper-faithful): the debtor re-reads each spilled chunk from
-      its pair at attention time, one chunk-layer slice per ppermute, streamed
-      through the online-softmax update (residency = 1 chunk-layer).
-    * ``qship``  (beyond-paper, TPU-native): the debtor ships its QUERY to the
-      creditor, which computes partial flash-attention over the chunks it
-      hosts and ships back (acc, lse). Traffic is O(q + out) instead of
-      O(n_remote * kv): cheaper whenever >= 2 chunks are remote under GQA, and
-      one round-trip instead of n_remote transfers. See DESIGN.md §3.4.
+    core.plan       PipelinePlan / build_plan    (static geometry + MBKR)
+    core.staging    stage_params / specs / pads  (params -> [N, lps, ...])
+    core.attention  online-softmax state + the pluggable backend registry
+                    (``jnp`` reference | ``pallas`` flash kernel)
+    core.remote     spill / fetch / qship collectives
+    core.stagestep  per-family stage programs (tfm / ssm / hybrid)
+    core.gpipe      the GPipe microbatch baseline driver
+    core.pipeline   (this file) the lax.scan tick loop + shard_map lowering
 
-SPMD lockstep: every stage executes every tick; stages outside their active
-window [s, s+M) compute masked garbage — that is the pipeline *bubble*,
-directly visible in the dry-run's HLO-FLOPs-to-model-FLOPs ratio (§Roofline).
+The paper's WSC pipeline maps onto the TPU mesh as (DESIGN.md §3): pipeline
+stage = one slice of the mesh's ``stage`` axis; chunk flow = scan over ticks
+with a ring ppermute at stage boundaries (the 1-hop D2D transfer); KV
+residency = a per-stage slot pool sized by the MBKR plan; remote access =
+fetch or qship (DESIGN.md §3.4). SPMD lockstep: every stage executes every
+tick; stages outside their active window compute masked garbage — that is
+the pipeline *bubble*, visible in the dry-run's HLO-to-model-FLOPs ratio.
 
-Modes: ``mocap`` (pool+MBKR), ``terapipe`` (pool of M slots, no reallocation),
-``gpipe`` (microbatch pipeline: batch-split, full-sequence chunks, no pool).
+The public planning/staging API is re-exported here so existing callers
+(`runtime.engine`, `launch/{serve,dryrun,cells}.py`, roofline, tests) keep
+importing ``repro.core.pipeline``.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.configs.base import ModelConfig, RunConfig
-from repro.core import mbkr
+from repro.configs.base import ModelConfig
+from repro.core.attention import NEG_INF  # noqa: F401  (re-export)
+from repro.core.gpipe import gpipe_prefill
+from repro.core.plan import PipelinePlan, build_plan  # noqa: F401
+from repro.core.staging import (Params, batch_specs,  # noqa: F401
+                                kv_split_axes, manual_only, manual_tree,
+                                pad_experts, pad_q_heads, stage_param_specs,
+                                stage_params)
+from repro.core.stagestep import (StageCtx, attend_chunk,  # noqa: F401
+                                  hybrid_stage_step, ssm_stage_step,
+                                  tfm_stage_step)
 from repro.models import layers as L
 from repro.models import ssm as S
-from repro.models import transformer as T
 from repro.models.topology import Topology
 
-Params = Dict[str, Any]
+__all__ = [
+    "PipelinePlan", "build_plan", "stage_params", "stage_param_specs",
+    "kv_split_axes", "pad_q_heads", "pad_experts", "prefill_pipeline",
+    "NEG_INF",
+]
 
-NEG_INF = float(-1e30)  # finite -inf stand-in: keeps masked softmax NaN-free
 
-
-# =============================================================== static plan
-
-@dataclass(frozen=True)
-class PipelinePlan:
-    """Everything static about one pipeline lowering."""
-    mode: str                 # mocap | terapipe | gpipe
-    num_stages: int           # N
-    num_chunks: int           # M
-    chunk_len: int            # C (uniform); gpipe: microbatch size
-    layers_per_stage: int     # lps (ceil(L / N)); hybrid: groups per stage
-    num_slots: int            # KV pool size (excl. scratch)
-    p2: int                   # spill threshold (chunks >= p2 spill); M if no MBKR
-    remote_attn: str = "qship"   # fetch | qship
-    spill_dtype: str = "bfloat16"  # int8 -> beyond-paper spill compression
-    ship_dtype: str = "bfloat16"   # qship q/acc wire format (= model dtype)
-    # static tables (numpy; become HLO constants)
-    own_slot: Any = None          # [M] chunk -> own slot (scratch if spilled)
-    host_slot_a: Any = None       # [M] chunk -> host slot (first-half hosts)
-    host_slot_b: Any = None
-    slot_own_chunk: Any = None    # [slots+1] slot -> own chunk (-1 none)
-    slot_host_chunk_a: Any = None  # [slots+1] slot -> hosted pair chunk (-1)
-    slot_host_chunk_b: Any = None
-    host_slots_used: Any = None   # [H] the (few) slots host tables touch —
-                                  # the creditor-side scan visits ONLY these
-
-    @property
-    def scratch(self) -> int:
-        return self.num_slots
-
-    @property
-    def num_ticks(self) -> int:
-        return self.num_chunks + self.num_stages - 1
-
-    @property
-    def pair_shift(self) -> int:
-        return self.num_stages // 2
-
-
-def _invert(table: np.ndarray, num_slots: int, lo: int, hi: int) -> np.ndarray:
-    inv = np.full(num_slots + 1, -1, np.int32)
-    for chunk in range(lo, hi):
-        s = int(table[chunk])
-        if s <= num_slots:
-            inv[s] = chunk
-    return inv
-
-
-def build_plan(cfg: ModelConfig, num_stages: int, seq_len: int,
-               run: RunConfig, *, mode: Optional[str] = None) -> PipelinePlan:
-    """Derive the static pipeline plan for one (arch, shape, run) cell."""
-    mode = mode or ("mocap" if run.mbkr else "terapipe")
-    m = run.num_chunks
-    if mode == "gpipe":
-        return PipelinePlan(mode, num_stages, m, 0, _layers_per_stage(cfg, num_stages),
-                            0, m)
-    assert seq_len % m == 0, f"seq_len {seq_len} must divide into {m} chunks"
-    c = seq_len // m
-    use_mbkr = mode == "mocap" and not cfg.attn_free and num_stages >= 2 and m >= 2
-    mp = mbkr.plan(m, num_stages, mbkr=use_mbkr)
-    return PipelinePlan(
-        mode=mode, num_stages=num_stages, num_chunks=m, chunk_len=c,
-        layers_per_stage=_layers_per_stage(cfg, num_stages),
-        num_slots=mp.num_slots, p2=mp.p2,
-        remote_attn=run.remote_attn,
-        spill_dtype=run.kv_spill_dtype,
-        ship_dtype=cfg.dtype,   # wire in model precision (bf16 in prod)
-        own_slot=mp.own_slot, host_slot_a=mp.host_slot_a, host_slot_b=mp.host_slot_b,
-        slot_own_chunk=_invert(mp.own_slot, mp.num_slots, 0, mp.p2),
-        slot_host_chunk_a=_invert(mp.host_slot_a, mp.num_slots, mp.p2, m),
-        slot_host_chunk_b=_invert(mp.host_slot_b, mp.num_slots, mp.p2, m),
-        host_slots_used=np.unique(np.concatenate(
-            [mp.host_slot_a[mp.p2:], mp.host_slot_b[mp.p2:]])).astype(np.int32)
-        if mp.p2 < m else np.zeros((0,), np.int32),
-    )
-
-
-def _layers_per_stage(cfg: ModelConfig, n: int) -> int:
-    if cfg.family == "hybrid":
-        nl = cfg.hybrid.num_groups + 1  # +1 pseudo-group for the SSM tail
-    else:
-        nl = cfg.num_layers
-    return -(-nl // n)
-
-
-# ============================================================ params staging
-
-def stage_params(cfg: ModelConfig, params: Params, plan: PipelinePlan) -> Params:
-    """Restack flat [L, ...] layer params into [N, lps, ...] (zero-padded:
-    zero-param transformer/SSM blocks are exact identities via the residual).
-    Embedding / head / norms are replicated across stages (SPMD: every stage
-    computes the masked embed; only stage 0's result is used)."""
-    n, lps = plan.num_stages, plan.layers_per_stage
-
-    def restack(tree, nl):
-        def one(a):
-            pad = n * lps - nl
-            if pad:
-                a = jnp.concatenate([a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
-            return a.reshape((n, lps) + a.shape[1:])
-        return jax.tree.map(one, tree)
-
-    if cfg.family == "hybrid":
-        h = cfg.hybrid
-        pg = h.ssm_per_group
-        groups = params["mamba_groups"]        # [G, pg, ...]
-        tail = params["mamba_tail"]            # [tail, ...]
-        # tail becomes pseudo-group G (pad its layer dim to pg)
-        def fold(g, t):
-            t = jnp.concatenate(
-                [t, jnp.zeros((pg - t.shape[0],) + t.shape[1:], t.dtype)])[None]
-            g = jnp.concatenate([g, t])        # [G+1, pg, ...]
-            pad = n * plan.layers_per_stage - g.shape[0]
-            if pad:
-                g = jnp.concatenate([g, jnp.zeros((pad,) + g.shape[1:], g.dtype)])
-            return g.reshape((n, plan.layers_per_stage) + g.shape[1:])
-        staged_groups = jax.tree.map(fold, groups, tail)
-        return {
-            "embed": params["embed"], "final_norm": params["final_norm"],
-            "stage_layers": staged_groups, "shared": params["shared"],
-        }
-    if cfg.family == "encdec":
-        out = {
-            "embed": params["embed"], "final_norm": params["final_norm"],
-            "stage_layers": restack(params["dec_layers"], cfg.num_layers),
-            "enc_layers": params["enc_layers"], "enc_norm": params["enc_norm"],
-        }
-        return out
-    out = {
-        "embed": params["embed"], "final_norm": params["final_norm"],
-        "stage_layers": restack(params["layers"], cfg.num_layers),
-    }
-    if "lm_head" in params:
-        out["lm_head"] = params["lm_head"]
-    return out
-
-
-def stage_param_specs(cfg: ModelConfig, plan: PipelinePlan, topo: Topology) -> Params:
-    """PartitionSpecs for ``stage_params`` output: stage dim over the stage
-    axis, TP dims over the model axis, embed d-sharded (gather stays local)."""
-    st, md = topo.stage_axis, topo.tp_axis
-
-    def lift(spec: P) -> P:
-        return P(st, None, *spec[1:])  # [L,...] -> [N, lps, ...]
-
-    if cfg.family == "hybrid":
-        bs = S.block_specs(cfg, fsdp=False)
-        g_specs = jax.tree.map(lambda p: P(st, None, None, *p[1:]), bs,
-                               is_leaf=lambda x: isinstance(x, P))
-        shared = jax.tree.map(
-            lambda p: P(*p[1:]), T.specs(_hyb_scfg(cfg), fsdp=False)["layers"],
-            is_leaf=lambda x: isinstance(x, P))
-        out = {"embed": P(None, md), "final_norm": P(None),
-               "stage_layers": g_specs, "shared": shared}
-        return _rename_model(out, md)
-    if cfg.family == "encdec":
-        from repro.models import whisper as W
-        ws = W.specs(cfg, fsdp=False)
-        dec = jax.tree.map(lift, ws["dec_layers"], is_leaf=lambda x: isinstance(x, P))
-        out = {"embed": P(None, md), "final_norm": P(None),
-               "stage_layers": dec, "enc_layers": ws["enc_layers"],
-               "enc_norm": P(None)}
-        return _rename_model(out, md)
-    base = T.specs(cfg, fsdp=False)["layers"] if cfg.family != "ssm" \
-        else S.block_specs(cfg, fsdp=False)
-    layers = jax.tree.map(lift, base, is_leaf=lambda x: isinstance(x, P))
-    out = {"embed": P(None, md), "final_norm": P(None), "stage_layers": layers}
-    if not cfg.tie_embeddings and cfg.family in ("dense", "moe", "vlm"):
-        out["lm_head"] = P(None, md)
-    out = _rename_model(out, md)
-    if isinstance(md, tuple) and cfg.family in ("dense", "moe", "vlm"):
-        # K/V projections shard by KV HEAD only (replicated over "qg") so the
-        # [B,C,kvh,hd] reshape keeps full head_dim per chip (no hd split)
-        for k in ("wk", "wv"):
-            out["stage_layers"][k] = P(topo.stage_axis, None, None, md[0])
-        if cfg.moe is not None:
-            # EXPERT parallelism: experts over the full TP axis, FFN local
-            for k in ("e_wg", "e_wu", "e_wd"):
-                out["stage_layers"][k] = P(topo.stage_axis, None, md, None, None)
-    return out
-
-
-def _hyb_scfg(cfg: ModelConfig) -> ModelConfig:
-    from repro.models.hybrid import T_single_cfg
-    return T_single_cfg(cfg)
-
-
-def _rename_model(tree, tp_axis):
-    """Model specs hardcode the "model" axis; rename to the topology's TP
-    axis (possibly the split ("kv","qg") view)."""
-    if tp_axis == "model":
-        return tree
-
-    def one(spec: P) -> P:
-        return P(*(tp_axis if e == "model" else e for e in spec))
-    return jax.tree.map(one, tree, is_leaf=lambda x: isinstance(x, P))
-
-
-def kv_split_axes(cfg: ModelConfig, tp: int):
-    """Factor the TP degree into (kv, qg) so attention shards by kv head and
-    query group with NO collectives. Returns (kv_ax, qg_ax, padded_g) —
-    padded_g > g means q heads are zero-padded per kv group (wq/wo pads are
-    exact identities). None if kv heads don't divide."""
-    if cfg.attn_free or cfg.num_kv_heads == 0:
-        return None
-    kvh, h = cfg.num_kv_heads, cfg.num_heads
-    g = h // kvh
-    kv_ax = min(kvh, tp)
-    if tp % kv_ax or kvh % kv_ax:
-        return None
-    qg_ax = tp // kv_ax
-    g_pad = -(-g // qg_ax) * qg_ax
-    return kv_ax, qg_ax, g_pad
-
-
-def pad_q_heads(cfg: ModelConfig, params: Params, g_pad: int) -> Tuple[ModelConfig, Params]:
-    """Zero-pad query heads per kv group: H = kvh*g -> kvh*g_pad. Padded
-    heads have zero wq (uniform attention) and zero wo rows (no contribution)
-    — bit-exact with the unpadded model."""
-    from repro.configs.base import replace as cfg_replace
-    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
-    g = cfg.num_heads // kvh
-    if g_pad == g:
-        return cfg, params
-    lp = dict(params["layers"])
-    L_, d = lp["wq"].shape[0], lp["wq"].shape[1]
-    wq = lp["wq"].reshape(L_, d, kvh, g, hd)
-    wq = jnp.pad(wq, ((0, 0), (0, 0), (0, 0), (0, g_pad - g), (0, 0)))
-    lp["wq"] = wq.reshape(L_, d, kvh * g_pad * hd)
-    wo = lp["wo"].reshape(L_, kvh, g, hd, d)
-    wo = jnp.pad(wo, ((0, 0), (0, 0), (0, g_pad - g), (0, 0), (0, 0)))
-    lp["wo"] = wo.reshape(L_, kvh * g_pad * hd, d)
-    out = dict(params)
-    out["layers"] = lp
-    return cfg_replace(cfg, num_heads=kvh * g_pad), out
-
-
-def pad_experts(cfg: ModelConfig, params: Params, e_pad: int) -> Tuple[ModelConfig, Params]:
-    """Zero-pad routed experts to ``e_pad`` for expert parallelism. Padded
-    experts' router logits are masked (MoEConfig.num_real_experts), so they
-    are never routable — bit-exact."""
-    import dataclasses
-    from repro.configs.base import replace as cfg_replace
-    m = cfg.moe
-    if m is None or e_pad == m.num_experts:
-        return cfg, params
-    e0 = m.num_experts
-    lp = dict(params["layers"])
-    lp["router"] = jnp.pad(lp["router"], ((0, 0), (0, 0), (0, e_pad - e0)))
-    for k in ("e_wg", "e_wu", "e_wd"):
-        lp[k] = jnp.pad(lp[k], ((0, 0), (0, e_pad - e0)) + ((0, 0),) * (lp[k].ndim - 2))
-    out = dict(params)
-    out["layers"] = lp
-    moe2 = dataclasses.replace(m, num_experts=e_pad,
-                               num_real_experts=m.real_experts)
-    return cfg_replace(cfg, moe=moe2), out
-
-
-# ====================================================== online-softmax attn
-
-def _gq(q: jax.Array, kvh: int) -> jax.Array:
-    b, c, h, d = q.shape
-    return q.reshape(b, c, kvh, h // kvh, d)
-
-
-def _attn_update(qg, k, v, mask, scale, st):
-    """One online-softmax block update.
-    qg [B,C,K,G,D]; k,v [B,Ck,K,D]; mask broadcastable to [B,K,G,C,Ck];
-    st = (m, l, acc) with m,l [B,K,G,C], acc [B,K,G,C,D]."""
-    m, l, acc = st
-    s = jnp.einsum("bckgd,bskd->bkgcs", qg, k,
-                   preferred_element_type=jnp.float32) * scale
-    s = jnp.where(mask, s, NEG_INF)
-    m_new = jnp.maximum(m, s.max(axis=-1))
-    # fully-masked rows: exp against a safe max so p == 0 (not exp(0) == 1)
-    m_safe = jnp.where(m_new < NEG_INF / 2, 0.0, m_new)
-    p = jnp.exp(s - m_safe[..., None])
-    corr = jnp.exp(m - m_safe)
-    l_new = l * corr + p.sum(axis=-1)
-    pv = jnp.einsum("bkgcs,bskd->bkgcd", p.astype(v.dtype), v,
-                    preferred_element_type=jnp.float32)
-    acc_new = acc * corr[..., None] + pv
-    return m_new, l_new, acc_new
-
-
-def _attn_init(b, c, kvh, g, d):
-    return (jnp.full((b, kvh, g, c), NEG_INF, jnp.float32),
-            jnp.zeros((b, kvh, g, c), jnp.float32),
-            jnp.zeros((b, kvh, g, c, d), jnp.float32))
-
-
-def _attn_combine(st1, st2):
-    m1, l1, a1 = st1
-    m2, l2, a2 = st2
-    m = jnp.maximum(m1, m2)
-    m_safe = jnp.where(m < NEG_INF / 2, 0.0, m)
-    c1, c2 = jnp.exp(m1 - m_safe), jnp.exp(m2 - m_safe)
-    return m, l1 * c1 + l2 * c2, a1 * c1[..., None] + a2 * c2[..., None]
-
-
-def _attn_finish(st, q_dtype):
-    m, l, acc = st
-    b, kvh, g, c, d = acc.shape
-    out = acc / jnp.maximum(l, 1e-30)[..., None]
-    return out.transpose(0, 3, 1, 2, 4).reshape(b, c, kvh * g, d).astype(q_dtype)
-
-
-def _pool_scan(qg, kpool_l, vpool_l, slot_chunk, limit, scale, st,
-               slots: Optional[Any] = None):
-    """Accumulate attention over pool slots whose stored chunk < ``limit``.
-    kpool_l/vpool_l [slots+1, B, C, K, D] (this layer's slices).
-    ``slots``: optional static subset of slot indices to visit (the creditor
-    scan touches only the few host slots, not the whole pool)."""
-    if slots is not None:
-        if len(slots) == 0:
-            return st
-        idx = np.asarray(slots, np.int32)
-        kpool_l = kpool_l[idx]
-        vpool_l = vpool_l[idx]
-        chunk_ids = jnp.asarray(slot_chunk)[jnp.asarray(idx)]
-    else:
-        nslots = kpool_l.shape[0] - 1
-        if nslots <= 0:
-            return st
-        kpool_l = kpool_l[:nslots]
-        vpool_l = vpool_l[:nslots]
-        chunk_ids = jnp.asarray(slot_chunk[:nslots])
-
-    def body(carry, xs):
-        k, v, cid = xs
-        valid = (cid >= 0) & (cid < limit)
-        mask = valid[None, None, None, None, None]  # whole slot on/off
-        return _attn_update(qg, k, v, mask, scale, carry), None
-
-    st, _ = jax.lax.scan(body, st, (kpool_l, vpool_l, chunk_ids))
-    return st
-
-
-def _self_block(qg, k, v, scale, st):
-    c = qg.shape[1]
-    tri = jnp.tril(jnp.ones((c, c), bool))
-    return _attn_update(qg, k, v, tri[None, None, None], scale, st)
-
-
-# ========================================================== per-family step
-
-@dataclass
-class _StageCtx:
-    """Per-trace context threaded through the tick body."""
-    cfg: ModelConfig
-    plan: PipelinePlan
-    topo: Topology
-    stage: jax.Array          # my stage id (traced)
-    phase: jax.Array          # my chunk index this tick (traced; may be OOR)
-    first_half: jax.Array     # bool: stage < N/2
-    pair_perm: Sequence[Tuple[int, int]]
-    scale: float
-    x_spec: Any = P(None, None, None)  # residual-stream sharding (SP variant)
-
-
-def _pair_phase(ctx: _StageCtx) -> jax.Array:
-    n2 = ctx.plan.pair_shift
-    return jnp.where(ctx.first_half, ctx.phase - n2, ctx.phase + n2)
-
-
-def _spill_permute(ctx: "_StageCtx", kv: jax.Array) -> jax.Array:
-    """Cross-half spill transfer. int8 mode: the WIRE carries the int8
-    payload + one fp32 scale per (tensor, layer, kv head) — half the spill
-    bytes; the pool stays in model dtype (dequantized at the creditor)."""
-    plan = ctx.plan
-    if plan.spill_dtype != "int8":
-        return jax.lax.ppermute(kv, ctx.topo.stage_axis, ctx.pair_perm)
-    amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=(-3, -1), keepdims=True)
-    scale = jnp.maximum(amax, 1e-6) / 127.0
-    q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale), -127, 127)
-    q8 = jax.lax.ppermute(q.astype(jnp.int8), ctx.topo.stage_axis, ctx.pair_perm)
-    s = jax.lax.ppermute(scale, ctx.topo.stage_axis, ctx.pair_perm)
-    return (q8.astype(jnp.float32) * s).astype(kv.dtype)
-
-
-def _attend_chunk(ctx: _StageCtx, l_idx: jax.Array, q: jax.Array,
-                  k_new: jax.Array, v_new: jax.Array,
-                  kpool: jax.Array, vpool: jax.Array) -> jax.Array:
-    """Full MOCAP attention for one layer of the current chunk:
-    own-pool prefix + (MBKR) remote prefix + causal self block.
-    q [B,C,H,D]; k_new/v_new [B,C,K,D]; pools [slots+1, lps, B, C, K, D]."""
-    plan, cfg = ctx.plan, ctx.cfg
-    b, c, h, d = q.shape
-    kvh = k_new.shape[2]
-    qg = _gq(q, kvh)
-    st = _attn_init(b, c, kvh, h // kvh, d)
-
-    kpool_l = jax.lax.dynamic_index_in_dim(kpool, l_idx, axis=1, keepdims=False)
-    vpool_l = jax.lax.dynamic_index_in_dim(vpool, l_idx, axis=1, keepdims=False)
-
-    # 1. own local prefix: chunks j < min(phase, p2)
-    limit = jnp.minimum(ctx.phase, plan.p2)
-    st = _pool_scan(qg, kpool_l, vpool_l, plan.slot_own_chunk, limit, ctx.scale, st)
-
-    # 2. remote prefix: chunks p2 <= j < phase live at my pair
-    if plan.p2 < plan.num_chunks and plan.mode == "mocap":
-        host_tbl = jnp.where(ctx.first_half,
-                             jnp.asarray(plan.host_slot_a),
-                             jnp.asarray(plan.host_slot_b))
-        if plan.remote_attn == "fetch":
-            # stream one chunk-layer per ppermute through the update
-            def fetch_body(carry, j):
-                stc = carry
-                # what I HOST for my pair at index j  ->  what I RECEIVE is
-                # my own chunk j (symmetric cross-half exchange)
-                slot = host_tbl[j]
-                ks = jax.lax.dynamic_index_in_dim(kpool_l, slot, 0, keepdims=False)
-                vs = jax.lax.dynamic_index_in_dim(vpool_l, slot, 0, keepdims=False)
-                pk = jax.lax.ppermute(jnp.stack([ks, vs]), ctx.topo.stage_axis,
-                                      ctx.pair_perm)
-                valid = (j < ctx.phase)
-                stc = _attn_update(qg, pk[0], pk[1],
-                                   valid[None, None, None, None, None],
-                                   ctx.scale, stc)
-                return stc, None
-            st, _ = jax.lax.scan(fetch_body, st,
-                                 jnp.arange(plan.p2, plan.num_chunks))
-        else:  # qship: send my Q to the creditor; it attends over hosted KV
-            sd = jnp.dtype(plan.ship_dtype)
-            q_pair = jax.lax.ppermute(qg.astype(sd), ctx.topo.stage_axis,
-                                      ctx.pair_perm).astype(qg.dtype)
-            host_chunk = jnp.where(ctx.first_half,
-                                   jnp.asarray(plan.slot_host_chunk_a),
-                                   jnp.asarray(plan.slot_host_chunk_b))
-            pair_limit = _pair_phase(ctx)  # pair needs chunks [p2, pair_phase)
-            st_r = _attn_init(b, c, kvh, h // kvh, d)
-            # creditor-side scan visits ONLY the host slots (compute win)
-            st_r = _pool_scan(q_pair, kpool_l, vpool_l, host_chunk,
-                              pair_limit, ctx.scale, st_r,
-                              slots=plan.host_slots_used)
-            # ship (m, l) packed fp32 + acc in the wire dtype
-            ml = jax.lax.ppermute(jnp.stack([st_r[0], st_r[1]]),
-                                  ctx.topo.stage_axis, ctx.pair_perm)
-            a_r = jax.lax.ppermute(st_r[2].astype(sd), ctx.topo.stage_axis,
-                                   ctx.pair_perm).astype(jnp.float32)
-            st = _attn_combine(st, (ml[0], ml[1], a_r))
-
-    # 3. self block (causal)
-    st = _self_block(qg, k_new, v_new, ctx.scale, st)
-    return _attn_finish(st, q.dtype)
-
-
-def _write_pools(ctx: _StageCtx, kpool, vpool, stage_k, stage_v):
-    """End-of-tick pool writes: own store (phase < p2) or cross-half spill."""
-    plan = ctx.plan
-    phase, active = ctx.phase, (ctx.phase >= 0) & (ctx.phase < plan.num_chunks)
-    pidx = jnp.clip(phase, 0, plan.num_chunks - 1)
-
-    own_tbl = jnp.asarray(plan.own_slot)
-    own_slot = jnp.where(active & (phase < plan.p2), own_tbl[pidx], plan.scratch)
-    kpool = jax.lax.dynamic_update_index_in_dim(kpool, stage_k, own_slot, 0)
-    vpool = jax.lax.dynamic_update_index_in_dim(vpool, stage_v, own_slot, 0)
-
-    if plan.p2 < plan.num_chunks and plan.mode == "mocap":
-        spill = _spill_permute(ctx, jnp.stack([stage_k, stage_v]))
-        pp = _pair_phase(ctx)  # the chunk index my pair just computed
-        host_tbl = jnp.where(ctx.first_half,
-                             jnp.asarray(plan.host_slot_a),
-                             jnp.asarray(plan.host_slot_b))
-        ppc = jnp.clip(pp, 0, plan.num_chunks - 1)
-        hslot = jnp.where((pp >= plan.p2) & (pp < plan.num_chunks),
-                          host_tbl[ppc], plan.scratch)
-        kpool = jax.lax.dynamic_update_index_in_dim(kpool, spill[0], hslot, 0)
-        vpool = jax.lax.dynamic_update_index_in_dim(vpool, spill[1], hslot, 0)
-    return kpool, vpool
-
-
-# --------------------------------------------------------- transformer step
-
-def _tfm_stage_step(ctx: _StageCtx, layers: Params, layer_valid: jax.Array,
-                    x: jax.Array, kpool, vpool, *, cross: Optional[Tuple] = None):
-    """Apply this stage's layers to chunk ``ctx.phase``. Returns
-    (x_out, kpool, vpool). ``cross`` = (enc_xk, enc_xv) [lps,B,F,K,D] for
-    whisper decoder stages."""
-    cfg, plan = ctx.cfg, ctx.plan
-    b, c, dm = x.shape
-    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    positions = jnp.clip(ctx.phase, 0, plan.num_chunks - 1) * plan.chunk_len \
-        + jnp.arange(c)[None, :]
-    cos, sin = L.rope_angles(positions, hd, cfg.rope_theta)
-
-    def layer_body(carry, xs):
-        xc, li = carry
-        lp = xs if cross is None else xs[0]
-        hn = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
-        q = jnp.einsum("bcd,dq->bcq", hn, lp["wq"]).reshape(b, c, h, hd)
-        k = jnp.einsum("bcd,dq->bcq", hn, lp["wk"]).reshape(b, c, kvh, hd)
-        v = jnp.einsum("bcd,dq->bcq", hn, lp["wv"]).reshape(b, c, kvh, hd)
-        if cfg.qk_norm:
-            q = L.rms_norm(q, lp["q_norm"], cfg.norm_eps)
-            k = L.rms_norm(k, lp["k_norm"], cfg.norm_eps)
-        q = L.apply_rope(q, cos, sin)
-        k = L.apply_rope(k, cos, sin)
-        q = jax.lax.with_sharding_constraint(q, P(None, None, ctx.topo.tp_axis, None))
-        if isinstance(ctx.topo.tp_axis, tuple):
-            kv_ax = ctx.topo.tp_axis[0]
-            k = jax.lax.with_sharding_constraint(k, P(None, None, kv_ax, None))
-            v = jax.lax.with_sharding_constraint(v, P(None, None, kv_ax, None))
-        att = _attend_chunk(ctx, li, q, k, v, kpool, vpool)
-        xc = xc + cfg.residual_multiplier * jnp.einsum(
-            "bcq,qd->bcd", att.reshape(b, c, h * hd), lp["wo"])
-        if cross is not None:
-            xk_l = jax.lax.dynamic_index_in_dim(cross[0], li, 0, keepdims=False)
-            xv_l = jax.lax.dynamic_index_in_dim(cross[1], li, 0, keepdims=False)
-            hnx = L.rms_norm(xc, lp["lnx"], cfg.norm_eps)
-            qx = jnp.einsum("bcd,dq->bcq", hnx, lp["xwq"]).reshape(b, c, h, hd)
-            attx = L.flash_attention_xla(qx, xk_l, xv_l, causal_offset=None)
-            xc = xc + jnp.einsum("bcq,qd->bcd", attx.reshape(b, c, h * hd), lp["xwo"])
-        ep_axis = ctx.topo.tp_axis if (cfg.moe is not None and isinstance(
-            ctx.topo.tp_axis, tuple)) else None
-        if ep_axis is not None:
-            # EP dispatch gathers tokens arbitrarily: replicate x first
-            xc = jax.lax.with_sharding_constraint(xc, P(None, None, None))
-        xc = T.ffn_block(cfg, lp, xc, topo=None, ep_axis=ep_axis)
-        # kv_split: keep the residual stream SEQUENCE-SHARDED between layers
-        # (Megatron-SP): psums become reduce-scatters and the stage-boundary
-        # ring permute moves C/tp tokens per chip instead of C
-        xc = jax.lax.with_sharding_constraint(xc, ctx.x_spec)
-        return (xc, li + 1), (k, v)
-
-    xs = layers if cross is None else (layers,)
-    (x, _), (ks, vs) = jax.lax.scan(layer_body, (x, jnp.int32(0)), xs)
-    kpool, vpool = _write_pools(ctx, kpool, vpool, ks, vs)
-    return x, kpool, vpool
-
-
-# --------------------------------------------------------------- SSM step
-
-def _ssm_stage_step(ctx: _StageCtx, layers: Params, x: jax.Array, state):
-    """Mamba2 stage: lps blocks; SSM/conv state carried tick-to-tick and
-    zeroed at phase 0 (start of the request)."""
-    cfg = ctx.cfg
-    fresh = ctx.phase <= 0
-
-    def layer_body(xc, xs):
-        lp, conv_st, ssd_st = xs
-        conv_st = jnp.where(fresh, jnp.zeros_like(conv_st), conv_st)
-        ssd_st = jnp.where(fresh, jnp.zeros_like(ssd_st), ssd_st)
-        xo, st2 = S.block_apply(cfg, lp, xc, state={"conv": conv_st, "ssd": ssd_st})
-        return xo, (st2["conv"], st2["ssd"])
-
-    x, (conv2, ssd2) = jax.lax.scan(layer_body, x, (layers, state[0], state[1]))
-    return x, (conv2, ssd2)
-
-
-# ------------------------------------------------------------- hybrid step
-
-def _hybrid_stage_step(ctx: _StageCtx, groups: Params, shared: Params,
-                       x: jax.Array, state, kpool, vpool):
-    """Zamba2 stage = up to lps groups of (pg Mamba2 + shared attn block).
-    The shared block's KV participates in MBKR (1 'layer' per group)."""
-    cfg, plan = ctx.cfg, ctx.plan
-    scfg = _hyb_scfg(cfg)
-    b, c, dm = x.shape
-    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    n_groups = cfg.hybrid.num_groups
-    fresh = ctx.phase <= 0
-    positions = jnp.clip(ctx.phase, 0, plan.num_chunks - 1) * plan.chunk_len \
-        + jnp.arange(c)[None, :]
-    cos, sin = L.rope_angles(positions, hd, cfg.rope_theta)
-
-    def group_body(carry, xs):
-        xc, gi = carry
-        g_lp, conv_st, ssd_st = xs
-
-        def mamba_body(xm, ms):
-            lp, cst, sst = ms
-            cst = jnp.where(fresh, jnp.zeros_like(cst), cst)
-            sst = jnp.where(fresh, jnp.zeros_like(sst), sst)
-            xo, st2 = S.block_apply(cfg, lp, xm, state={"conv": cst, "ssd": sst})
-            return xo, (st2["conv"], st2["ssd"])
-
-        xc2, (conv2, ssd2) = jax.lax.scan(mamba_body, xc, (g_lp, conv_st, ssd_st))
-        # shared attention: only for REAL groups (global group id < n_groups)
-        gid = ctx.stage * plan.layers_per_stage + gi
-        has_attn = gid < n_groups
-        hn = L.rms_norm(xc2, shared["ln1"], cfg.norm_eps)
-        q = jnp.einsum("bcd,dq->bcq", hn, shared["wq"]).reshape(b, c, h, hd)
-        k = jnp.einsum("bcd,dq->bcq", hn, shared["wk"]).reshape(b, c, kvh, hd)
-        v = jnp.einsum("bcd,dq->bcq", hn, shared["wv"]).reshape(b, c, kvh, hd)
-        q = L.apply_rope(q, cos, sin)
-        k = L.apply_rope(k, cos, sin)
-        att = _attend_chunk(ctx, gi, q, k, v, kpool, vpool)
-        upd = jnp.einsum("bcq,qd->bcd", att.reshape(b, c, h * hd), shared["wo"])
-        xc3 = xc2 + jnp.where(has_attn, upd, 0.0)
-        ffn = T.ffn_block(scfg, shared, xc3, topo=None) - xc3  # isolate update
-        xc3 = xc3 + jnp.where(has_attn, ffn, 0.0)
-        return (xc3, gi + 1), (conv2, ssd2, k, v)
-
-    (x, _), (conv2, ssd2, ks, vs) = jax.lax.scan(
-        group_body, (x, jnp.int32(0)), (groups, state[0], state[1]))
-    kpool, vpool = _write_pools(ctx, kpool, vpool, ks, vs)
-    return x, (conv2, ssd2), kpool, vpool
-
-
-# ========================================================== pipeline driver
-
-def _batch_specs(topo: Topology):
-    """(manual axis_names, token spec, batch axes outside the stage axis)."""
-    pod_axes = tuple(a for a in topo.batch_axes if a != topo.stage_axis)
-    manual = set(pod_axes) | {topo.stage_axis}
-    return manual, pod_axes
-
-
-def _manual_only(spec: P, manual) -> P:
-    """shard_map in_specs may only name MANUAL axes; auto-axis (TP) sharding
-    flows through from the argument's actual sharding instead."""
-    def keep(entry):
-        if entry is None:
-            return None
-        if isinstance(entry, (tuple, list)):
-            kept = tuple(a for a in entry if a in manual)
-            return kept if kept else None
-        return entry if entry in manual else None
-    return P(*(keep(e) for e in spec))
-
-
-def _manual_tree(tree, manual):
-    return jax.tree.map(lambda p: _manual_only(p, manual), tree,
-                        is_leaf=lambda x: isinstance(x, P))
-
+# ---------------------------------------------------------------- the driver
 
 def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
                      plan: PipelinePlan, topo: Topology, *,
@@ -692,11 +68,11 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     F // C chunks; F must be chunk-aligned for the pipeline path).
     """
     if plan.mode == "gpipe":
-        return _gpipe_prefill(cfg, staged, tokens, plan, topo)
+        return gpipe_prefill(cfg, staged, tokens, plan, topo)
     n, m, c = plan.num_stages, plan.num_chunks, plan.chunk_len
     lps = plan.layers_per_stage
     st_ax = topo.stage_axis
-    manual, pod_axes = _batch_specs(topo)
+    manual, pod_axes = batch_specs(topo)
     attn_free = cfg.family == "ssm"
     kvh = cfg.num_kv_heads if not attn_free else 1
     hd = cfg.resolved_head_dim if not attn_free else 1
@@ -778,10 +154,9 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         def tick(carry, t):
             x_prev, kpool, vpool, state, x_last = carry
             phase = t - stage
-            active = (phase >= 0) & (phase < m)
-            ctx = _StageCtx(cfg=cfg, plan=plan, topo=topo, stage=stage,
-                            phase=phase, first_half=stage < n // 2,
-                            pair_perm=pair_perm, scale=scale, x_spec=x_spec)
+            ctx = StageCtx(cfg=cfg, plan=plan, topo=topo, stage=stage,
+                           phase=phase, first_half=stage < n // 2,
+                           pair_perm=pair_perm, scale=scale, x_spec=x_spec)
             # ---- input: stage 0 embeds chunk t; others consume the ring buffer
             tc = jnp.clip(t, 0, m - 1)
             if n_front:
@@ -802,13 +177,13 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             x = jax.lax.with_sharding_constraint(x, x_spec)
             # ---- stage compute
             if is_ssm:
-                x_out, state = _ssm_stage_step(ctx, stage_layers, x, state)
+                x_out, state = ssm_stage_step(ctx, stage_layers, x, state)
             elif is_hybrid:
-                x_out, state, kpool, vpool = _hybrid_stage_step(
+                x_out, state, kpool, vpool = hybrid_stage_step(
                     ctx, stage_layers, extra["shared"], x, state, kpool, vpool)
             else:
-                x_out, kpool, vpool = _tfm_stage_step(
-                    ctx, stage_layers, None, x, kpool, vpool, cross=cross)
+                x_out, kpool, vpool = tfm_stage_step(
+                    ctx, stage_layers, x, kpool, vpool, cross=cross)
             # ---- capture the last token's hidden state at the last stage
             take = (stage == n - 1) & (phase == m - 1)
             x_last = jnp.where(take, x_out[:, -1].astype(jnp.float32), x_last)
@@ -832,10 +207,10 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         extra["embeds"] = embeds
 
     specs = stage_param_specs(cfg, plan, topo)
-    sl_specs = _manual_tree(specs["stage_layers"], manual)
+    sl_specs = manual_tree(specs["stage_layers"], manual)
     extra_specs: Params = {}
     if is_hybrid:
-        extra_specs["shared"] = _manual_tree(specs["shared"], manual)
+        extra_specs["shared"] = manual_tree(specs["shared"], manual)
     if is_encdec:
         extra_specs["enc_out"] = P(pod_axes if pod_axes else None, None, None)
     if "embeds" in extra:
@@ -845,8 +220,8 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
 
     x_last = compat.shard_map(
         body, mesh=topo.mesh,
-        in_specs=(sl_specs, _manual_only(specs["embed"], manual),
-                  _manual_only(specs["final_norm"], manual),
+        in_specs=(sl_specs, manual_only(specs["embed"], manual),
+                  manual_only(specs["final_norm"], manual),
                   extra_specs, tok_spec),
         out_specs=out_spec, axis_names=manual, check_vma=False,
     )(staged["stage_layers"], staged["embed"], staged["final_norm"],
@@ -862,70 +237,4 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         logits, NamedSharding(topo.mesh, P(
             tuple(a for a in topo.batch_axes if a != topo.stage_axis) or None,
             None, topo.tp_axis)))
-    return logits[:, 0]
-
-
-# ------------------------------------------------------------------- gpipe
-
-def _gpipe_prefill(cfg: ModelConfig, staged: Params, tokens: jax.Array,
-                   plan: PipelinePlan, topo: Topology) -> jax.Array:
-    """GPipe baseline: microbatch pipeline over the BATCH dim; every
-    microbatch carries the full sequence (full quadratic attention per tick,
-    no KV pool — the paper's Fig. 2(a) comparison point)."""
-    n, m = plan.num_stages, plan.num_chunks
-    st_ax = topo.stage_axis
-    manual, pod_axes = _batch_specs(topo)
-    dt = jnp.dtype(cfg.dtype)
-    ring_perm = [(i, (i + 1) % n) for i in range(n)]
-    lps = plan.layers_per_stage
-
-    def body(stage_layers, embed, final_norm, tokens):
-        stage = jax.lax.axis_index(st_ax)
-        stage_layers = jax.tree.map(lambda a: jnp.squeeze(a, 0), stage_layers)
-        b, s_full = tokens.shape
-        assert b % m == 0, f"gpipe: batch {b} must divide into {m} microbatches"
-        bm = b // m
-        x0 = jnp.zeros((bm, s_full, cfg.d_model), dt)
-        out0 = jnp.zeros((b, cfg.d_model), jnp.float32)
-
-        def tick(carry, t):
-            x_prev, out = carry
-            phase = t - stage
-            mb = jnp.clip(t, 0, m - 1)
-            tok_mb = jax.lax.dynamic_slice(tokens, (mb * bm, 0), (bm, s_full))
-            x_emb = jnp.take(embed, tok_mb, axis=0).astype(dt)
-            if cfg.embedding_multiplier != 1.0:
-                x_emb = x_emb * cfg.embedding_multiplier
-            x = jnp.where(stage == 0, x_emb, x_prev)
-
-            def layer_body(xc, lp):
-                xo, _, _ = T.layer_apply(cfg, lp, xc, impl="xla_flash", topo=None)
-                return xo, None
-            x_out, _ = jax.lax.scan(layer_body, x, stage_layers)
-            take = (stage == n - 1) & (phase >= 0) & (phase < m)
-            mbp = jnp.clip(phase, 0, m - 1)
-            upd = jnp.where(take, x_out[:, -1].astype(jnp.float32),
-                            jax.lax.dynamic_slice(out, (mbp * bm, 0),
-                                                  (bm, cfg.d_model)))
-            out = jax.lax.dynamic_update_slice(out, upd, (mbp * bm, 0))
-            x_next = jax.lax.ppermute(x_out, st_ax, ring_perm)
-            return (x_next, out), None
-
-        (xf, out), _ = jax.lax.scan(tick, (x0, out0), jnp.arange(m + n - 1))
-        return jax.lax.psum(jnp.where(stage == n - 1, out, 0.0), st_ax)
-
-    specs = stage_param_specs(cfg, plan, topo)
-    sl_specs = _manual_tree(specs["stage_layers"], manual)
-    tok_spec = P(pod_axes if pod_axes else None, None)
-    x_last = compat.shard_map(
-        body, mesh=topo.mesh,
-        in_specs=(sl_specs, _manual_only(specs["embed"], manual),
-                  _manual_only(specs["final_norm"], manual), tok_spec),
-        out_specs=tok_spec, axis_names=manual, check_vma=False,
-    )(staged["stage_layers"], staged["embed"], staged["final_norm"], tokens)
-
-    x_last = L.rms_norm(x_last[:, None, :].astype(dt), staged["final_norm"],
-                        cfg.norm_eps)
-    w = staged["embed"].T if ("lm_head" not in staged) else staged["lm_head"]
-    logits = L.unembed_logits(x_last, w, scale=cfg.logits_scaling)
     return logits[:, 0]

@@ -1,0 +1,130 @@
+"""Remote KV access: the spill / fetch / qship collectives (DESIGN.md §3.4).
+
+MBKR spills chunks with index >= p2 at creation: one ``ppermute`` by N/2 (the
+fixed cross-half stage pairing) moves their KV to the paired stage's host
+slots. At attention time the debtor reaches its remote prefix one of two ways:
+
+- ``fetch``  (paper-faithful): re-read each spilled chunk from the pair, one
+  chunk-layer slice per ppermute, streamed through the online-softmax combine
+  (residency = 1 chunk-layer). Traffic O(n_remote * kv).
+- ``qship``  (beyond-paper, TPU-native): ship the QUERY to the creditor,
+  which computes partial flash attention over the chunks it hosts and ships
+  back (acc, lse). Traffic O(q + out): cheaper whenever >= 2 chunks are
+  remote under GQA, and one round-trip instead of n_remote transfers.
+
+All attention math inside both paths routes through the pluggable backend
+(``core.attention``), so fetch/qship work identically under jnp and pallas.
+The functions take the per-trace stage context (``core.stagestep.StageCtx``)
+duck-typed to keep this layer import-light.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.attention import (AttentionBackend, State, attn_combine,
+                                  attn_init, pool_scan)
+
+
+def pair_phase(ctx) -> jax.Array:
+    """The chunk index my PAIR stage is computing this tick."""
+    n2 = ctx.plan.pair_shift
+    return jnp.where(ctx.first_half, ctx.phase - n2, ctx.phase + n2)
+
+
+def spill_permute(ctx, kv: jax.Array) -> jax.Array:
+    """Cross-half spill transfer. int8 mode: the WIRE carries the int8
+    payload + one fp32 scale per (tensor, layer, kv head) — half the spill
+    bytes; the pool stays in model dtype (dequantized at the creditor)."""
+    plan = ctx.plan
+    if plan.spill_dtype != "int8":
+        return jax.lax.ppermute(kv, ctx.topo.stage_axis, ctx.pair_perm)
+    amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=(-3, -1), keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale), -127, 127)
+    q8 = jax.lax.ppermute(q.astype(jnp.int8), ctx.topo.stage_axis, ctx.pair_perm)
+    s = jax.lax.ppermute(scale, ctx.topo.stage_axis, ctx.pair_perm)
+    return (q8.astype(jnp.float32) * s).astype(kv.dtype)
+
+
+def host_table(ctx) -> jax.Array:
+    """chunk -> host slot table for MY half of the pairing."""
+    plan = ctx.plan
+    return jnp.where(ctx.first_half,
+                     jnp.asarray(plan.host_slot_a),
+                     jnp.asarray(plan.host_slot_b))
+
+
+def fetch_remote(ctx, backend: AttentionBackend, qg, kpool_l, vpool_l,
+                 st: State) -> State:
+    """Paper-faithful fetch: stream one chunk-layer per ppermute through the
+    online-softmax combine. The slot *I* host for my pair at index j holds —
+    after the symmetric cross-half exchange — my own chunk j."""
+    plan = ctx.plan
+    host_tbl = host_table(ctx)
+
+    def fetch_body(carry, j):
+        stc = carry
+        slot = host_tbl[j]
+        ks = jax.lax.dynamic_index_in_dim(kpool_l, slot, 0, keepdims=False)
+        vs = jax.lax.dynamic_index_in_dim(vpool_l, slot, 0, keepdims=False)
+        pk = jax.lax.ppermute(jnp.stack([ks, vs]), ctx.topo.stage_axis,
+                              ctx.pair_perm)
+        stc = backend.chunk_block(qg, pk[0], pk[1], j < ctx.phase,
+                                  ctx.scale, stc)
+        return stc, None
+
+    st, _ = jax.lax.scan(fetch_body, st,
+                         jnp.arange(plan.p2, plan.num_chunks))
+    return st
+
+
+def qship_remote(ctx, backend: AttentionBackend, qg, kpool_l, vpool_l,
+                 st: State) -> State:
+    """Beyond-paper qship: ship my Q to the creditor, which runs the backend
+    over ONLY the host slots it holds for me, then ships back (m, l, acc)."""
+    plan = ctx.plan
+    b, c, kvh, g, d = qg.shape
+    sd = jnp.dtype(plan.ship_dtype)
+    q_pair = jax.lax.ppermute(qg.astype(sd), ctx.topo.stage_axis,
+                              ctx.pair_perm).astype(qg.dtype)
+    host_chunk = jnp.where(ctx.first_half,
+                           jnp.asarray(plan.slot_host_chunk_a),
+                           jnp.asarray(plan.slot_host_chunk_b))
+    pair_limit = pair_phase(ctx)  # pair needs chunks [p2, pair_phase)
+    st_r = attn_init(b, c, kvh, g, d)
+    # creditor-side scan visits ONLY the host slots (compute win)
+    st_r = pool_scan(backend, q_pair, kpool_l, vpool_l, host_chunk,
+                     pair_limit, ctx.scale, st_r,
+                     slots=plan.host_slots_used)
+    # ship (m, l) packed fp32 + acc in the wire dtype
+    ml = jax.lax.ppermute(jnp.stack([st_r[0], st_r[1]]),
+                          ctx.topo.stage_axis, ctx.pair_perm)
+    a_r = jax.lax.ppermute(st_r[2].astype(sd), ctx.topo.stage_axis,
+                           ctx.pair_perm).astype(jnp.float32)
+    return attn_combine(st, (ml[0], ml[1], a_r))
+
+
+def write_pools(ctx, kpool, vpool, stage_k, stage_v) -> Tuple[jax.Array, jax.Array]:
+    """End-of-tick pool writes: own store (phase < p2) or cross-half spill."""
+    plan = ctx.plan
+    phase, active = ctx.phase, (ctx.phase >= 0) & (ctx.phase < plan.num_chunks)
+    pidx = jnp.clip(phase, 0, plan.num_chunks - 1)
+
+    own_tbl = jnp.asarray(plan.own_slot)
+    own_slot = jnp.where(active & (phase < plan.p2), own_tbl[pidx], plan.scratch)
+    kpool = jax.lax.dynamic_update_index_in_dim(kpool, stage_k, own_slot, 0)
+    vpool = jax.lax.dynamic_update_index_in_dim(vpool, stage_v, own_slot, 0)
+
+    if plan.p2 < plan.num_chunks and plan.mode == "mocap":
+        spill = spill_permute(ctx, jnp.stack([stage_k, stage_v]))
+        pp = pair_phase(ctx)  # the chunk index my pair just computed
+        host_tbl = host_table(ctx)
+        ppc = jnp.clip(pp, 0, plan.num_chunks - 1)
+        hslot = jnp.where((pp >= plan.p2) & (pp < plan.num_chunks),
+                          host_tbl[ppc], plan.scratch)
+        kpool = jax.lax.dynamic_update_index_in_dim(kpool, spill[0], hslot, 0)
+        vpool = jax.lax.dynamic_update_index_in_dim(vpool, spill[1], hslot, 0)
+    return kpool, vpool

@@ -1,0 +1,211 @@
+"""Per-family stage programs: what ONE stage computes in ONE pipeline tick.
+
+Three programs share the ``StageCtx`` contract and the backend-routed
+``attend_chunk`` attention composition (own-pool prefix + remote prefix +
+causal self block):
+
+- ``tfm_stage_step``     transformer families (dense / moe / vlm / encdec
+                         decoder with optional cross-attention),
+- ``ssm_stage_step``     Mamba2: conv/SSD state carried tick-to-tick,
+- ``hybrid_stage_step``  Zamba2: SSM groups + a shared attention block whose
+                         KV participates in MBKR (one "layer" per group).
+
+New model families plug in here without touching the driver (DESIGN.md §2.4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import remote
+from repro.core.attention import (attn_finish, attn_init, get_backend,
+                                  group_queries, pool_scan)
+from repro.core.plan import PipelinePlan
+from repro.core.staging import _hyb_scfg
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.topology import Topology
+
+Params = Dict[str, Any]
+
+
+@dataclass
+class StageCtx:
+    """Per-trace context threaded through the tick body."""
+    cfg: ModelConfig
+    plan: PipelinePlan
+    topo: Topology
+    stage: jax.Array          # my stage id (traced)
+    phase: jax.Array          # my chunk index this tick (traced; may be OOR)
+    first_half: jax.Array     # bool: stage < N/2
+    pair_perm: Sequence[Tuple[int, int]]
+    scale: float
+    x_spec: Any = P(None, None, None)  # residual-stream sharding (SP variant)
+
+
+def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
+                 k_new: jax.Array, v_new: jax.Array,
+                 kpool: jax.Array, vpool: jax.Array) -> jax.Array:
+    """Full MOCAP attention for one layer of the current chunk:
+    own-pool prefix + (MBKR) remote prefix + causal self block, all through
+    the plan's attention backend.
+    q [B,C,H,D]; k_new/v_new [B,C,K,D]; pools [slots+1, lps, B, C, K, D]."""
+    plan = ctx.plan
+    backend = get_backend(plan.attn_backend)
+    b, c, h, d = q.shape
+    kvh = k_new.shape[2]
+    qg = group_queries(q, kvh)
+    st = attn_init(b, c, kvh, h // kvh, d)
+
+    kpool_l = jax.lax.dynamic_index_in_dim(kpool, l_idx, axis=1, keepdims=False)
+    vpool_l = jax.lax.dynamic_index_in_dim(vpool, l_idx, axis=1, keepdims=False)
+
+    # 1. own local prefix: chunks j < min(phase, p2)
+    limit = jnp.minimum(ctx.phase, plan.p2)
+    st = pool_scan(backend, qg, kpool_l, vpool_l, plan.slot_own_chunk,
+                   limit, ctx.scale, st)
+
+    # 2. remote prefix: chunks p2 <= j < phase live at my pair
+    if plan.p2 < plan.num_chunks and plan.mode == "mocap":
+        if plan.remote_attn == "fetch":
+            st = remote.fetch_remote(ctx, backend, qg, kpool_l, vpool_l, st)
+        else:
+            st = remote.qship_remote(ctx, backend, qg, kpool_l, vpool_l, st)
+
+    # 3. self block (causal)
+    st = backend.self_block(qg, k_new, v_new, ctx.scale, st)
+    return attn_finish(st, q.dtype)
+
+
+# --------------------------------------------------------- transformer step
+
+def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
+                   kpool, vpool, *, cross: Optional[Tuple] = None):
+    """Apply this stage's layers to chunk ``ctx.phase``. Returns
+    (x_out, kpool, vpool). ``cross`` = (enc_xk, enc_xv) [lps,B,F,K,D] for
+    whisper decoder stages."""
+    cfg, plan = ctx.cfg, ctx.plan
+    b, c, dm = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = jnp.clip(ctx.phase, 0, plan.num_chunks - 1) * plan.chunk_len \
+        + jnp.arange(c)[None, :]
+    cos, sin = L.rope_angles(positions, hd, cfg.rope_theta)
+
+    def layer_body(carry, xs):
+        xc, li = carry
+        lp = xs if cross is None else xs[0]
+        hn = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bcd,dq->bcq", hn, lp["wq"]).reshape(b, c, h, hd)
+        k = jnp.einsum("bcd,dq->bcq", hn, lp["wk"]).reshape(b, c, kvh, hd)
+        v = jnp.einsum("bcd,dq->bcq", hn, lp["wv"]).reshape(b, c, kvh, hd)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, lp["q_norm"], cfg.norm_eps)
+            k = L.rms_norm(k, lp["k_norm"], cfg.norm_eps)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        q = jax.lax.with_sharding_constraint(q, P(None, None, ctx.topo.tp_axis, None))
+        if isinstance(ctx.topo.tp_axis, tuple):
+            kv_ax = ctx.topo.tp_axis[0]
+            k = jax.lax.with_sharding_constraint(k, P(None, None, kv_ax, None))
+            v = jax.lax.with_sharding_constraint(v, P(None, None, kv_ax, None))
+        att = attend_chunk(ctx, li, q, k, v, kpool, vpool)
+        xc = xc + cfg.residual_multiplier * jnp.einsum(
+            "bcq,qd->bcd", att.reshape(b, c, h * hd), lp["wo"])
+        if cross is not None:
+            xk_l = jax.lax.dynamic_index_in_dim(cross[0], li, 0, keepdims=False)
+            xv_l = jax.lax.dynamic_index_in_dim(cross[1], li, 0, keepdims=False)
+            hnx = L.rms_norm(xc, lp["lnx"], cfg.norm_eps)
+            qx = jnp.einsum("bcd,dq->bcq", hnx, lp["xwq"]).reshape(b, c, h, hd)
+            attx = L.flash_attention_xla(qx, xk_l, xv_l, causal_offset=None)
+            xc = xc + jnp.einsum("bcq,qd->bcd", attx.reshape(b, c, h * hd), lp["xwo"])
+        ep_axis = ctx.topo.tp_axis if (cfg.moe is not None and isinstance(
+            ctx.topo.tp_axis, tuple)) else None
+        if ep_axis is not None:
+            # EP dispatch gathers tokens arbitrarily: replicate x first
+            xc = jax.lax.with_sharding_constraint(xc, P(None, None, None))
+        xc = T.ffn_block(cfg, lp, xc, topo=None, ep_axis=ep_axis)
+        # kv_split: keep the residual stream SEQUENCE-SHARDED between layers
+        # (Megatron-SP): psums become reduce-scatters and the stage-boundary
+        # ring permute moves C/tp tokens per chip instead of C
+        xc = jax.lax.with_sharding_constraint(xc, ctx.x_spec)
+        return (xc, li + 1), (k, v)
+
+    xs = layers if cross is None else (layers,)
+    (x, _), (ks, vs) = jax.lax.scan(layer_body, (x, jnp.int32(0)), xs)
+    kpool, vpool = remote.write_pools(ctx, kpool, vpool, ks, vs)
+    return x, kpool, vpool
+
+
+# --------------------------------------------------------------- SSM step
+
+def ssm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array, state):
+    """Mamba2 stage: lps blocks; SSM/conv state carried tick-to-tick and
+    zeroed at phase 0 (start of the request)."""
+    cfg = ctx.cfg
+    fresh = ctx.phase <= 0
+
+    def layer_body(xc, xs):
+        lp, conv_st, ssd_st = xs
+        conv_st = jnp.where(fresh, jnp.zeros_like(conv_st), conv_st)
+        ssd_st = jnp.where(fresh, jnp.zeros_like(ssd_st), ssd_st)
+        xo, st2 = S.block_apply(cfg, lp, xc, state={"conv": conv_st, "ssd": ssd_st})
+        return xo, (st2["conv"], st2["ssd"])
+
+    x, (conv2, ssd2) = jax.lax.scan(layer_body, x, (layers, state[0], state[1]))
+    return x, (conv2, ssd2)
+
+
+# ------------------------------------------------------------- hybrid step
+
+def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
+                      x: jax.Array, state, kpool, vpool):
+    """Zamba2 stage = up to lps groups of (pg Mamba2 + shared attn block).
+    The shared block's KV participates in MBKR (1 'layer' per group)."""
+    cfg, plan = ctx.cfg, ctx.plan
+    scfg = _hyb_scfg(cfg)
+    b, c, dm = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    n_groups = cfg.hybrid.num_groups
+    fresh = ctx.phase <= 0
+    positions = jnp.clip(ctx.phase, 0, plan.num_chunks - 1) * plan.chunk_len \
+        + jnp.arange(c)[None, :]
+    cos, sin = L.rope_angles(positions, hd, cfg.rope_theta)
+
+    def group_body(carry, xs):
+        xc, gi = carry
+        g_lp, conv_st, ssd_st = xs
+
+        def mamba_body(xm, ms):
+            lp, cst, sst = ms
+            cst = jnp.where(fresh, jnp.zeros_like(cst), cst)
+            sst = jnp.where(fresh, jnp.zeros_like(sst), sst)
+            xo, st2 = S.block_apply(cfg, lp, xm, state={"conv": cst, "ssd": sst})
+            return xo, (st2["conv"], st2["ssd"])
+
+        xc2, (conv2, ssd2) = jax.lax.scan(mamba_body, xc, (g_lp, conv_st, ssd_st))
+        # shared attention: only for REAL groups (global group id < n_groups)
+        gid = ctx.stage * plan.layers_per_stage + gi
+        has_attn = gid < n_groups
+        hn = L.rms_norm(xc2, shared["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bcd,dq->bcq", hn, shared["wq"]).reshape(b, c, h, hd)
+        k = jnp.einsum("bcd,dq->bcq", hn, shared["wk"]).reshape(b, c, kvh, hd)
+        v = jnp.einsum("bcd,dq->bcq", hn, shared["wv"]).reshape(b, c, kvh, hd)
+        q = L.apply_rope(q, cos, sin)
+        k = L.apply_rope(k, cos, sin)
+        att = attend_chunk(ctx, gi, q, k, v, kpool, vpool)
+        upd = jnp.einsum("bcq,qd->bcd", att.reshape(b, c, h * hd), shared["wo"])
+        xc3 = xc2 + jnp.where(has_attn, upd, 0.0)
+        ffn = T.ffn_block(scfg, shared, xc3, topo=None) - xc3  # isolate update
+        xc3 = xc3 + jnp.where(has_attn, ffn, 0.0)
+        return (xc3, gi + 1), (conv2, ssd2, k, v)
+
+    (x, _), (conv2, ssd2, ks, vs) = jax.lax.scan(
+        group_body, (x, jnp.int32(0)), (groups, state[0], state[1]))
+    kpool, vpool = remote.write_pools(ctx, kpool, vpool, ks, vs)
+    return x, (conv2, ssd2), kpool, vpool

@@ -1,0 +1,221 @@
+"""Parameter staging: flat model params -> per-stage stacked params + specs.
+
+Sits between the model definitions (``repro.models``) and the pipeline
+driver: restacks flat ``[L, ...]`` layer params into ``[N, lps, ...]``
+(zero-padded — zero-param transformer/SSM blocks are exact identities via the
+residual), derives the matching PartitionSpecs for the mesh topology, and
+implements the two exact zero-padding transforms the kv_split perf variant
+needs (query-head padding per kv group, routed-expert padding for EP).
+See DESIGN.md §2 (layering) and §3 (mesh mapping).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.plan import PipelinePlan
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.topology import Topology
+
+Params = Dict[str, Any]
+
+
+def stage_params(cfg: ModelConfig, params: Params, plan: PipelinePlan) -> Params:
+    """Restack flat [L, ...] layer params into [N, lps, ...] (zero-padded:
+    zero-param transformer/SSM blocks are exact identities via the residual).
+    Embedding / head / norms are replicated across stages (SPMD: every stage
+    computes the masked embed; only stage 0's result is used)."""
+    n, lps = plan.num_stages, plan.layers_per_stage
+
+    def restack(tree, nl):
+        def one(a):
+            pad = n * lps - nl
+            if pad:
+                a = jnp.concatenate([a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
+            return a.reshape((n, lps) + a.shape[1:])
+        return jax.tree.map(one, tree)
+
+    if cfg.family == "hybrid":
+        h = cfg.hybrid
+        pg = h.ssm_per_group
+        groups = params["mamba_groups"]        # [G, pg, ...]
+        tail = params["mamba_tail"]            # [tail, ...]
+        # tail becomes pseudo-group G (pad its layer dim to pg)
+        def fold(g, t):
+            t = jnp.concatenate(
+                [t, jnp.zeros((pg - t.shape[0],) + t.shape[1:], t.dtype)])[None]
+            g = jnp.concatenate([g, t])        # [G+1, pg, ...]
+            pad = n * plan.layers_per_stage - g.shape[0]
+            if pad:
+                g = jnp.concatenate([g, jnp.zeros((pad,) + g.shape[1:], g.dtype)])
+            return g.reshape((n, plan.layers_per_stage) + g.shape[1:])
+        staged_groups = jax.tree.map(fold, groups, tail)
+        return {
+            "embed": params["embed"], "final_norm": params["final_norm"],
+            "stage_layers": staged_groups, "shared": params["shared"],
+        }
+    if cfg.family == "encdec":
+        out = {
+            "embed": params["embed"], "final_norm": params["final_norm"],
+            "stage_layers": restack(params["dec_layers"], cfg.num_layers),
+            "enc_layers": params["enc_layers"], "enc_norm": params["enc_norm"],
+        }
+        return out
+    out = {
+        "embed": params["embed"], "final_norm": params["final_norm"],
+        "stage_layers": restack(params["layers"], cfg.num_layers),
+    }
+    if "lm_head" in params:
+        out["lm_head"] = params["lm_head"]
+    return out
+
+
+def stage_param_specs(cfg: ModelConfig, plan: PipelinePlan, topo: Topology) -> Params:
+    """PartitionSpecs for ``stage_params`` output: stage dim over the stage
+    axis, TP dims over the model axis, embed d-sharded (gather stays local)."""
+    st, md = topo.stage_axis, topo.tp_axis
+
+    def lift(spec: P) -> P:
+        return P(st, None, *spec[1:])  # [L,...] -> [N, lps, ...]
+
+    if cfg.family == "hybrid":
+        bs = S.block_specs(cfg, fsdp=False)
+        g_specs = jax.tree.map(lambda p: P(st, None, None, *p[1:]), bs,
+                               is_leaf=lambda x: isinstance(x, P))
+        shared = jax.tree.map(
+            lambda p: P(*p[1:]), T.specs(_hyb_scfg(cfg), fsdp=False)["layers"],
+            is_leaf=lambda x: isinstance(x, P))
+        out = {"embed": P(None, md), "final_norm": P(None),
+               "stage_layers": g_specs, "shared": shared}
+        return _rename_model(out, md)
+    if cfg.family == "encdec":
+        from repro.models import whisper as W
+        ws = W.specs(cfg, fsdp=False)
+        dec = jax.tree.map(lift, ws["dec_layers"], is_leaf=lambda x: isinstance(x, P))
+        out = {"embed": P(None, md), "final_norm": P(None),
+               "stage_layers": dec, "enc_layers": ws["enc_layers"],
+               "enc_norm": P(None)}
+        return _rename_model(out, md)
+    base = T.specs(cfg, fsdp=False)["layers"] if cfg.family != "ssm" \
+        else S.block_specs(cfg, fsdp=False)
+    layers = jax.tree.map(lift, base, is_leaf=lambda x: isinstance(x, P))
+    out = {"embed": P(None, md), "final_norm": P(None), "stage_layers": layers}
+    if not cfg.tie_embeddings and cfg.family in ("dense", "moe", "vlm"):
+        out["lm_head"] = P(None, md)
+    out = _rename_model(out, md)
+    if isinstance(md, tuple) and cfg.family in ("dense", "moe", "vlm"):
+        # K/V projections shard by KV HEAD only (replicated over "qg") so the
+        # [B,C,kvh,hd] reshape keeps full head_dim per chip (no hd split)
+        for k in ("wk", "wv"):
+            out["stage_layers"][k] = P(topo.stage_axis, None, None, md[0])
+        if cfg.moe is not None:
+            # EXPERT parallelism: experts over the full TP axis, FFN local
+            for k in ("e_wg", "e_wu", "e_wd"):
+                out["stage_layers"][k] = P(topo.stage_axis, None, md, None, None)
+    return out
+
+
+def batch_specs(topo: Topology):
+    """(manual shard_map axis_names, batch axes outside the stage axis)."""
+    pod_axes = tuple(a for a in topo.batch_axes if a != topo.stage_axis)
+    manual = set(pod_axes) | {topo.stage_axis}
+    return manual, pod_axes
+
+
+def manual_only(spec: P, manual) -> P:
+    """shard_map in_specs may only name MANUAL axes; auto-axis (TP) sharding
+    flows through from the argument's actual sharding instead."""
+    def keep(entry):
+        if entry is None:
+            return None
+        if isinstance(entry, (tuple, list)):
+            kept = tuple(a for a in entry if a in manual)
+            return kept if kept else None
+        return entry if entry in manual else None
+    return P(*(keep(e) for e in spec))
+
+
+def manual_tree(tree, manual):
+    return jax.tree.map(lambda p: manual_only(p, manual), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _hyb_scfg(cfg: ModelConfig) -> ModelConfig:
+    from repro.models.hybrid import T_single_cfg
+    return T_single_cfg(cfg)
+
+
+def _rename_model(tree, tp_axis):
+    """Model specs hardcode the "model" axis; rename to the topology's TP
+    axis (possibly the split ("kv","qg") view)."""
+    if tp_axis == "model":
+        return tree
+
+    def one(spec: P) -> P:
+        return P(*(tp_axis if e == "model" else e for e in spec))
+    return jax.tree.map(one, tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def kv_split_axes(cfg: ModelConfig, tp: int):
+    """Factor the TP degree into (kv, qg) so attention shards by kv head and
+    query group with NO collectives. Returns (kv_ax, qg_ax, padded_g) —
+    padded_g > g means q heads are zero-padded per kv group (wq/wo pads are
+    exact identities). None if kv heads don't divide."""
+    if cfg.attn_free or cfg.num_kv_heads == 0:
+        return None
+    kvh, h = cfg.num_kv_heads, cfg.num_heads
+    g = h // kvh
+    kv_ax = min(kvh, tp)
+    if tp % kv_ax or kvh % kv_ax:
+        return None
+    qg_ax = tp // kv_ax
+    g_pad = -(-g // qg_ax) * qg_ax
+    return kv_ax, qg_ax, g_pad
+
+
+def pad_q_heads(cfg: ModelConfig, params: Params, g_pad: int) -> Tuple[ModelConfig, Params]:
+    """Zero-pad query heads per kv group: H = kvh*g -> kvh*g_pad. Padded
+    heads have zero wq (uniform attention) and zero wo rows (no contribution)
+    — bit-exact with the unpadded model."""
+    from repro.configs.base import replace as cfg_replace
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    g = cfg.num_heads // kvh
+    if g_pad == g:
+        return cfg, params
+    lp = dict(params["layers"])
+    L_, d = lp["wq"].shape[0], lp["wq"].shape[1]
+    wq = lp["wq"].reshape(L_, d, kvh, g, hd)
+    wq = jnp.pad(wq, ((0, 0), (0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+    lp["wq"] = wq.reshape(L_, d, kvh * g_pad * hd)
+    wo = lp["wo"].reshape(L_, kvh, g, hd, d)
+    wo = jnp.pad(wo, ((0, 0), (0, 0), (0, g_pad - g), (0, 0), (0, 0)))
+    lp["wo"] = wo.reshape(L_, kvh * g_pad * hd, d)
+    out = dict(params)
+    out["layers"] = lp
+    return cfg_replace(cfg, num_heads=kvh * g_pad), out
+
+
+def pad_experts(cfg: ModelConfig, params: Params, e_pad: int) -> Tuple[ModelConfig, Params]:
+    """Zero-pad routed experts to ``e_pad`` for expert parallelism. Padded
+    experts' router logits are masked (MoEConfig.num_real_experts), so they
+    are never routable — bit-exact."""
+    import dataclasses
+    from repro.configs.base import replace as cfg_replace
+    m = cfg.moe
+    if m is None or e_pad == m.num_experts:
+        return cfg, params
+    e0 = m.num_experts
+    lp = dict(params["layers"])
+    lp["router"] = jnp.pad(lp["router"], ((0, 0), (0, 0), (0, e_pad - e0)))
+    for k in ("e_wg", "e_wu", "e_wd"):
+        lp[k] = jnp.pad(lp[k], ((0, 0), (0, e_pad - e0)) + ((0, 0),) * (lp[k].ndim - 2))
+    out = dict(params)
+    out["layers"] = lp
+    moe2 = dataclasses.replace(m, num_experts=e_pad,
+                               num_real_experts=m.real_experts)
+    return cfg_replace(cfg, moe=moe2), out

@@ -27,9 +27,14 @@ DEFAULT_BLOCK_K = 128
 NEG_INF = float(-1e30)
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *refs,
                  scale: float, causal_offset: int, kv_len: int,
-                 block_q: int, block_k: int):
+                 block_q: int, block_k: int, return_state: bool = False):
+    if return_state:  # extra outputs: max / denom / fp32 accumulator
+        mo_ref, lo_ref, ao_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        mo_ref = lo_ref = ao_ref = None
+        m_ref, l_ref, acc_ref = refs
     qb = pl.program_id(2)
     kb = pl.program_id(3)
     nk = pl.num_programs(3)
@@ -72,6 +77,10 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _finish():
         l = jnp.maximum(l_ref[...], 1e-30)
         o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        if mo_ref is not None:
+            mo_ref[0, 0, :] = m_ref[...]
+            lo_ref[0, 0, :] = l_ref[...]
+            ao_ref[0, :, 0, :] = acc_ref[...]
 
 
 def chunk_attention_pallas(
@@ -79,14 +88,21 @@ def chunk_attention_pallas(
     causal_offset: int = 0, scale: Optional[float] = None,
     kv_len: Optional[int] = None,
     block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
-    interpret: bool = False,
-) -> jax.Array:
+    interpret: bool = False, return_state: bool = False,
+):
     """q [B, C, H, D]; k, v [B, T, KVH, D] (T = prefix + C, padded to a
     multiple of block_k). Returns [B, C, H, D].
 
     ``causal_offset``: absolute position of q[0] minus the position of k[0]
     (= prefix length for chunked prefill). ``kv_len``: number of VALID kv
     positions (defaults to T; use when T includes padding).
+
+    ``return_state``: also return the online-softmax residuals — ``(m, l)
+    [B, H, C]`` (fp32 running max / denominator) and the UNNORMALIZED fp32
+    accumulator ``acc [B, C, H, D]`` straight from VMEM scratch — so the
+    caller can COMBINE this kernel's result with other partial-attention
+    states at full precision even when the normalized output is bf16. This
+    is the seam the pipeline's pluggable attention backend plugs into.
     """
     b, c, h, d = q.shape
     t, kvh = k.shape[1], k.shape[2]
@@ -101,8 +117,19 @@ def chunk_attention_pallas(
     grid = (b, h, nq, nk)
     kernel = functools.partial(
         _attn_kernel, scale=scale, causal_offset=causal_offset, kv_len=kv_len,
-        block_q=block_q, block_k=block_k)
-    return pl.pallas_call(
+        block_q=block_q, block_k=block_k, return_state=return_state)
+    out_shape = jax.ShapeDtypeStruct((b, c, h, d), q.dtype)
+    out_spec = pl.BlockSpec((1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0))
+    out_shapes = [out_shape]
+    out_specs = [out_spec]
+    if return_state:
+        ml_spec = pl.BlockSpec((1, 1, block_q), lambda bi, hi, qi, ki: (bi, hi, qi))
+        acc_spec = pl.BlockSpec((1, block_q, 1, d),
+                                lambda bi, hi, qi, ki: (bi, qi, hi, 0))
+        out_shapes += [jax.ShapeDtypeStruct((b, h, c), jnp.float32)] * 2
+        out_shapes += [jax.ShapeDtypeStruct((b, c, h, d), jnp.float32)]
+        out_specs += [ml_spec, ml_spec, acc_spec]
+    res = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -110,8 +137,8 @@ def chunk_attention_pallas(
             pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
             pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, c, h, d), q.dtype),
+        out_specs=out_specs if return_state else out_spec,
+        out_shape=out_shapes if return_state else out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_q,), jnp.float32),      # running max
             pltpu.VMEM((block_q,), jnp.float32),      # running denom
@@ -119,3 +146,4 @@ def chunk_attention_pallas(
         ],
         interpret=interpret,
     )(q, k, v)
+    return tuple(res) if return_state else res

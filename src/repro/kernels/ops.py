@@ -34,12 +34,21 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-@partial(jax.jit, static_argnames=("causal_offset", "scale", "block_q", "block_k"))
+@partial(jax.jit, static_argnames=("causal_offset", "scale", "block_q",
+                                   "block_k", "return_state"))
 def chunk_attention(q, k, v, *, causal_offset: int = 0,
                     scale: Optional[float] = None,
                     block_q: int = _ca.DEFAULT_BLOCK_Q,
-                    block_k: int = _ca.DEFAULT_BLOCK_K):
-    """Chunked-prefill flash attention (MOCAP hot spot). See chunk_attn.py."""
+                    block_k: int = _ca.DEFAULT_BLOCK_K,
+                    return_state: bool = False):
+    """Chunked-prefill flash attention (MOCAP hot spot). See chunk_attn.py.
+
+    ``return_state=True`` also returns the fp32 online-softmax residuals
+    ``(m, l) [B, H, C]`` and the unnormalized fp32 accumulator
+    ``acc [B, C, H, D]`` so partial results combine across KV sources at
+    full precision — used by the pipeline's "pallas" attention backend
+    (core.attention).
+    """
     d = q.shape[-1]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     t, c = k.shape[1], q.shape[1]
@@ -50,10 +59,14 @@ def chunk_attention(q, k, v, *, causal_offset: int = 0,
     qp = _pad_to(q, 3, LANE)
     kp = _pad_to(_pad_to(k, 3, LANE), 1, bk)
     vp = _pad_to(_pad_to(v, 3, LANE), 1, bk)
-    out = _ca.chunk_attention_pallas(
+    res = _ca.chunk_attention_pallas(
         qp, kp, vp, causal_offset=causal_offset, scale=scale, kv_len=t,
-        block_q=bq, block_k=bk, interpret=not _on_tpu())
-    return out[..., :d]
+        block_q=bq, block_k=bk, interpret=not _on_tpu(),
+        return_state=return_state)
+    if return_state:
+        out, m, l, acc = res
+        return out[..., :d], m, l, acc[..., :d]
+    return res[..., :d]
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

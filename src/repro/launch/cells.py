@@ -125,7 +125,7 @@ def _kv_split_topo(cfg, topo: Topology) -> Optional[Topology]:
     Returns None when head counts don't divide (falls back to "auto")."""
     import numpy as np
     from jax.sharding import Mesh
-    from repro.launch.mesh import _axis_kw
+    from repro.compat import axis_types_kw as _axis_kw
     factors = pp.kv_split_axes(cfg, topo.mesh.shape[topo.tp_axis]
                                if not isinstance(topo.tp_axis, tuple)
                                else topo.tp_size)

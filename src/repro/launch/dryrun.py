@@ -31,8 +31,8 @@ SHAPE_NAMES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
-             out_dir: str) -> dict:
-    import jax
+             out_dir: str, attn_backend: str = "jnp") -> dict:
+    from repro import compat
     from repro.configs.base import SHAPES, get_config
     from repro.launch.cells import SkipCell, build_cell
     from repro.launch.mesh import make_topology
@@ -43,22 +43,25 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
     topo = make_topology(multi_pod=(mesh_kind == "multipod"))
     chips = topo.mesh.size
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "mode": mode,
-           "chips": chips, "ok": False}
+           "chips": chips, "attn_backend": attn_backend, "ok": False}
     t0 = time.time()
     try:
         if mode == "mocap_opt":
             # the beyond-paper optimized lowering (§Perf): kv_split attention
             # + sequence-parallel residual + EP for MoE + compact host scan
             run = RunConfig(num_stages=topo.num_stages,
-                            attn_sharding="kv_split")
+                            attn_sharding="kv_split",
+                            attn_backend=attn_backend)
             cell = build_cell(arch, shape_name, topo, mode="mocap", run=run)
         else:
-            cell = build_cell(arch, shape_name, topo, mode=mode)
+            run = RunConfig(num_stages=topo.num_stages,
+                            attn_backend=attn_backend)
+            cell = build_cell(arch, shape_name, topo, mode=mode, run=run)
     except SkipCell as e:
         rec.update(ok=True, skipped=True, reason=str(e))
         return rec
     try:
-        with jax.set_mesh(cell.meta.get("mesh", topo.mesh)):
+        with compat.set_mesh(cell.meta.get("mesh", topo.mesh)):
             lowered = cell.lower()
             rec["lower_s"] = time.time() - t0
             t1 = time.time()
@@ -111,6 +114,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--jobs", type=int, default=1,
                     help="run cells in parallel subprocesses")
+    ap.add_argument("--attn-backend", default="jnp",
+                    choices=("jnp", "pallas"),
+                    help="attention backend for pipeline modes "
+                         "(core.attention registry)")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args(argv)
 
@@ -126,11 +133,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                     cells.append((arch, shape, mesh, mode))
 
     if args.jobs > 1:
-        return _run_parallel(cells, args.out, args.jobs)
+        return _run_parallel(cells, args.out, args.jobs, args.attn_backend)
 
     failures = 0
     for arch, shape, mesh, mode in cells:
-        rec = run_cell(arch, shape, mesh, mode, args.out)
+        rec = run_cell(arch, shape, mesh, mode, args.out, args.attn_backend)
         path = save(rec, args.out)
         status = ("SKIP" if rec.get("skipped") else
                   "OK" if rec["ok"] else "FAIL")
@@ -141,7 +148,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     return 1 if failures else 0
 
 
-def _run_parallel(cells, out_dir: str, jobs: int) -> int:
+def _run_parallel(cells, out_dir: str, jobs: int,
+                  attn_backend: str = "jnp") -> int:
     procs: List[Tuple[subprocess.Popen, tuple]] = []
     pending = list(cells)
     failures = 0
@@ -150,7 +158,7 @@ def _run_parallel(cells, out_dir: str, jobs: int) -> int:
         arch, shape, mesh, mode = cell
         cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
                "--shape", shape, "--mesh", mesh, "--mode", mode,
-               "--out", out_dir]
+               "--attn-backend", attn_backend, "--out", out_dir]
         return subprocess.Popen(cmd, stdout=subprocess.PIPE,
                                 stderr=subprocess.STDOUT, text=True)
 

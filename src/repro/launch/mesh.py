@@ -17,16 +17,8 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.compat import axis_types_kw as _axis_kw  # shared jax-drift shim
 from repro.models.topology import Topology
-
-try:  # jax >= 0.5: explicit axis types
-    from jax.sharding import AxisType
-except ImportError:  # older jax: meshes are Auto-typed implicitly
-    AxisType = None
-
-
-def _axis_kw(n: int) -> dict:
-    return {"axis_types": (AxisType.Auto,) * n} if AxisType is not None else {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):

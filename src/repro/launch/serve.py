@@ -1,12 +1,15 @@
 """Prefill-only serving driver: the MOCAP engine end-to-end.
 
 Real execution on the available devices (chunked pipeline via shard_map needs
->= 2 devices; run under XLA_FLAGS=--xla_force_host_platform_device_count=8
-for a local demo), or --executor sim for the analytic executor at production
-scale.
+>= 2 devices; on a bare CPU host the driver forces 8 fake host devices
+itself), or --executor sim for the analytic executor at production scale.
 
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
-      python -m repro.launch.serve --arch qwen3-8b --requests 12 --executor jax
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --requests 12 \
+      --executor jax --attn-backend pallas
+
+--attn-backend picks the attention inner loop (core.attention registry):
+"jnp" is the pure-jnp online-softmax reference, "pallas" the flash kernel
+``kernels.ops.chunk_attention`` (interpret mode off-TPU, Mosaic on TPU).
 
 Continuous chunk-level scheduling (cross-request pipelining, repro.sched):
 
@@ -45,6 +48,11 @@ def main(argv=None) -> int:
     ap.add_argument("--num-chunks", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--attn-backend", default="jnp",
+                    choices=("jnp", "pallas"),
+                    help="attention inner-loop backend (core.attention): "
+                         "jnp = pure-jnp reference, pallas = the flash "
+                         "kernel (interpret mode off-TPU)")
     ap.add_argument("--scheduler", default="batch",
                     choices=("batch", "continuous"),
                     help="batch = batch-synchronous PrefillEngine; "
@@ -66,16 +74,21 @@ def main(argv=None) -> int:
                           buckets=(8192, 32768, 131072), partition="lbcp")
         executor = SimExecutor(cfg, cm.TPU_V5E)
     else:
+        from repro import compat
+        compat.ensure_host_devices()
         import jax
         cfg = replace(get_smoke_config(args.arch)
                       if args.preset == "smoke" else get_config(args.arch),
                       dtype="float32")
         n_dev = jax.device_count()
-        stages = max(n_dev // 2, 2)
-        tp = n_dev // stages
+        # tp=2 when the device count affords it AND the jaxlib can partition
+        # auto-TP inside shard_map (old jaxlib falls back to tp=1)
+        tp = compat.max_auto_tp(2) if n_dev >= 4 else 1
+        stages = max(n_dev // tp, 2)
         from repro.launch.mesh import make_test_topology
         topo = make_test_topology(stages, tp)
-        run = RunConfig(num_chunks=args.num_chunks, num_stages=stages)
+        run = RunConfig(num_chunks=args.num_chunks, num_stages=stages,
+                        attn_backend=args.attn_backend)
         plan = pp.build_plan(cfg, stages, args.seq, run)
         model = build_model(cfg)
         params = model.init(jax.random.key(args.seed))

@@ -131,6 +131,8 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
 def analyze_lowered(lowered, compiled, cfg, shape, chips: int,
                     hw: Optional[Dict[str, float]] = None) -> RooflineTerms:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # old jax: one dict per computation
+        cost = cost[0] if cost else {}
     text = compiled.as_text()
     g = hlo_graph.analyze_text(text)
     mem = compiled.memory_analysis()

@@ -1,16 +1,30 @@
 """Optimized-lowering variants (§Perf) stay bit-comparable to the oracle:
-kv_split attention mesh, q-head padding, expert parallelism padding."""
+kv_split attention mesh, q-head padding, expert parallelism padding.
+
+The kv_split lowering NEEDS auto-typed TP axes of size > 1 inside shard_map
+(that is the whole point of the variant), which old jaxlib cannot partition
+("UNIMPLEMENTED: PartitionId...") — those tests skip there with a reason;
+see ``repro.compat.supports_partial_auto_spmd``.
+"""
 import os
 import subprocess
 import sys
 
 import pytest
 
+from repro import compat
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+needs_partial_auto = pytest.mark.skipif(
+    not compat.supports_partial_auto_spmd(),
+    reason="old jaxlib: shard_map with auto TP axes > 1 hits the unpartitionable "
+           "PartitionId SPMD lowering (kv_split requires real TP)")
 
 SNIPPET_PAD_HEADS = r"""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro import compat
+from repro.compat import AxisType
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import pipeline as pp
 from repro.models.api import build_model
@@ -23,8 +37,8 @@ model = build_model(cfg)
 params = model.init(jax.random.key(0))
 toks = jax.random.randint(jax.random.key(1), (2, 64), 0, 128)
 ref = model.forward(params, toks)[:, -1, :]
-mesh = jax.make_mesh((2, 2, 2), ("data", "kv", "qg"),
-                     axis_types=(AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 2, 2), ("data", "kv", "qg"),
+                        axis_types=(AxisType.Auto,)*3)
 topo = Topology(mesh=mesh, tp_axis=("kv", "qg"))
 factors = pp.kv_split_axes(cfg, 4)
 assert factors == (2, 2, 4), factors
@@ -32,7 +46,7 @@ cfg_pad, params_pad = pp.pad_q_heads(cfg, params, factors[2])
 assert cfg_pad.num_heads == 8
 plan = pp.build_plan(cfg_pad, 2, 64, RunConfig(num_chunks=8, num_stages=2))
 staged = pp.stage_params(cfg_pad, params_pad, plan)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     out = jax.jit(lambda st, tk: pp.prefill_pipeline(
         cfg_pad, st, tk, plan, topo))(staged, toks)
 err = float(jnp.max(jnp.abs(out - ref) / (jnp.abs(ref) + 1e-3)))
@@ -42,7 +56,8 @@ print("PASS", err)
 
 SNIPPET_EP = r"""
 import jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro import compat
+from repro.compat import AxisType
 from repro.configs.base import ModelConfig, MoEConfig, RunConfig
 from repro.core import pipeline as pp
 from repro.models.api import build_model
@@ -57,14 +72,14 @@ model = build_model(cfg)
 params = model.init(jax.random.key(0))
 toks = jax.random.randint(jax.random.key(1), (2, 64), 0, 128)
 ref = model.forward(params, toks)[:, -1, :]
-mesh = jax.make_mesh((2, 2, 2), ("data", "kv", "qg"),
-                     axis_types=(AxisType.Auto,)*3)
+mesh = compat.make_mesh((2, 2, 2), ("data", "kv", "qg"),
+                        axis_types=(AxisType.Auto,)*3)
 topo = Topology(mesh=mesh, tp_axis=("kv", "qg"))
 cfg2, params2 = pp.pad_experts(cfg, params, 8)
 assert cfg2.moe.num_experts == 8 and cfg2.moe.real_experts == 6
 plan = pp.build_plan(cfg2, 2, 64, RunConfig(num_chunks=8, num_stages=2))
 staged = pp.stage_params(cfg2, params2, plan)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     out = jax.jit(lambda st, tk: pp.prefill_pipeline(
         cfg2, st, tk, plan, topo))(staged, toks)
 err = float(jnp.max(jnp.abs(out - ref) / (jnp.abs(ref) + 1e-3)))
@@ -83,10 +98,12 @@ def _run(snippet):
     assert "PASS" in r.stdout
 
 
+@needs_partial_auto
 def test_kv_split_with_head_padding():
     _run(SNIPPET_PAD_HEADS)
 
 
+@needs_partial_auto
 def test_expert_parallel_with_padding():
     _run(SNIPPET_EP)
 

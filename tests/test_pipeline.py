@@ -1,27 +1,9 @@
 """Chunked-pipeline equivalence vs the full-forward oracle, run in
 subprocesses with 8 fake host devices (the main pytest process keeps the real
 single device — see conftest)."""
-import os
-import subprocess
-import sys
-
 import pytest
 
-HELPER = os.path.join(os.path.dirname(__file__), "helpers", "pipeline_check.py")
-ROOT = os.path.join(os.path.dirname(__file__), "..")
-
-
-def _run(arch, mode, remote, spill="bfloat16", deep=False):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    cmd = [sys.executable, HELPER, arch, mode, remote, spill]
-    if deep:
-        cmd.append("deep")
-    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
-                       timeout=900)
-    assert r.returncode == 0, f"{arch}/{mode}/{remote}:\n{r.stdout}\n{r.stderr}"
-    assert "PASS" in r.stdout
+from tests.helpers.subproc import run_pipeline_check as _run
 
 
 CASES = [

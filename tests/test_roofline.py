@@ -10,10 +10,12 @@ ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 SNIPPET = r"""
 import jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro import compat
+from repro.compat import AxisType
 from repro.roofline.hlo_graph import analyze_text
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
 sh = NamedSharding(mesh, P("data", None))
 rep = NamedSharding(mesh, P(None, None))
 A = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
@@ -39,9 +41,9 @@ assert abs(ag - 4 * 1024 * 1024 * 7 / 8) < 1e4, g3.coll
 
 # 4. psum -> all-reduce wire bytes: 2 * size * 7/8
 def h(x):
-    return jax.shard_map(lambda y: jax.lax.psum(y, "data"), mesh=mesh,
-                         in_specs=P("data", None), out_specs=P(None, None),
-                         axis_names={"data"})(x)
+    return compat.shard_map(lambda y: jax.lax.psum(y, "data"), mesh=mesh,
+                            in_specs=P("data", None), out_specs=P(None, None),
+                            axis_names={"data"})(x)
 g4 = analyze_text(jax.jit(h).lower(A).compile().as_text())
 ar = g4.coll.get("all-reduce", 0)
 want = 2 * (1024 * 1024 * 4 / 8) * 8 * 7 / 8  # out is full [1024,1024]? local psum output = [128*8...]
