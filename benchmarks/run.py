@@ -1,6 +1,12 @@
 """Benchmark driver: one module per paper table/figure + the roofline report.
 
   PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Jobs whose backend prerequisites are unavailable are SKIPPED, not crashed:
+jobs that lower the real chunked pipeline with a GSPMD-auto TP axis need
+partial-auto SPMD inside shard_map, which old jaxlib rejects at lowering
+time ("UNIMPLEMENTED: PartitionId") — ``compat.supports_partial_auto_spmd``
+is the gate.
 """
 from __future__ import annotations
 
@@ -15,37 +21,51 @@ def main(argv=None) -> int:
                     help="smaller SA budgets / fewer probes")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig6a,fig6b,fig1c,"
-                         "lbcp_ablation,kernels,attn_backend,roofline,sched")
+                         "lbcp_ablation,kernels,attn_backend,roofline,sched,"
+                         "kvstore,kvstore_pipeline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import attn_backend, fig1c, fig6a, fig6b, kernels
+    from benchmarks import kvstore as kvstore_bench
     from benchmarks import lbcp_ablation, roofline_report, sched_throughput
+    from repro import compat
 
+    # (name, description, fn, needs_partial_auto_spmd)
     jobs = [
         ("sched", "Continuous chunk-level scheduling vs batch-synchronous",
-         lambda: sched_throughput.main(quick=args.quick)),
+         lambda: sched_throughput.main(quick=args.quick), False),
         ("attn_backend", "jnp vs pallas attention-backend comparison",
-         lambda: attn_backend.run(quick=args.quick)),
+         lambda: attn_backend.run(quick=args.quick), False),
+        ("kvstore", "KV page store: max seq len vs kv_dtype + tier headroom",
+         lambda: kvstore_bench.run(quick=args.quick), False),
+        ("kvstore_pipeline", "Real-pipeline paged-pool bytes + wall time "
+         "(TP-sharded pool)",
+         lambda: kvstore_bench.pipeline_leg(quick=args.quick), True),
         ("fig6a", "Fig 6(a): E2E latency/throughput vs GPipe & Terapipe",
-         fig6a.main),
+         fig6a.main, False),
         ("fig6b", "Fig 6(b): max sequence length vs Terapipe x #chunks",
-         fig6b.main),
+         fig6b.main, False),
         ("fig1c", "Fig 1(c): WSC vs GPU-system communication advantage",
-         fig1c.main),
+         fig1c.main, False),
         ("lbcp_ablation", "LBCP ablation + stagger-collapse study",
-         lbcp_ablation.main),
+         lbcp_ablation.main, False),
         ("kernels", "Pallas kernel correctness + analytic TPU timing",
-         kernels.main),
+         kernels.main, False),
         ("roofline", "Roofline report from the dry-run artifacts",
-         roofline_report.main),
+         roofline_report.main, False),
     ]
     rc = 0
-    for name, desc, fn in jobs:
+    for name, desc, fn, needs_spmd in jobs:
         if only and name not in only:
             continue
         print(f"\n================ {name}: {desc} ================",
               flush=True)
+        if needs_spmd and not compat.supports_partial_auto_spmd():
+            print(f"[{name} SKIP: installed jaxlib cannot partition "
+                  "partial-auto shard_map (PartitionId); rerun on jax >= "
+                  "the jax.shard_map release]")
+            continue
         t0 = time.time()
         try:
             fn()

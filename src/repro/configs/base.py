@@ -224,6 +224,20 @@ class RunConfig:
     # "jnp" = pure-jnp online-softmax reference; "pallas" = the flash kernel
     # kernels.ops.chunk_attention (interpret mode off-TPU, Mosaic on TPU)
     attn_backend: str = "jnp"
+    # SSD inner loop for the ssm/hybrid stage programs, same knob pattern:
+    # "jnp" = models.ssm.ssd_chunked reference; "pallas" = kernels.ops.ssd
+    ssm_backend: str = "jnp"
+    # KV page store (repro.kvstore): storage dtype of the per-stage paged
+    # pool — "auto" (model dtype, bit-identical to the unpaged pool),
+    # "int8" / "fp8" (per-kv-head-scale codec; spill/fetch wires carry the
+    # compressed payload, leases count quantized bytes)
+    kv_dtype: str = "auto"
+    # tokens per KV page; 0 = one page per chunk (rounded down to a divisor
+    # of the chunk length otherwise)
+    kv_page_tokens: int = 0
+    # enable the cold tier: host-offload placement + analytic prefetch off
+    # the LBCP plan (kvstore.tiers); serving-path staging via device_put
+    kv_offload: bool = False
     # "kv_split": reshape the TP axis into ("kv","qg") so GQA attention is
     # collective-free (beyond-paper perf variant; auto-falls-back when head
     # counts don't divide). "auto": plain 16-way model axis.

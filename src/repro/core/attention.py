@@ -24,6 +24,12 @@ A backend supplies two block kinds (DESIGN.md §2.3):
   below the consumer's phase). Gating must be exact: an invalid chunk
   contributes the identity state (m=-inf, l=0, acc=0).
 
+Stored chunks arrive ENCODED from the KV page store (``repro.kvstore``):
+``chunk_block_q`` takes the page payload plus per-head scales and owns the
+dequant-on-read — the jnp reference multiplies the scales out before its
+block update; the pallas backend hands payload + scales straight to the
+kernel, which dequantizes in its epilogue (quantized bytes cross HBM).
+
 Backends are selected per-plan via ``RunConfig.attn_backend`` ->
 ``PipelinePlan.attn_backend``; registration is open for follow-ons (SSD
 backend for the ssm stage program, TPU-native qship kernel — ROADMAP).
@@ -35,6 +41,9 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kvstore import pages as kvpages
+from repro.kvstore import quant as kvquant
 
 NEG_INF = float(-1e30)  # finite -inf stand-in: keeps masked softmax NaN-free
 
@@ -107,6 +116,21 @@ class AttentionBackend:
     def chunk_block(self, qg, k, v, valid, scale, st: State) -> State:
         raise NotImplementedError
 
+    def chunk_block_q(self, qg, kq, vq, k_scale, v_scale, valid, scale,
+                      st: State) -> State:
+        """``chunk_block`` over an ENCODED stored chunk: KV-page payload
+        [B, Ck, K, D] + per-PAGE scales [ppc, B, 1, K, 1] from
+        ``repro.kvstore``. Default: dequantize on read, then the plain
+        block. Backends that can consume the payload directly (pallas)
+        override this."""
+        if k_scale is not None:
+            pt = kq.shape[1] // k_scale.shape[0]
+            k_scale = kvquant.expand_page_scale(k_scale, pt)  # [B, Ck, K, 1]
+            v_scale = kvquant.expand_page_scale(v_scale, pt)
+        k = kvquant.decode(kq, k_scale, qg.dtype)
+        v = kvquant.decode(vq, v_scale, qg.dtype)
+        return self.chunk_block(qg, k, v, valid, scale, st)
+
 
 class JnpBackend(AttentionBackend):
     """Pure-jnp streaming reference (runs on any jax backend)."""
@@ -139,14 +163,21 @@ class PallasBackend(AttentionBackend):
         acc = acc.reshape(b, c, kvh, g, d).transpose(0, 2, 3, 1, 4)
         return m.reshape(b, kvh, g, c), l.reshape(b, kvh, g, c), acc
 
-    def _kernel_state(self, qg, k, v, scale, causal_offset: int) -> State:
+    def _kernel_state(self, qg, k, v, scale, causal_offset: int,
+                      k_scale=None, v_scale=None) -> State:
         from repro.kernels import ops
         b, c, kvh, g, d = qg.shape
         q = qg.reshape(b, c, kvh * g, d)
         _, m, l, acc = ops.chunk_attention(
             q, k, v, causal_offset=causal_offset, scale=float(scale),
-            return_state=True)
+            return_state=True, k_scale=k_scale, v_scale=v_scale)
         return self._to_state(m, l, acc, kvh)
+
+    @staticmethod
+    def _gate(s2: State, valid) -> State:
+        return (jnp.where(valid, s2[0], NEG_INF),
+                jnp.where(valid, s2[1], 0.0),
+                jnp.where(valid, s2[2], 0.0))
 
     def self_block(self, qg, k, v, scale, st: State) -> State:
         return attn_combine(st, self._kernel_state(qg, k, v, scale, 0))
@@ -154,10 +185,21 @@ class PallasBackend(AttentionBackend):
     def chunk_block(self, qg, k, v, valid, scale, st: State) -> State:
         # full visibility: every query sees all Ck keys (offset >= Ck)
         s2 = self._kernel_state(qg, k, v, scale, int(k.shape[1]))
-        s2 = (jnp.where(valid, s2[0], NEG_INF),
-              jnp.where(valid, s2[1], 0.0),
-              jnp.where(valid, s2[2], 0.0))
-        return attn_combine(st, s2)
+        return attn_combine(st, self._gate(s2, valid))
+
+    def chunk_block_q(self, qg, kq, vq, k_scale, v_scale, valid, scale,
+                      st: State) -> State:
+        """Quantized pages go straight into the kernel: the dequant epilogue
+        (chunk_attn.py) multiplies the per-token scale rows after the block
+        load, so only payload bytes cross HBM."""
+        if k_scale is None:
+            return self.chunk_block(qg, kq, vq, valid, scale, st)
+        pt = kq.shape[1] // k_scale.shape[0]
+        ksc = kvquant.expand_page_scale(k_scale, pt)[..., 0]  # [B, Ck, K]
+        vsc = kvquant.expand_page_scale(v_scale, pt)[..., 0]
+        s2 = self._kernel_state(qg, kq, vq, scale, int(kq.shape[1]),
+                                ksc, vsc)
+        return attn_combine(st, self._gate(s2, valid))
 
 
 _BACKENDS: Dict[str, Callable[[], AttentionBackend]] = {}
@@ -184,31 +226,37 @@ register_backend("pallas", PallasBackend)
 
 # ============================================================ pool traversal
 
-def pool_scan(backend: AttentionBackend, qg, kpool_l, vpool_l, slot_chunk,
+def pool_scan(backend: AttentionBackend, qg, pool_l, slot_pages, slot_chunk,
               limit, scale, st: State, slots: Optional[Any] = None) -> State:
     """Accumulate attention over pool slots whose stored chunk < ``limit``.
-    kpool_l/vpool_l [slots+1, B, C, K, D] (this layer's slices).
+
+    ``pool_l`` = (k_l, v_l, ks_l, vs_l): THIS layer's slices of the paged
+    pool — payloads [P, B, page_tokens, K, D] plus per-head scales (None for
+    a passthrough codec). ``slot_pages`` [slots+1, ppc] is the page table;
+    each visited slot's pages are gathered, and the ENCODED chunk goes to
+    ``chunk_block_q`` (dequant-on-read is the backend's business).
     ``slots``: optional static subset of slot indices to visit (the creditor
     scan touches only the few host slots, not the whole pool)."""
+    k_l, v_l, ks_l, vs_l = pool_l
     if slots is not None:
         if len(slots) == 0:
             return st
-        idx = np.asarray(slots, np.int32)
-        kpool_l = kpool_l[idx]
-        vpool_l = vpool_l[idx]
-        chunk_ids = jnp.asarray(slot_chunk)[jnp.asarray(idx)]
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        chunk_ids = jnp.asarray(slot_chunk)[idx]
+        page_rows = jnp.asarray(slot_pages)[idx]
     else:
-        nslots = kpool_l.shape[0] - 1
+        nslots = slot_pages.shape[0] - 1
         if nslots <= 0:
             return st
-        kpool_l = kpool_l[:nslots]
-        vpool_l = vpool_l[:nslots]
         chunk_ids = jnp.asarray(slot_chunk[:nslots])
+        page_rows = jnp.asarray(slot_pages[:nslots])
 
     def body(carry, xs):
-        k, v, cid = xs
+        pages, cid = xs
+        kq, vq, ks, vs = kvpages.gather_chunk(k_l, v_l, ks_l, vs_l, pages)
         valid = (cid >= 0) & (cid < limit)
-        return backend.chunk_block(qg, k, v, valid, scale, carry), None
+        return backend.chunk_block_q(qg, kq, vq, ks, vs, valid, scale,
+                                     carry), None
 
-    st, _ = jax.lax.scan(body, st, (kpool_l, vpool_l, chunk_ids))
+    st, _ = jax.lax.scan(body, st, (page_rows, chunk_ids))
     return st

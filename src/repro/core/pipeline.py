@@ -37,10 +37,11 @@ from repro.configs.base import ModelConfig
 from repro.core.attention import NEG_INF  # noqa: F401  (re-export)
 from repro.core.gpipe import gpipe_prefill
 from repro.core.plan import PipelinePlan, build_plan  # noqa: F401
-from repro.core.staging import (Params, batch_specs,  # noqa: F401
-                                kv_split_axes, manual_only, manual_tree,
-                                pad_experts, pad_q_heads, stage_param_specs,
-                                stage_params)
+from repro.core.staging import (Params, alloc_kv_pool,  # noqa: F401
+                                batch_specs, kv_split_axes, manual_only,
+                                manual_tree, pad_experts, pad_q_heads,
+                                stage_param_specs, stage_params)
+from repro.kvstore.pages import PagedPool
 from repro.core.stagestep import (StageCtx, attend_chunk,  # noqa: F401
                                   hybrid_stage_step, ssm_stage_step,
                                   tfm_stage_step)
@@ -83,8 +84,6 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     is_hybrid = cfg.family == "hybrid"
     is_ssm = cfg.family == "ssm"
     is_encdec = cfg.family == "encdec"
-    # attention "layers" per stage: transformer = lps, hybrid = 1 per group
-    kv_lps = lps
 
     # whisper: encoder runs OUTSIDE the pipeline (batch-parallel TP pass)
     enc_out = None
@@ -112,14 +111,9 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             cross = (xk, xv)
 
         if is_ssm:  # attention-free: no KV pool at all
-            kpool = vpool = jnp.zeros((0,), dt)
+            pool = PagedPool(jnp.zeros((0,), dt), jnp.zeros((0,), dt))
         else:
-            kpool = jnp.zeros((plan.num_slots + 1, kv_lps, b, c, kvh, hd), dt)
-            vpool = jnp.zeros_like(kpool)
-            if isinstance(topo.tp_axis, tuple):  # kv_split: pool by kv head
-                pool_spec = P(None, None, None, None, topo.tp_axis[0], None)
-                kpool = jax.lax.with_sharding_constraint(kpool, pool_spec)
-                vpool = jax.lax.with_sharding_constraint(vpool, pool_spec)
+            pool = alloc_kv_pool(cfg, plan, b, topo)
         x0 = jnp.zeros((b, c, cfg.d_model), dt)
         if is_ssm or is_hybrid:
             d_in, nheads, conv_ch = S.dims(cfg)
@@ -152,7 +146,7 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             else P(None, None, None)
 
         def tick(carry, t):
-            x_prev, kpool, vpool, state, x_last = carry
+            x_prev, pool, state, x_last = carry
             phase = t - stage
             ctx = StageCtx(cfg=cfg, plan=plan, topo=topo, stage=stage,
                            phase=phase, first_half=stage < n // 2,
@@ -179,20 +173,20 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             if is_ssm:
                 x_out, state = ssm_stage_step(ctx, stage_layers, x, state)
             elif is_hybrid:
-                x_out, state, kpool, vpool = hybrid_stage_step(
-                    ctx, stage_layers, extra["shared"], x, state, kpool, vpool)
+                x_out, state, pool = hybrid_stage_step(
+                    ctx, stage_layers, extra["shared"], x, state, pool)
             else:
-                x_out, kpool, vpool = tfm_stage_step(
-                    ctx, stage_layers, x, kpool, vpool, cross=cross)
+                x_out, pool = tfm_stage_step(
+                    ctx, stage_layers, x, pool, cross=cross)
             # ---- capture the last token's hidden state at the last stage
             take = (stage == n - 1) & (phase == m - 1)
             x_last = jnp.where(take, x_out[:, -1].astype(jnp.float32), x_last)
             # ---- ring transfer to the next stage
             x_next = jax.lax.ppermute(x_out, st_ax, ring_perm)
-            return (x_next, kpool, vpool, state, x_last), None
+            return (x_next, pool, state, x_last), None
 
-        carry0 = (x0, kpool, vpool, state0, x_last0)
-        (xf, _, _, _, x_last), _ = jax.lax.scan(
+        carry0 = (x0, pool, state0, x_last0)
+        (xf, _, _, x_last), _ = jax.lax.scan(
             tick, carry0, jnp.arange(plan.num_ticks))
         # replicate the final hidden state across stages
         x_last = jax.lax.psum(x_last, st_ax)

@@ -12,6 +12,14 @@ slots. At attention time the debtor reaches its remote prefix one of two ways:
   back (acc, lse). Traffic O(q + out): cheaper whenever >= 2 chunks are
   remote under GQA, and one round-trip instead of n_remote transfers.
 
+KV bytes live in the page store (``repro.kvstore``): slot tables resolve to
+page handles through ``plan.slot_pages``, and with a quantized ``kv_dtype``
+the spill AND fetch wires carry the encoded payload + per-head scales — the
+creditor scatters raw pages under ITS page table (reallocation is handle
+movement, and reallocation traffic shrinks by the codec's factor). With a
+passthrough codec the legacy ``spill_dtype="int8"`` wire-only compression is
+preserved bit-for-bit (quantize on the wire, dequantize into the pool).
+
 All attention math inside both paths routes through the pluggable backend
 (``core.attention``), so fetch/qship work identically under jnp and pallas.
 The functions take the per-trace stage context (``core.stagestep.StageCtx``)
@@ -26,6 +34,8 @@ import jax.numpy as jnp
 
 from repro.core.attention import (AttentionBackend, State, attn_combine,
                                   attn_init, pool_scan)
+from repro.kvstore import pages as kvpages
+from repro.kvstore import quant as kvquant
 
 
 def pair_phase(ctx) -> jax.Array:
@@ -35,9 +45,10 @@ def pair_phase(ctx) -> jax.Array:
 
 
 def spill_permute(ctx, kv: jax.Array) -> jax.Array:
-    """Cross-half spill transfer. int8 mode: the WIRE carries the int8
-    payload + one fp32 scale per (tensor, layer, kv head) — half the spill
-    bytes; the pool stays in model dtype (dequantized at the creditor)."""
+    """Cross-half spill transfer for a PASSTHROUGH pool. int8 spill_dtype:
+    the WIRE carries the int8 payload + one fp32 scale per (tensor, layer,
+    kv head) — half the spill bytes; the pool stays in model dtype
+    (dequantized at the creditor)."""
     plan = ctx.plan
     if plan.spill_dtype != "int8":
         return jax.lax.ppermute(kv, ctx.topo.stage_axis, ctx.pair_perm)
@@ -57,23 +68,39 @@ def host_table(ctx) -> jax.Array:
                      jnp.asarray(plan.host_slot_b))
 
 
-def fetch_remote(ctx, backend: AttentionBackend, qg, kpool_l, vpool_l,
-                 st: State) -> State:
+def _pool_layer(pool: kvpages.PagedPool, l_idx: jax.Array):
+    """Slice one layer out of the paged pool: payloads [P, B, pt, K, D] +
+    scales [P, B, 1, K, 1] (None when passthrough)."""
+    sl = lambda a: jax.lax.dynamic_index_in_dim(a, l_idx, axis=1,
+                                                keepdims=False)
+    ks = sl(pool.k_scale) if pool.k_scale is not None else None
+    vs = sl(pool.v_scale) if pool.v_scale is not None else None
+    return sl(pool.k), sl(pool.v), ks, vs
+
+
+def fetch_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State) -> State:
     """Paper-faithful fetch: stream one chunk-layer per ppermute through the
     online-softmax combine. The slot *I* host for my pair at index j holds —
-    after the symmetric cross-half exchange — my own chunk j."""
+    after the symmetric cross-half exchange — my own chunk j. The wire
+    carries the ENCODED pages (quantized codec: the fetch traffic shrinks by
+    the same factor as the pool)."""
     plan = ctx.plan
     host_tbl = host_table(ctx)
+    slot_pages = jnp.asarray(plan.slot_pages)
+    quantized = plan.codec.quantized
 
     def fetch_body(carry, j):
         stc = carry
-        slot = host_tbl[j]
-        ks = jax.lax.dynamic_index_in_dim(kpool_l, slot, 0, keepdims=False)
-        vs = jax.lax.dynamic_index_in_dim(vpool_l, slot, 0, keepdims=False)
-        pk = jax.lax.ppermute(jnp.stack([ks, vs]), ctx.topo.stage_axis,
+        pages = slot_pages[host_tbl[j]]
+        kq, vq, ks, vs = kvpages.gather_chunk(*pool_l, pages)
+        pk = jax.lax.ppermute(jnp.stack([kq, vq]), ctx.topo.stage_axis,
                               ctx.pair_perm)
-        stc = backend.chunk_block(qg, pk[0], pk[1], j < ctx.phase,
-                                  ctx.scale, stc)
+        if quantized:
+            ps = jax.lax.ppermute(jnp.stack([ks, vs]), ctx.topo.stage_axis,
+                                  ctx.pair_perm)
+            ks, vs = ps[0], ps[1]
+        stc = backend.chunk_block_q(qg, pk[0], pk[1], ks, vs, j < ctx.phase,
+                                    ctx.scale, stc)
         return stc, None
 
     st, _ = jax.lax.scan(fetch_body, st,
@@ -81,8 +108,7 @@ def fetch_remote(ctx, backend: AttentionBackend, qg, kpool_l, vpool_l,
     return st
 
 
-def qship_remote(ctx, backend: AttentionBackend, qg, kpool_l, vpool_l,
-                 st: State) -> State:
+def qship_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State) -> State:
     """Beyond-paper qship: ship my Q to the creditor, which runs the backend
     over ONLY the host slots it holds for me, then ships back (m, l, acc)."""
     plan = ctx.plan
@@ -96,7 +122,7 @@ def qship_remote(ctx, backend: AttentionBackend, qg, kpool_l, vpool_l,
     pair_limit = pair_phase(ctx)  # pair needs chunks [p2, pair_phase)
     st_r = attn_init(b, c, kvh, g, d)
     # creditor-side scan visits ONLY the host slots (compute win)
-    st_r = pool_scan(backend, q_pair, kpool_l, vpool_l, host_chunk,
+    st_r = pool_scan(backend, q_pair, pool_l, plan.slot_pages, host_chunk,
                      pair_limit, ctx.scale, st_r,
                      slots=plan.host_slots_used)
     # ship (m, l) packed fp32 + acc in the wire dtype
@@ -107,24 +133,43 @@ def qship_remote(ctx, backend: AttentionBackend, qg, kpool_l, vpool_l,
     return attn_combine(st, (ml[0], ml[1], a_r))
 
 
-def write_pools(ctx, kpool, vpool, stage_k, stage_v) -> Tuple[jax.Array, jax.Array]:
-    """End-of-tick pool writes: own store (phase < p2) or cross-half spill."""
+def write_pools(ctx, pool: kvpages.PagedPool, stage_k,
+                stage_v) -> kvpages.PagedPool:
+    """End-of-tick page writes: encode the fresh chunk once, scatter its
+    pages to the own slot (phase < p2) or ship the payload cross-half and
+    scatter under the creditor's page table. Inactive phases write to the
+    scratch slot's pages (write-garbage land, never read)."""
     plan = ctx.plan
+    codec = plan.codec
+    slot_pages = jnp.asarray(plan.slot_pages)
     phase, active = ctx.phase, (ctx.phase >= 0) & (ctx.phase < plan.num_chunks)
     pidx = jnp.clip(phase, 0, plan.num_chunks - 1)
 
     own_tbl = jnp.asarray(plan.own_slot)
     own_slot = jnp.where(active & (phase < plan.p2), own_tbl[pidx], plan.scratch)
-    kpool = jax.lax.dynamic_update_index_in_dim(kpool, stage_k, own_slot, 0)
-    vpool = jax.lax.dynamic_update_index_in_dim(vpool, stage_v, own_slot, 0)
+    kq, ksc = kvquant.encode(codec, stage_k, pages=plan.pages_per_chunk)
+    vq, vsc = kvquant.encode(codec, stage_v, pages=plan.pages_per_chunk)
+    pool = kvpages.scatter_chunk_raw(pool, slot_pages[own_slot],
+                                     kq, vq, ksc, vsc)
 
     if plan.p2 < plan.num_chunks and plan.mode == "mocap":
-        spill = spill_permute(ctx, jnp.stack([stage_k, stage_v]))
         pp = pair_phase(ctx)  # the chunk index my pair just computed
         host_tbl = host_table(ctx)
         ppc = jnp.clip(pp, 0, plan.num_chunks - 1)
         hslot = jnp.where((pp >= plan.p2) & (pp < plan.num_chunks),
                           host_tbl[ppc], plan.scratch)
-        kpool = jax.lax.dynamic_update_index_in_dim(kpool, spill[0], hslot, 0)
-        vpool = jax.lax.dynamic_update_index_in_dim(vpool, spill[1], hslot, 0)
-    return kpool, vpool
+        if codec.quantized:
+            # the wire carries the already-encoded pages + scales
+            sq = jax.lax.ppermute(jnp.stack([kq, vq]), ctx.topo.stage_axis,
+                                  ctx.pair_perm)
+            ss = jax.lax.ppermute(jnp.stack([ksc, vsc]), ctx.topo.stage_axis,
+                                  ctx.pair_perm)
+            pool = kvpages.scatter_chunk_raw(pool, slot_pages[hslot],
+                                             sq[0], sq[1], ss[0], ss[1])
+        else:
+            spill = spill_permute(ctx, jnp.stack([stage_k, stage_v]))
+            pool = kvpages.scatter_chunk_raw(pool, slot_pages[hslot],
+                                             spill[0].astype(pool.k.dtype),
+                                             spill[1].astype(pool.v.dtype),
+                                             None, None)
+    return pool

@@ -51,11 +51,13 @@ class StageCtx:
 
 def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
                  k_new: jax.Array, v_new: jax.Array,
-                 kpool: jax.Array, vpool: jax.Array) -> jax.Array:
+                 pool) -> jax.Array:
     """Full MOCAP attention for one layer of the current chunk:
     own-pool prefix + (MBKR) remote prefix + causal self block, all through
     the plan's attention backend.
-    q [B,C,H,D]; k_new/v_new [B,C,K,D]; pools [slots+1, lps, B, C, K, D]."""
+    q [B,C,H,D]; k_new/v_new [B,C,K,D]; ``pool`` is the stage's paged KV
+    store (``kvstore.pages.PagedPool``: payloads [P, lps, B, pt, K, D] +
+    per-head scales when quantized)."""
     plan = ctx.plan
     backend = get_backend(plan.attn_backend)
     b, c, h, d = q.shape
@@ -63,20 +65,19 @@ def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
     qg = group_queries(q, kvh)
     st = attn_init(b, c, kvh, h // kvh, d)
 
-    kpool_l = jax.lax.dynamic_index_in_dim(kpool, l_idx, axis=1, keepdims=False)
-    vpool_l = jax.lax.dynamic_index_in_dim(vpool, l_idx, axis=1, keepdims=False)
+    pool_l = remote._pool_layer(pool, l_idx)
 
     # 1. own local prefix: chunks j < min(phase, p2)
     limit = jnp.minimum(ctx.phase, plan.p2)
-    st = pool_scan(backend, qg, kpool_l, vpool_l, plan.slot_own_chunk,
+    st = pool_scan(backend, qg, pool_l, plan.slot_pages, plan.slot_own_chunk,
                    limit, ctx.scale, st)
 
     # 2. remote prefix: chunks p2 <= j < phase live at my pair
     if plan.p2 < plan.num_chunks and plan.mode == "mocap":
         if plan.remote_attn == "fetch":
-            st = remote.fetch_remote(ctx, backend, qg, kpool_l, vpool_l, st)
+            st = remote.fetch_remote(ctx, backend, qg, pool_l, st)
         else:
-            st = remote.qship_remote(ctx, backend, qg, kpool_l, vpool_l, st)
+            st = remote.qship_remote(ctx, backend, qg, pool_l, st)
 
     # 3. self block (causal)
     st = backend.self_block(qg, k_new, v_new, ctx.scale, st)
@@ -86,9 +87,9 @@ def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
 # --------------------------------------------------------- transformer step
 
 def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
-                   kpool, vpool, *, cross: Optional[Tuple] = None):
+                   pool, *, cross: Optional[Tuple] = None):
     """Apply this stage's layers to chunk ``ctx.phase``. Returns
-    (x_out, kpool, vpool). ``cross`` = (enc_xk, enc_xv) [lps,B,F,K,D] for
+    (x_out, pool). ``cross`` = (enc_xk, enc_xv) [lps,B,F,K,D] for
     whisper decoder stages."""
     cfg, plan = ctx.cfg, ctx.plan
     b, c, dm = x.shape
@@ -114,7 +115,7 @@ def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
             kv_ax = ctx.topo.tp_axis[0]
             k = jax.lax.with_sharding_constraint(k, P(None, None, kv_ax, None))
             v = jax.lax.with_sharding_constraint(v, P(None, None, kv_ax, None))
-        att = attend_chunk(ctx, li, q, k, v, kpool, vpool)
+        att = attend_chunk(ctx, li, q, k, v, pool)
         xc = xc + cfg.residual_multiplier * jnp.einsum(
             "bcq,qd->bcd", att.reshape(b, c, h * hd), lp["wo"])
         if cross is not None:
@@ -122,7 +123,13 @@ def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
             xv_l = jax.lax.dynamic_index_in_dim(cross[1], li, 0, keepdims=False)
             hnx = L.rms_norm(xc, lp["lnx"], cfg.norm_eps)
             qx = jnp.einsum("bcd,dq->bcq", hnx, lp["xwq"]).reshape(b, c, h, hd)
-            attx = L.flash_attention_xla(qx, xk_l, xv_l, causal_offset=None)
+            if plan.attn_backend == "pallas":
+                # non-causal chunk_attention: decoder chunk vs the whole
+                # encoder output through the flash kernel (ROADMAP item)
+                from repro.kernels import ops as kops
+                attx = kops.full_attention(qx, xk_l, xv_l)
+            else:
+                attx = L.flash_attention_xla(qx, xk_l, xv_l, causal_offset=None)
             xc = xc + jnp.einsum("bcq,qd->bcd", attx.reshape(b, c, h * hd), lp["xwo"])
         ep_axis = ctx.topo.tp_axis if (cfg.moe is not None and isinstance(
             ctx.topo.tp_axis, tuple)) else None
@@ -138,23 +145,27 @@ def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
 
     xs = layers if cross is None else (layers,)
     (x, _), (ks, vs) = jax.lax.scan(layer_body, (x, jnp.int32(0)), xs)
-    kpool, vpool = remote.write_pools(ctx, kpool, vpool, ks, vs)
-    return x, kpool, vpool
+    pool = remote.write_pools(ctx, pool, ks, vs)
+    return x, pool
 
 
 # --------------------------------------------------------------- SSM step
 
 def ssm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array, state):
     """Mamba2 stage: lps blocks; SSM/conv state carried tick-to-tick and
-    zeroed at phase 0 (start of the request)."""
-    cfg = ctx.cfg
+    zeroed at phase 0 (start of the request). The SSD inner loop routes
+    through ``plan.ssm_backend`` (jnp reference | kernels.ops.ssd), the same
+    knob pattern as attention."""
+    cfg, impl = ctx.cfg, ctx.plan.ssm_backend
     fresh = ctx.phase <= 0
 
     def layer_body(xc, xs):
         lp, conv_st, ssd_st = xs
         conv_st = jnp.where(fresh, jnp.zeros_like(conv_st), conv_st)
         ssd_st = jnp.where(fresh, jnp.zeros_like(ssd_st), ssd_st)
-        xo, st2 = S.block_apply(cfg, lp, xc, state={"conv": conv_st, "ssd": ssd_st})
+        xo, st2 = S.block_apply(cfg, lp, xc,
+                                state={"conv": conv_st, "ssd": ssd_st},
+                                ssd_impl=impl)
         return xo, (st2["conv"], st2["ssd"])
 
     x, (conv2, ssd2) = jax.lax.scan(layer_body, x, (layers, state[0], state[1]))
@@ -164,10 +175,11 @@ def ssm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array, state):
 # ------------------------------------------------------------- hybrid step
 
 def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
-                      x: jax.Array, state, kpool, vpool):
+                      x: jax.Array, state, pool):
     """Zamba2 stage = up to lps groups of (pg Mamba2 + shared attn block).
     The shared block's KV participates in MBKR (1 'layer' per group)."""
     cfg, plan = ctx.cfg, ctx.plan
+    ssd_impl = plan.ssm_backend
     scfg = _hyb_scfg(cfg)
     b, c, dm = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -185,7 +197,9 @@ def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
             lp, cst, sst = ms
             cst = jnp.where(fresh, jnp.zeros_like(cst), cst)
             sst = jnp.where(fresh, jnp.zeros_like(sst), sst)
-            xo, st2 = S.block_apply(cfg, lp, xm, state={"conv": cst, "ssd": sst})
+            xo, st2 = S.block_apply(cfg, lp, xm,
+                                    state={"conv": cst, "ssd": sst},
+                                    ssd_impl=ssd_impl)
             return xo, (st2["conv"], st2["ssd"])
 
         xc2, (conv2, ssd2) = jax.lax.scan(mamba_body, xc, (g_lp, conv_st, ssd_st))
@@ -198,7 +212,7 @@ def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
         v = jnp.einsum("bcd,dq->bcq", hn, shared["wv"]).reshape(b, c, kvh, hd)
         q = L.apply_rope(q, cos, sin)
         k = L.apply_rope(k, cos, sin)
-        att = attend_chunk(ctx, gi, q, k, v, kpool, vpool)
+        att = attend_chunk(ctx, gi, q, k, v, pool)
         upd = jnp.einsum("bcq,qd->bcd", att.reshape(b, c, h * hd), shared["wo"])
         xc3 = xc2 + jnp.where(has_attn, upd, 0.0)
         ffn = T.ffn_block(scfg, shared, xc3, topo=None) - xc3  # isolate update
@@ -207,5 +221,5 @@ def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
 
     (x, _), (conv2, ssd2, ks, vs) = jax.lax.scan(
         group_body, (x, jnp.int32(0)), (groups, state[0], state[1]))
-    kpool, vpool = remote.write_pools(ctx, kpool, vpool, ks, vs)
-    return x, (conv2, ssd2), kpool, vpool
+    pool = remote.write_pools(ctx, pool, ks, vs)
+    return x, (conv2, ssd2), pool

@@ -3,10 +3,12 @@
 Sits between the model definitions (``repro.models``) and the pipeline
 driver: restacks flat ``[L, ...]`` layer params into ``[N, lps, ...]``
 (zero-padded — zero-param transformer/SSM blocks are exact identities via the
-residual), derives the matching PartitionSpecs for the mesh topology, and
-implements the two exact zero-padding transforms the kv_split perf variant
-needs (query-head padding per kv group, routed-expert padding for EP).
-See DESIGN.md §2 (layering) and §3 (mesh mapping).
+residual), derives the matching PartitionSpecs for the mesh topology,
+allocates the per-stage paged KV pool (``repro.kvstore``) the stage programs
+write into, and implements the two exact zero-padding transforms the
+kv_split perf variant needs (query-head padding per kv group, routed-expert
+padding for EP). See DESIGN.md §2 (layering), §3 (mesh mapping) and §6
+(memory tiers).
 """
 from __future__ import annotations
 
@@ -18,11 +20,30 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.plan import PipelinePlan
+from repro.kvstore import pages as kvpages
 from repro.models import ssm as S
 from repro.models import transformer as T
 from repro.models.topology import Topology
 
 Params = Dict[str, Any]
+
+
+def alloc_kv_pool(cfg: ModelConfig, plan: PipelinePlan, b: int,
+                  topo: Topology = None) -> kvpages.PagedPool:
+    """One stage's paged KV pool, zero-initialized in the plan's storage
+    codec; kv_split meshes get the pool sharded by kv head (payloads AND
+    scales carry kvh on axis 4)."""
+    kvh = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    pool = kvpages.alloc_pool(plan.page_geometry, plan.codec,
+                              plan.layers_per_stage, b, kvh, hd)
+    if topo is not None and isinstance(topo.tp_axis, tuple):
+        spec = P(None, None, None, None, topo.tp_axis[0], None)
+        shard = lambda a: (jax.lax.with_sharding_constraint(a, spec)
+                           if a is not None else None)
+        pool = kvpages.PagedPool(shard(pool.k), shard(pool.v),
+                                 shard(pool.k_scale), shard(pool.v_scale))
+    return pool
 
 
 def stage_params(cfg: ModelConfig, params: Params, plan: PipelinePlan) -> Params:

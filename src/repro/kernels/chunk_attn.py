@@ -27,9 +27,15 @@ DEFAULT_BLOCK_K = 128
 NEG_INF = float(-1e30)
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *refs,
+def _attn_kernel(q_ref, k_ref, v_ref, *refs,
                  scale: float, causal_offset: int, kv_len: int,
-                 block_q: int, block_k: int, return_state: bool = False):
+                 block_q: int, block_k: int, return_state: bool = False,
+                 quantized: bool = False):
+    if quantized:  # extra inputs: per-(batch, kv-head) fp32 dequant scales
+        ksc_ref, vsc_ref, *refs = refs
+    else:
+        ksc_ref = vsc_ref = None
+    o_ref, *refs = refs
     if return_state:  # extra outputs: max / denom / fp32 accumulator
         mo_ref, lo_ref, ao_ref, m_ref, l_ref, acc_ref = refs
     else:
@@ -56,7 +62,14 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *refs,
     @pl.when(first_k <= last_q)
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)
+        # dequant-on-read: quantized pages store (payload, per-page per-head
+        # scales expanded to a per-token row by the caller); the multiply
+        # rides the fp32 upcast the MXU path does anyway
         k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if ksc_ref is not None:
+            k = k * ksc_ref[0, :, 0][:, None]
+            v = v * vsc_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         mask = (k_pos <= q_pos + causal_offset) & (k_pos < kv_len)
@@ -67,8 +80,7 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *refs,
         p = jnp.exp(s - m_safe[:, None])
         corr = jnp.exp(m_prev - m_safe)
         l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
-        pv = jax.lax.dot_general(p, v_ref[0, :, 0, :].astype(jnp.float32),
-                                 (((1,), (0,)), ((), ())),
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         acc_ref[...] = acc_ref[...] * corr[:, None] + pv
         m_ref[...] = m_new
@@ -89,6 +101,7 @@ def chunk_attention_pallas(
     kv_len: Optional[int] = None,
     block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False, return_state: bool = False,
+    k_scale: Optional[jax.Array] = None, v_scale: Optional[jax.Array] = None,
 ):
     """q [B, C, H, D]; k, v [B, T, KVH, D] (T = prefix + C, padded to a
     multiple of block_k). Returns [B, C, H, D].
@@ -103,6 +116,13 @@ def chunk_attention_pallas(
     caller can COMBINE this kernel's result with other partial-attention
     states at full precision even when the normalized output is bf16. This
     is the seam the pipeline's pluggable attention backend plugs into.
+
+    ``k_scale``/``v_scale`` [B, T, KVH] fp32: when given, k/v are QUANTIZED
+    page payloads (int8 / fp8 from ``kvstore.quant``) and the kernel
+    dequantizes each block in its epilogue — the KV bytes that cross HBM and
+    land in VMEM stay compressed. One scale row per kv token (the page
+    store's per-page per-head scales, expanded by the caller), so scales may
+    vary across the pages inside one kv block.
     """
     b, c, h, d = q.shape
     t, kvh = k.shape[1], k.shape[2]
@@ -113,11 +133,14 @@ def chunk_attention_pallas(
     block_k = min(block_k, t)
     assert c % block_q == 0 and t % block_k == 0, (c, t, block_q, block_k)
     nq, nk = c // block_q, t // block_k
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None)
 
     grid = (b, h, nq, nk)
     kernel = functools.partial(
         _attn_kernel, scale=scale, causal_offset=causal_offset, kv_len=kv_len,
-        block_q=block_q, block_k=block_k, return_state=return_state)
+        block_q=block_q, block_k=block_k, return_state=return_state,
+        quantized=quantized)
     out_shape = jax.ShapeDtypeStruct((b, c, h, d), q.dtype)
     out_spec = pl.BlockSpec((1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0))
     out_shapes = [out_shape]
@@ -129,14 +152,21 @@ def chunk_attention_pallas(
         out_shapes += [jax.ShapeDtypeStruct((b, h, c), jnp.float32)] * 2
         out_shapes += [jax.ShapeDtypeStruct((b, c, h, d), jnp.float32)]
         out_specs += [ml_spec, ml_spec, acc_spec]
+    in_specs = [
+        pl.BlockSpec((1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
+        pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
+    ]
+    args = [q, k, v]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, block_k, 1),
+                               lambda bi, hi, qi, ki: (bi, ki, hi // g))
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     res = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
-            pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
-            pl.BlockSpec((1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // g, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs if return_state else out_spec,
         out_shape=out_shapes if return_state else out_shape,
         scratch_shapes=[
@@ -145,5 +175,5 @@ def chunk_attention_pallas(
             pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*args)
     return tuple(res) if return_state else res

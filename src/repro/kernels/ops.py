@@ -40,7 +40,8 @@ def chunk_attention(q, k, v, *, causal_offset: int = 0,
                     scale: Optional[float] = None,
                     block_q: int = _ca.DEFAULT_BLOCK_Q,
                     block_k: int = _ca.DEFAULT_BLOCK_K,
-                    return_state: bool = False):
+                    return_state: bool = False,
+                    k_scale=None, v_scale=None):
     """Chunked-prefill flash attention (MOCAP hot spot). See chunk_attn.py.
 
     ``return_state=True`` also returns the fp32 online-softmax residuals
@@ -48,6 +49,10 @@ def chunk_attention(q, k, v, *, causal_offset: int = 0,
     ``acc [B, C, H, D]`` so partial results combine across KV sources at
     full precision — used by the pipeline's "pallas" attention backend
     (core.attention).
+
+    ``k_scale``/``v_scale`` [B, T, KVH]: k/v are quantized KV-page payloads
+    (``repro.kvstore``, one scale row per kv token) and the kernel
+    dequantizes in its epilogue.
     """
     d = q.shape[-1]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
@@ -59,14 +64,29 @@ def chunk_attention(q, k, v, *, causal_offset: int = 0,
     qp = _pad_to(q, 3, LANE)
     kp = _pad_to(_pad_to(k, 3, LANE), 1, bk)
     vp = _pad_to(_pad_to(v, 3, LANE), 1, bk)
+    if k_scale is not None:
+        k_scale = _pad_to(k_scale, 1, bk)  # pad rows are masked via kv_len
+        v_scale = _pad_to(v_scale, 1, bk)
     res = _ca.chunk_attention_pallas(
         qp, kp, vp, causal_offset=causal_offset, scale=scale, kv_len=t,
         block_q=bq, block_k=bk, interpret=not _on_tpu(),
-        return_state=return_state)
+        return_state=return_state, k_scale=k_scale, v_scale=v_scale)
     if return_state:
         out, m, l, acc = res
         return out[..., :d], m, l, acc[..., :d]
     return res[..., :d]
+
+
+def full_attention(q, k, v, *, scale: Optional[float] = None,
+                   block_q: int = _ca.DEFAULT_BLOCK_Q,
+                   block_k: int = _ca.DEFAULT_BLOCK_K):
+    """Non-causal (full-visibility) wrapper around ``chunk_attention``:
+    every query attends over every key — the encdec CROSS-attention shape
+    (decoder chunk vs the whole encoder output) and bidirectional encoders.
+    Implemented as a causal offset past the last key, so padded kv rows are
+    still masked by ``kv_len`` inside the kernel."""
+    return chunk_attention(q, k, v, causal_offset=int(k.shape[1]),
+                           scale=scale, block_q=block_q, block_k=block_k)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -1,0 +1,23 @@
+"""Paged, quantized, tiered KV-cache store (DESIGN.md §6).
+
+MOCAP orchestrates KV *slots* (``core.mbkr``) and *leases*
+(``sched.kvlease``); this package owns the KV *bytes* behind both:
+
+- ``pages``  — fixed-size KV pages per stage with a device-resident page
+               table; MBKR slot tables index pages instead of whole-chunk
+               arrays, so creditor/debtor reallocation is page-handle
+               movement.
+- ``quant``  — the page codec: int8 (per-kv-head scale) and fp8-emulated
+               encode on write, dequant-on-read fused into the attention
+               backends (``RunConfig.kv_dtype``).
+- ``tiers``  — hot (stage-local) / warm (MBKR pair-hosted) / cold (host
+               offload) placement with analytic prefetch scheduled off the
+               LBCP chunk plan.
+"""
+from repro.kvstore.pages import (PageGeometry, PagedPool, alloc_pool,
+                                 build_slot_pages, gather_chunk, page_geometry,
+                                 pool_bytes, scatter_chunk, verify_page_plan)
+from repro.kvstore.quant import (KVCodec, decode, encode, get_codec,
+                                 kv_compress_factor, list_codecs)
+from repro.kvstore.tiers import (HostOffloadStager, PrefetchOp, TierPlan,
+                                 TierSpec, max_seq_len_for_budget, plan_tiers)

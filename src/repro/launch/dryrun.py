@@ -31,7 +31,8 @@ SHAPE_NAMES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
-             out_dir: str, attn_backend: str = "jnp") -> dict:
+             out_dir: str, attn_backend: str = "jnp",
+             kv_dtype: str = "auto", kv_page_tokens: int = 0) -> dict:
     from repro import compat
     from repro.configs.base import SHAPES, get_config
     from repro.launch.cells import SkipCell, build_cell
@@ -43,7 +44,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
     topo = make_topology(multi_pod=(mesh_kind == "multipod"))
     chips = topo.mesh.size
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "mode": mode,
-           "chips": chips, "attn_backend": attn_backend, "ok": False}
+           "chips": chips, "attn_backend": attn_backend,
+           "kv_dtype": kv_dtype, "ok": False}
     t0 = time.time()
     try:
         if mode == "mocap_opt":
@@ -51,11 +53,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
             # + sequence-parallel residual + EP for MoE + compact host scan
             run = RunConfig(num_stages=topo.num_stages,
                             attn_sharding="kv_split",
-                            attn_backend=attn_backend)
+                            attn_backend=attn_backend, kv_dtype=kv_dtype,
+                            kv_page_tokens=kv_page_tokens)
             cell = build_cell(arch, shape_name, topo, mode="mocap", run=run)
         else:
             run = RunConfig(num_stages=topo.num_stages,
-                            attn_backend=attn_backend)
+                            attn_backend=attn_backend, kv_dtype=kv_dtype,
+                            kv_page_tokens=kv_page_tokens)
             cell = build_cell(arch, shape_name, topo, mode=mode, run=run)
     except SkipCell as e:
         rec.update(ok=True, skipped=True, reason=str(e))
@@ -118,6 +122,12 @@ def main(argv: Optional[List[str]] = None) -> int:
                     choices=("jnp", "pallas"),
                     help="attention backend for pipeline modes "
                          "(core.attention registry)")
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=("auto", "bfloat16", "int8", "fp8"),
+                    help="KV page-store codec for pipeline modes "
+                         "(repro.kvstore; changes lowered pool bytes)")
+    ap.add_argument("--kv-page-tokens", type=int, default=0,
+                    help="tokens per KV page (0 = one page per chunk)")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args(argv)
 
@@ -133,11 +143,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                     cells.append((arch, shape, mesh, mode))
 
     if args.jobs > 1:
-        return _run_parallel(cells, args.out, args.jobs, args.attn_backend)
+        return _run_parallel(cells, args.out, args.jobs, args.attn_backend,
+                             args.kv_dtype, args.kv_page_tokens)
 
     failures = 0
     for arch, shape, mesh, mode in cells:
-        rec = run_cell(arch, shape, mesh, mode, args.out, args.attn_backend)
+        rec = run_cell(arch, shape, mesh, mode, args.out, args.attn_backend,
+                       args.kv_dtype, args.kv_page_tokens)
         path = save(rec, args.out)
         status = ("SKIP" if rec.get("skipped") else
                   "OK" if rec["ok"] else "FAIL")
@@ -149,7 +161,8 @@ def main(argv: Optional[List[str]] = None) -> int:
 
 
 def _run_parallel(cells, out_dir: str, jobs: int,
-                  attn_backend: str = "jnp") -> int:
+                  attn_backend: str = "jnp", kv_dtype: str = "auto",
+                  kv_page_tokens: int = 0) -> int:
     procs: List[Tuple[subprocess.Popen, tuple]] = []
     pending = list(cells)
     failures = 0
@@ -158,7 +171,8 @@ def _run_parallel(cells, out_dir: str, jobs: int,
         arch, shape, mesh, mode = cell
         cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
                "--shape", shape, "--mesh", mesh, "--mode", mode,
-               "--attn-backend", attn_backend, "--out", out_dir]
+               "--attn-backend", attn_backend, "--kv-dtype", kv_dtype,
+               "--kv-page-tokens", str(kv_page_tokens), "--out", out_dir]
         return subprocess.Popen(cmd, stdout=subprocess.PIPE,
                                 stderr=subprocess.STDOUT, text=True)
 

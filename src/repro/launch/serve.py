@@ -38,6 +38,49 @@ from repro.runtime.engine import (ContinuousEngine, EngineConfig, JaxExecutor,
                                   PrefillEngine, Request, SimExecutor)
 
 
+H2D_BW = 16e9  # host<->device staging bandwidth for the cold tier (B/s)
+
+
+def _print_tier_summary(cfg, ec, kv_dtype: str, kv_page_tokens: int) -> None:
+    """--kv-offload: plan the hot/warm/cold page placement for the engine's
+    largest bucket and print it (kvstore.tiers; analytic prefetch scheduled
+    off the same chunk-cost vectors the scheduler uses)."""
+    from repro.core import mbkr
+    from repro.kvstore import pages as kvp
+    from repro.kvstore import quant as kvq
+    from repro.kvstore import tiers as kvt
+    m, n = ec.num_chunks, ec.num_stages
+    bucket = max(ec.buckets)
+    c = -(-bucket // m)
+    mplan = mbkr.plan(m, n, mbkr=ec.mbkr and not cfg.attn_free)
+    geom = kvp.page_geometry(c, mplan.num_slots, kv_page_tokens)
+    tbl = kvp.build_slot_pages(geom)
+    codec = kvq.get_codec(kv_dtype, cfg.dtype)
+    sm = cm.StageModel.build(cfg, n, ec.tp)
+    dur, _, _, _, _ = cm.chunk_cost_arrays(sm, [c] * m, ec.hw,
+                                           mbkr_plan=mplan)
+    # per-STAGE budget: tp chips' HBM minus the stage's weight slice
+    # (param_count*2/n bytes, resident on those same chips)
+    tp = max(ec.tp, 1)
+    hot = max(ec.hw.hbm_cap * tp - cfg.param_count() * 2 / n, 0.0) * 0.5
+    host_slots = (np.unique(np.concatenate(
+        [mplan.host_slot_a[mplan.p2:], mplan.host_slot_b[mplan.p2:]]))
+        if mplan.p2 < m else None)
+    plan = kvt.plan_tiers(
+        geom, codec, tbl, mplan.own_slot, mplan.p2, m,
+        kvt.TierSpec(hot_bytes=hot, cold_bw=H2D_BW),
+        lps=sm.attn_layers, b=1, kvh=cfg.num_kv_heads,
+        hd=cfg.resolved_head_dim, tick_s=dur, host_slots=host_slots)
+    s = plan.summary()
+    print(f"[kv-offload] bucket {bucket} kv_dtype={codec.name} "
+          f"page_tokens={geom.page_tokens}: pages {s['pages']} | "
+          f"hot {s['hot_bytes']/1e9:.2f} GB | warm {s['warm_bytes']/1e9:.2f} GB"
+          f" | cold {s['cold_bytes']/1e9:.2f} GB | "
+          f"prefetch ops {s['prefetch_ops']} "
+          f"(peak {s['worst_tick_bw']/1e9:.2f} GB/s vs {H2D_BW/1e9:.0f}) | "
+          f"{'FEASIBLE' if s['feasible'] else 'INFEASIBLE'}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-8b")
@@ -53,6 +96,22 @@ def main(argv=None) -> int:
                     help="attention inner-loop backend (core.attention): "
                          "jnp = pure-jnp reference, pallas = the flash "
                          "kernel (interpret mode off-TPU)")
+    ap.add_argument("--ssm-backend", default="jnp",
+                    choices=("jnp", "pallas"),
+                    help="SSD inner loop for ssm/hybrid archs "
+                         "(kernels.ops.ssd behind the same knob pattern)")
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=("auto", "bfloat16", "int8", "fp8"),
+                    help="KV page-store codec (repro.kvstore): auto = model "
+                         "dtype; int8/fp8 store+ship quantized pages and "
+                         "leases count quantized bytes (~2x admission "
+                         "capacity)")
+    ap.add_argument("--kv-page-tokens", type=int, default=0,
+                    help="tokens per KV page (0 = one page per chunk)")
+    ap.add_argument("--kv-offload", action="store_true",
+                    help="plan the cold KV tier: host-offload placement + "
+                         "analytic prefetch off the chunk plan "
+                         "(kvstore.tiers); prints the tier summary")
     ap.add_argument("--scheduler", default="batch",
                     choices=("batch", "continuous"),
                     help="batch = batch-synchronous PrefillEngine; "
@@ -71,7 +130,9 @@ def main(argv=None) -> int:
         cfg = get_config(args.arch)
         ec = EngineConfig(model=cfg, hw=cm.TPU_V5E, num_stages=16, tp=16,
                           num_chunks=16, max_batch=args.max_batch,
-                          buckets=(8192, 32768, 131072), partition="lbcp")
+                          buckets=(8192, 32768, 131072), partition="lbcp",
+                          kv_dtype=args.kv_dtype,
+                          kv_page_tokens=args.kv_page_tokens)
         executor = SimExecutor(cfg, cm.TPU_V5E)
     else:
         from repro import compat
@@ -88,15 +149,24 @@ def main(argv=None) -> int:
         from repro.launch.mesh import make_test_topology
         topo = make_test_topology(stages, tp)
         run = RunConfig(num_chunks=args.num_chunks, num_stages=stages,
-                        attn_backend=args.attn_backend)
+                        attn_backend=args.attn_backend,
+                        ssm_backend=args.ssm_backend,
+                        kv_dtype=args.kv_dtype,
+                        kv_page_tokens=args.kv_page_tokens,
+                        kv_offload=args.kv_offload)
         plan = pp.build_plan(cfg, stages, args.seq, run)
         model = build_model(cfg)
         params = model.init(jax.random.key(args.seed))
         staged = pp.stage_params(cfg, params, plan)
         ec = EngineConfig(model=cfg, hw=cm.TPU_V5E, num_stages=stages, tp=tp,
                           num_chunks=args.num_chunks, max_batch=args.max_batch,
-                          buckets=(args.seq,), partition="uniform")
+                          buckets=(args.seq,), partition="uniform",
+                          kv_dtype=args.kv_dtype,
+                          kv_page_tokens=args.kv_page_tokens)
         executor = JaxExecutor(cfg, staged, topo, run)
+
+    if args.kv_offload:
+        _print_tier_summary(cfg, ec, args.kv_dtype, args.kv_page_tokens)
 
     slo = args.slo_ms / 1e3 if args.slo_ms else None
     if args.scheduler == "continuous":

@@ -103,6 +103,20 @@ def ssd_chunked(x, dt, a_log, b, c, d_skip, *, chunk: int,
     return y.astype(x.dtype), final_state
 
 
+def _ssd_pallas(x, dt, a_log, b, c, d_skip, *, chunk: int,
+                init_state: Optional[jax.Array] = None):
+    """Pallas SSD kernel behind the ``ssm_backend`` knob (interpret mode
+    off-TPU, Mosaic on TPU); same signature/semantics as ``ssd_chunked``."""
+    from repro.kernels import ops
+    return ops.ssd(x, dt, a_log, b, c, d_skip, chunk=chunk,
+                   init_state=init_state)
+
+
+# SSD inner-loop registry (the ssm/hybrid analogue of the attention-backend
+# registry): selected per-plan via ``RunConfig.ssm_backend``.
+SSD_IMPLS = {"jnp": ssd_chunked, "pallas": _ssd_pallas}
+
+
 def ssd_decode_step(x, dt, a_log, b, c, d_skip, state):
     """Single-token SSD update. x [B,H,P]; dt [B,H]; b,c [B,G,N]; state [B,H,P,N]."""
     a = -jnp.exp(a_log.astype(jnp.float32))
@@ -187,8 +201,9 @@ def block_specs(cfg: ModelConfig, *, fsdp: bool = True) -> Params:
 
 def block_apply(cfg: ModelConfig, lp: Params, x: jax.Array, *,
                 state: Optional[Dict[str, jax.Array]] = None,
-                topo: Optional[Topology] = None):
-    """Mamba2 block over a (chunk of a) sequence. Returns (y, new_state)."""
+                topo: Optional[Topology] = None, ssd_impl: str = "jnp"):
+    """Mamba2 block over a (chunk of a) sequence. Returns (y, new_state).
+    ``ssd_impl`` picks the SSD inner loop from ``SSD_IMPLS``."""
     b, t, d = x.shape
     s = cfg.ssm
     d_in, nheads, conv_ch = dims(cfg)
@@ -204,8 +219,12 @@ def block_apply(cfg: ModelConfig, lp: Params, x: jax.Array, *,
     cmat = cmat.reshape(b, t, s.n_groups, s.d_state)
     dtv = jax.nn.softplus(dtv.astype(jnp.float32) + lp["dt_bias"])  # [B,T,H]
     ssd_init = None if state is None else state["ssd"]
-    y, new_ssd = ssd_chunked(xh, dtv, lp["a_log"], bmat, cmat, lp["d_skip"],
-                             chunk=s.chunk_size, init_state=ssd_init)
+    if ssd_impl not in SSD_IMPLS:
+        raise KeyError(f"unknown ssm backend {ssd_impl!r}; "
+                       f"registered: {sorted(SSD_IMPLS)}")
+    y, new_ssd = SSD_IMPLS[ssd_impl](xh, dtv, lp["a_log"], bmat, cmat,
+                                     lp["d_skip"], chunk=s.chunk_size,
+                                     init_state=ssd_init)
     y = y.reshape(b, t, d_in)
     y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
                    lp["gate_norm"], cfg.norm_eps)

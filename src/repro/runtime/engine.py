@@ -73,6 +73,10 @@ class EngineConfig:
     partition: str = "lbcp"        # uniform | lbcp
     mbkr: bool = True
     compress: float = 1.0
+    # KV page store codec (repro.kvstore): admission leases count the
+    # STORED (quantized) bytes, so "int8"/"fp8" grow capacity ~2x
+    kv_dtype: str = "auto"
+    kv_page_tokens: int = 0
     sa_iters: int = 60
     straggler_threshold: float = 1.3   # max/median EWMA tick latency
     evict_threshold: float = 3.0
@@ -394,9 +398,19 @@ class ContinuousEngine:
         self.trace = TraceRecorder(enabled=trace)
         scale = (executor.stage_scale(ec.num_stages)
                  if hasattr(executor, "stage_scale") else None)
+        # leases count the page store's STORED bytes (quantized kv_dtype
+        # shrinks every resident byte -> more concurrent admissions fit the
+        # same physical slot budget)
+        from repro.kvstore import quant as kvq
+        codec = kvq.get_codec(ec.kv_dtype, ec.model.dtype)
+        kv_compress = kvq.kv_compress_factor(
+            codec, model_dtype=ec.model.dtype,
+            page_tokens=ec.kv_page_tokens or cmax,
+            head_dim=ec.model.resolved_head_dim)
         self.scheduler = ChunkScheduler(
             ec.num_stages, self._chunk_plan, policy=policy, lease=self.lease,
-            trace=self.trace, compress=ec.compress, stage_scale=scale)
+            trace=self.trace, compress=ec.compress, kv_compress=kv_compress,
+            stage_scale=scale)
 
     # ---------------------------------------------------------- admission
     def submit(self, req: Request) -> None:

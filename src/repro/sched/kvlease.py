@@ -49,10 +49,11 @@ class Lease:
 def request_lease_events(
     rid: int,
     finish: np.ndarray,            # [M][N] chunk completion times
-    kvb: Sequence[float],          # [M] chunk KV bytes
+    kvb: Sequence[float],          # [M] chunk KV bytes (model dtype)
     p2: int,
     pair: Sequence[int],           # stage -> MBKR pair stage
     compress: float = 1.0,
+    kv_compress: float = 1.0,
 ) -> Lease:
     """Build the lease for one scheduled request from its chunk finish times.
 
@@ -60,18 +61,26 @@ def request_lease_events(
     (locally for i < p2, at the pair stage scaled by ``compress`` for spilled
     chunks); everything a request holds at stage s frees when its tail chunk
     clears s — the same lifecycle the event simulator's memory tracker uses.
+
+    ``kv_compress`` is the KV page store's stored-bytes factor
+    (``kvstore.quant.kv_compress_factor``): with a quantized ``kv_dtype``
+    EVERY resident byte — local and hosted — shrinks by it, which is what
+    grows admission capacity ~2x per one-byte codec at a fixed physical
+    budget. ``compress`` stays the legacy wire/creditor factor applied to
+    spilled chunks only.
     """
     m, n = finish.shape
     ev: List[LeaseEvent] = []
-    local = sum(kvb[:p2])
-    hosted = sum(kvb[p2:]) * compress
+    local = sum(kvb[:p2]) * kv_compress
+    hosted = sum(kvb[p2:]) * compress * kv_compress
     for s in range(n):
         for i in range(m):
             if i < p2:
-                ev.append(LeaseEvent(s, float(finish[i][s]), float(kvb[i])))
+                ev.append(LeaseEvent(s, float(finish[i][s]),
+                                     float(kvb[i]) * kv_compress))
             else:
                 ev.append(LeaseEvent(pair[s], float(finish[i][s]),
-                                     float(kvb[i]) * compress))
+                                     float(kvb[i]) * compress * kv_compress))
         t_drain = float(finish[m - 1][s])
         if local:
             ev.append(LeaseEvent(s, t_drain, -float(local)))

@@ -143,6 +143,7 @@ class ChunkScheduler:
         lease: Optional[KVLeaseManager] = None,
         trace: Optional[TraceRecorder] = None,
         compress: float = 1.0,
+        kv_compress: float = 1.0,
         stage_scale: Optional[Sequence[float]] = None,
     ):
         if policy not in POLICIES:
@@ -155,6 +156,10 @@ class ChunkScheduler:
         self.lease = lease
         self.trace = trace or TraceRecorder(enabled=False)
         self.compress = compress
+        # stored-bytes factor of the KV page codec (kvstore.quant): leases
+        # count QUANTIZED bytes, so a one-byte kv_dtype admits ~2x the
+        # concurrency against the same physical budget
+        self.kv_compress = kv_compress
         self.stage_scale = (np.asarray(stage_scale, float)
                             if stage_scale is not None else None)
         self.pair = [mb.pair_of(s, num_stages) for s in range(num_stages)]
@@ -179,7 +184,8 @@ class ChunkScheduler:
                                   stage_scale=self.stage_scale)
         if self.lease is not None:
             lease = request_lease_events(r.rid, finish, plan.kvb, plan.p2,
-                                         self.pair, self.compress)
+                                         self.pair, self.compress,
+                                         self.kv_compress)
             if not self.lease.admit(lease):
                 return False
         # commit: replay for the hooks (busy accounting + trace)

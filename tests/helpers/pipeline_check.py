@@ -3,10 +3,12 @@ devices. Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 
 Usage:
   python tests/helpers/pipeline_check.py <arch> <mode> <remote_attn> \
-      [spill_dtype] [deep] [backend]
+      [spill_dtype] [deep] [backend] [kv_dtype] [page_tokens]
 
-``backend`` (jnp | pallas | both) picks the attention backend;
-``both`` additionally asserts jnp-vs-pallas parity directly.
+``backend`` (jnp | pallas | both) picks the attention backend (for the ssm
+family it also picks the SSD inner loop); ``both`` additionally asserts
+jnp-vs-pallas parity directly. ``kv_dtype`` (auto | int8 | fp8) selects the
+KV page codec and ``page_tokens`` the page size (0 = one page per chunk).
 Prints "PASS <max_err>" or raises.
 
 jax-version note: on old jaxlib (no partial-auto SPMD — see
@@ -31,7 +33,8 @@ from repro.models.topology import Topology
 
 
 def main(arch: str, mode: str, remote_attn: str, spill_dtype: str = "bfloat16",
-         deep: str = "", backend: str = "jnp"):
+         deep: str = "", backend: str = "jnp", kv_dtype: str = "auto",
+         page_tokens: str = "0"):
     cfg = replace(get_smoke_config(arch), dtype="float32")
     if cfg.moe is not None:
         # chunked dispatch uses PER-CHUNK capacity; lift it so no tokens drop
@@ -72,7 +75,9 @@ def main(arch: str, mode: str, remote_attn: str, spill_dtype: str = "bfloat16",
     def run_pipeline(attn_backend: str) -> np.ndarray:
         run = RunConfig(num_chunks=m_chunks, num_stages=n_stages,
                         mbkr=(mode == "mocap"), remote_attn=remote_attn,
-                        kv_spill_dtype=spill_dtype, attn_backend=attn_backend)
+                        kv_spill_dtype=spill_dtype, attn_backend=attn_backend,
+                        ssm_backend=attn_backend,  # same knob for ssm archs
+                        kv_dtype=kv_dtype, kv_page_tokens=int(page_tokens))
         plan = pp.build_plan(cfg, n_stages, s, run, mode=mode)
         staged = pp.stage_params(cfg, params, plan)
         specs = pp.stage_param_specs(cfg, plan, topo)
@@ -93,14 +98,19 @@ def main(arch: str, mode: str, remote_attn: str, spill_dtype: str = "bfloat16",
     outs = {bk: run_pipeline(bk) for bk in backends}
     for bk, out in outs.items():
         rel = np.abs(out - ref_last) / (np.abs(ref_last) + 1e-3)
-        if spill_dtype == "int8":
-            # int8 KV quantization is REAL lossy compression; when the deep
-            # config consumes remote values the worst near-zero logit sees
-            # ~0.17 rel err while p99 stays ~0.02 and the argmax matches
-            # (verified identical pre-refactor) — so bound the tail, not the
-            # single worst element.
+        if spill_dtype == "int8" or kv_dtype in ("int8", "fp8"):
+            # int8/fp8 KV quantization is REAL lossy compression, so bound
+            # the tail, not the single worst (near-zero-logit) element.
+            # Spill-only int8 (2 of 8 chunks quantized) sits at p99 ~0.02;
+            # kv_dtype=int8 quantizes EVERY stored chunk on this tiny
+            # random-weight smoke model and lands at p99 ~0.065 (fp8-e4m3:
+            # 3 mantissa bits, ~0.14). The per-ATTENTION-OUTPUT error is
+            # bounded at the old 0.05 tolerance in test_kvstore.py.
+            p99_tol, max_tol = {
+                "int8": (0.12, 0.35), "fp8": (0.35, 1.2),
+            }.get(kv_dtype, (0.05, 0.3))
             err = float(np.percentile(rel, 99))
-            assert err < 0.05 and rel.max() < 0.3, \
+            assert err < p99_tol and rel.max() < max_tol, \
                 f"{arch}/{mode}/{remote_attn}/{bk}: p99 {err} max {rel.max()}"
             assert (out.argmax(-1) == ref_last.argmax(-1)).all()
         else:
@@ -109,10 +119,12 @@ def main(arch: str, mode: str, remote_attn: str, spill_dtype: str = "bfloat16",
                 f"{arch}/{mode}/{remote_attn}/{bk}: max rel err {err}"
         assert np.isfinite(out).all()
         print(f"PASS {arch} {mode} {remote_attn} {spill_dtype} "
-              f"backend={bk} err={err:.2e}")
+              f"kv={kv_dtype} backend={bk} err={err:.2e}")
     if backend == "both":
         perr = np.max(np.abs(outs["jnp"] - outs["pallas"])
                       / (np.abs(outs["jnp"]) + 1e-3))
+        # both backends read the SAME quantized pages; their divergence
+        # stays at numerics level even under int8/fp8 storage
         assert perr < 2e-3, f"jnp vs pallas diverge: {perr}"
         print(f"PASS backend-parity jnp~pallas err={perr:.2e}")
 

@@ -1,6 +1,7 @@
 """Shared launcher for the pipeline_check.py subprocess worker — the one
 place that knows its argv contract (arch mode remote [spill] [deep]
-[backend]) and the fake-device environment it needs."""
+[backend] [kv_dtype] [page_tokens]) and the fake-device environment it
+needs."""
 import os
 import subprocess
 import sys
@@ -11,12 +12,13 @@ _WORKER = os.path.join(_HELPERS, "pipeline_check.py")
 
 
 def run_pipeline_check(arch, mode, remote, spill="bfloat16", deep=False,
-                       backend="jnp", expect="PASS"):
+                       backend="jnp", kv_dtype="auto", page_tokens=0,
+                       expect="PASS"):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(_ROOT, "src")
     cmd = [sys.executable, _WORKER, arch, mode, remote, spill,
-           "deep" if deep else "", backend]
+           "deep" if deep else "", backend, kv_dtype, str(page_tokens)]
     r = subprocess.run(cmd, capture_output=True, text=True, env=env,
                        timeout=900)
     assert r.returncode == 0, f"{arch}/{mode}/{remote}:\n{r.stdout}\n{r.stderr}"

@@ -21,11 +21,26 @@ def _run(arch, mode, remote):
 @pytest.mark.parametrize("arch,remote", [
     ("qwen3-8b", "qship"),      # tfm family
     ("qwen3-8b", "fetch"),
-    ("zamba2-7b", "qship"),     # hybrid family (shared attn block)
+    ("zamba2-7b", "qship"),     # hybrid family (shared attn block + SSD knob)
     ("zamba2-7b", "fetch"),
 ])
 def test_backend_parity_pipeline(arch, remote):
     _run(arch, "mocap", remote)
+
+
+def test_backend_parity_whisper_cross_attention():
+    """encdec: under attn_backend=pallas the decoder cross-attention routes
+    through ``ops.full_attention`` (the non-causal chunk_attention wrapper)
+    instead of layers.flash_attention_xla — jnp/pallas must still agree."""
+    run_pipeline_check("whisper-small", "mocap", "qship", backend="both",
+                       expect="PASS backend-parity")
+
+
+def test_backend_parity_ssm_ssd_kernel():
+    """ssm family: backend=both routes ``ssm_stage_step`` through
+    ``kernels.ops.ssd`` (RunConfig.ssm_backend) on the pallas side."""
+    run_pipeline_check("mamba2-130m", "terapipe", "qship", backend="both",
+                       expect="PASS backend-parity")
 
 
 # ------------------------------------------------------ registry behavior
