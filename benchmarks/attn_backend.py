@@ -1,13 +1,22 @@
 """Attention-backend comparison: jnp reference vs pallas (interpret off-TPU).
 
-Times the two ``core.attention`` backends on the composite the pipeline hot
-loop actually runs per (layer, chunk): pool chunk_blocks (the stored-prefix
-scan) + the causal self block + finish. Off-TPU the pallas numbers are
-INTERPRET-mode (a correctness harness, expected slower than jnp on CPU —
-wall-clock wins need the Mosaic lowering on real TPU hardware); alongside
-wall time we report the analytic TPU-v5e roofline time for the same
-flops/bytes, which is backend-independent and is what the §Perf iterations
-reason with.
+Times the ``core.attention`` backends on the composite the pipeline hot loop
+actually runs per (layer, chunk): the stored-prefix pool scan + the causal
+self block + finish — with the pool scan in all three traversal orders:
+
+- ``jnp``            per-slot jnp reference scan,
+- ``pallas_scan``    per-slot kernel launches (one ``chunk_attention`` +
+                     traced combine per occupied slot — the pre-batching
+                     pallas path),
+- ``pool_batched``   the fused slot-grid kernel (``ops.pool_attention``):
+                     ONE launch per pool scan, O(1) in pool depth.
+
+``launches_scan`` / ``launches_batched`` count RUNTIME kernel launches of
+the pool part (``ops.count_launches``): O(slots) -> O(1) is the point; the
+wall-time win from amortized launch overhead needs real TPU (off-TPU the
+pallas numbers are INTERPRET-mode — a correctness harness, expected slower
+than jnp on CPU). Alongside wall time we report the analytic TPU-v5e
+roofline time for the same flops/bytes, which is backend-independent.
 
 Writes artifacts/bench/attn_backend.json. Usage:
   PYTHONPATH=src python -m benchmarks.attn_backend [--iters 3] [--quick]
@@ -25,6 +34,7 @@ import numpy as np
 
 from benchmarks.common import OUT_DIR, table
 from repro.core import attention as A
+from repro.kernels import ops
 from repro.roofline.analysis import HW_V5E
 
 # (b, c, kvh, g, d, n_pool_chunks): pipeline-shaped cases; --quick trims
@@ -35,16 +45,29 @@ CASES = [
 ]
 
 
-def _composite(backend: A.AttentionBackend, qg, kpool, vpool, scale):
+def _pool_fns(kpool, vpool, scale):
+    """The three pool-scan traversal orders under test, as (name, fn) with
+    fn: (qg, state) -> state over the SAME stacked pool KV."""
+    valid = jnp.ones(kpool.shape[0], bool)
+    be_jnp = A.get_backend("jnp")
+    be_pal = A.get_backend("pallas")
+    per_slot = A.PallasBackend()
+    per_slot.batched_pool = False  # pool_block honors the flag
+    return [
+        ("jnp", lambda q, st: be_jnp.pool_block(
+            q, kpool, vpool, None, None, valid, scale, st)),
+        ("pallas_scan", lambda q, st: per_slot.pool_block(
+            q, kpool, vpool, None, None, valid, scale, st)),
+        ("pool_batched", lambda q, st: be_pal.pool_block(
+            q, kpool, vpool, None, None, valid, scale, st)),
+    ]
+
+
+def _composite(pool_fn, self_be, qg, scale):
     b, c, kvh, g, d = qg.shape
     st = A.attn_init(b, c, kvh, g, d)
-
-    def body(carry, kv):
-        k, v = kv
-        return backend.chunk_block(qg, k, v, jnp.bool_(True), scale, carry), None
-
-    st, _ = jax.lax.scan(body, st, (kpool, vpool))
-    st = backend.self_block(qg, qg[:, :, :, 0], qg[:, :, :, 0], scale, st)
+    st = pool_fn(qg, st)
+    st = self_be.self_block(qg, qg[:, :, :, 0], qg[:, :, :, 0], scale, st)
     return A.attn_finish(st, jnp.float32)
 
 
@@ -72,27 +95,47 @@ def run(iters: int = 3, quick: bool = False) -> dict:
         bytes_ = 2.0 * (b * c * h * d * 2 + 2 * b * t_kv * kvh * d)  # bf16
         tpu_s = max(flops / HW_V5E["peak_flops"], bytes_ / HW_V5E["hbm_bw"])
 
-        outs, times = {}, {}
-        for name in ("jnp", "pallas"):
-            be = A.get_backend(name)
-            fn = jax.jit(lambda q, kp, vp, be=be: _composite(be, q, kp, vp, scale))
-            times[name] = _time(fn, qg, kpool, vpool, iters=iters)
-            outs[name] = np.asarray(fn(qg, kpool, vpool))
-        parity = float(np.max(np.abs(outs["jnp"] - outs["pallas"])))
+        outs, times, launches = {}, {}, {}
+        for name, pool_fn in _pool_fns(kpool, vpool, scale):
+            self_be = A.get_backend("jnp" if name == "jnp" else "pallas")
+            fn = jax.jit(lambda q, pf=pool_fn, sb=self_be:
+                         _composite(pf, sb, q, scale))
+            times[name] = _time(fn, qg, iters=iters)
+            outs[name] = np.asarray(fn(qg))
+            # pool-part launch count (the O(slots) -> O(1) claim), counted
+            # at runtime on a pool-only closure
+            pfn = jax.jit(lambda q, pf=pool_fn: pf(
+                q, A.attn_init(b, c, kvh, g, d))[1])
+            with ops.count_launches() as lc:
+                pfn(qg).block_until_ready()
+            launches[name] = lc["count"]
+        parity = float(np.max(np.abs(outs["jnp"] - outs["pool_batched"])))
+        parity_scan = float(np.max(np.abs(outs["pallas_scan"]
+                                          - outs["pool_batched"])))
         rows.append({
             "shape": f"b{b} c{c} kv{kvh} g{g} d{d} pool{npool}",
             "jnp_ms": round(times["jnp"] * 1e3, 2),
-            "pallas_interp_ms": round(times["pallas"] * 1e3, 2),
+            "pallas_scan_ms": round(times["pallas_scan"] * 1e3, 2),
+            "pool_batched_ms": round(times["pool_batched"] * 1e3, 2),
             "parity_abs": f"{parity:.1e}",
+            "launches_scan": launches["pallas_scan"],
+            "launches_batched": launches["pool_batched"],
             "tpu_roofline_us": round(tpu_s * 1e6, 1),
         })
         assert parity < 1e-4, f"backend divergence: {parity}"
+        assert parity_scan < 1e-4, f"scan/batched divergence: {parity_scan}"
+        assert launches["pallas_scan"] == npool, launches
+        assert launches["pool_batched"] == 1, launches  # O(1) in pool depth
+        assert launches["jnp"] == 0, launches
 
     result = {
         "device": str(jax.devices()[0].platform),
+        "quick": quick,
         "note": ("pallas timings are interpret-mode off-TPU (correctness "
-                 "harness, not a speed claim); tpu_roofline_us is the "
-                 "analytic v5e bound for the composite"),
+                 "harness, not a speed claim); launches_* count runtime "
+                 "kernel launches of the pool scan (O(slots) vs O(1)); "
+                 "tpu_roofline_us is the analytic v5e bound for the "
+                 "composite"),
         "iters": iters,
         "rows": rows,
     }
@@ -100,7 +143,8 @@ def run(iters: int = 3, quick: bool = False) -> dict:
     path = os.path.join(OUT_DIR, "attn_backend.json")
     with open(path, "w") as f:
         json.dump(result, f, indent=1)
-    print(table(rows, ["shape", "jnp_ms", "pallas_interp_ms", "parity_abs",
+    print(table(rows, ["shape", "jnp_ms", "pallas_scan_ms", "pool_batched_ms",
+                       "parity_abs", "launches_scan", "launches_batched",
                        "tpu_roofline_us"]))
     print(f"-> {path}")
     return result

@@ -4,7 +4,6 @@ from __future__ import annotations
 import csv
 import io
 import os
-import sys
 from typing import Any, Dict, Iterable, List
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")

@@ -1,0 +1,225 @@
+"""Bench-regression gate: diff a fresh --quick benchmark run against the
+committed baselines (``BENCH_kvstore.json`` / ``BENCH_attn_backend.json`` /
+``BENCH_sched.json`` at repo root) with per-metric tolerances, and exit
+non-zero on regression — so a perf/capacity/parity loss fails the
+``bench-artifacts`` CI job instead of silently riding an upload.
+
+Direction matters per metric: capacity and speedup metrics regress when
+they DROP (``low``); error, launch-count and wall-time metrics regress when
+they RISE (``high``). A degradation passes while it stays within
+``max(rel * |baseline|, abs_floor)``. Deterministic metrics (launch counts,
+analytic capacity, seeded-SA speedups) get tight or exact tolerances;
+wall-clock metrics get a deliberately loose 10x guard — CI runners are
+noisy, and the gate is there to catch pathological blowups, not jitter.
+
+Rows are matched by their key fields; a baseline row MISSING from the fresh
+run is a regression too (lost coverage). Extra fresh rows (new cases) pass.
+
+Usage (after ``python -m benchmarks.run --quick --only kvstore,attn_backend,sched``):
+  PYTHONPATH=src python -m benchmarks.compare [--names kvstore,attn_backend,sched]
+
+Refreshing baselines after an INTENTIONAL change:
+  PYTHONPATH=src python -m benchmarks.compare --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Any, Callable, Dict, List, Tuple
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+FRESH_DIR = os.path.join(ROOT, "artifacts", "bench")
+
+# metric -> (direction, rel_tol, abs_floor); direction "low" = lower is
+# worse (floors), "high" = higher is worse (ceilings)
+MetricSpec = Tuple[str, float, float]
+# (label, rows-getter, key fields, metric specs)
+TableSpec = Tuple[str, Callable[[dict], List[dict]], Tuple[str, ...],
+                  Dict[str, MetricSpec]]
+
+_TIME_GUARD = ("high", 9.0, 5.0)  # 10x / +5 units: noise guard only
+
+
+def _validation_rows(blob: dict) -> List[dict]:
+    return [{"kv_dtype": k, **v} for k, v in blob.get("validation", {}).items()]
+
+
+SPECS: Dict[str, Dict[str, Any]] = {
+    "attn_backend": {
+        "baseline": "BENCH_attn_backend.json",
+        "fresh": "attn_backend.json",
+        "tables": [
+            ("rows", lambda b: b["rows"], ("shape",), {
+                "parity_abs": ("high", 9.0, 1e-5),
+                "launches_scan": ("high", 0.0, 0.0),
+                "launches_batched": ("high", 0.0, 0.0),  # O(1) stays O(1)
+                "jnp_ms": _TIME_GUARD,
+                "pallas_scan_ms": _TIME_GUARD,
+                "pool_batched_ms": _TIME_GUARD,
+            }),
+        ],
+    },
+    "kvstore": {
+        "baseline": "BENCH_kvstore.json",
+        "fresh": "kvstore.json",
+        "tables": [
+            ("capacity", lambda b: b["capacity"], ("arch", "kv_dtype"), {
+                "max_seq_len": ("low", 0.01, 0.0),
+                "vs_bf16": ("low", 0.01, 0.0),
+                "vs_terapipe_bf16": ("low", 0.01, 0.0),
+            }),
+            ("tiers", lambda b: b["tiers"], ("arch", "kv_dtype"), {
+                "cold_chunks_feasible": ("low", 0.0, 0.0),
+                "cold_frac": ("low", 0.01, 0.0),
+            }),
+            ("validation", _validation_rows, ("kv_dtype",), {
+                "attn_err_p99_over_rms": ("high", 0.10, 1e-4),
+                "backend_parity_abs": ("high", 0.0, 1e-4),
+            }),
+        ],
+    },
+    "sched": {
+        "baseline": "BENCH_sched.json",
+        "fresh": "sched_throughput.json",
+        "tables": [
+            ("rows", lambda b: b["rows"], ("arch", "seq"), {
+                "speedup": ("low", 0.05, 0.0),
+                "batch_rps": ("low", 0.05, 0.0),
+                "cont_rps": ("low", 0.05, 0.0),
+                "cont_p99_ttft": ("high", 0.05, 1e-4),
+                "bubble_frac": ("high", 0.05, 0.01),
+                "lease_refusals": ("high", 0.0, 0.0),
+            }),
+        ],
+    },
+}
+
+
+def _num(v) -> float:
+    return float(v)  # handles "4.8e-07" strings too
+
+
+def _check_metric(name: str, base, fresh, spec: MetricSpec):
+    """-> (delta_txt, regressed)."""
+    direction, rel, floor = spec
+    b, f = _num(base), _num(fresh)
+    worse = (b - f) if direction == "low" else (f - b)
+    allowed = max(rel * abs(b), floor)
+    return worse, worse > allowed + 1e-12
+
+
+def compare_one(name: str, baseline_dir: str = ROOT,
+                fresh_dir: str = FRESH_DIR) -> Tuple[List[dict], bool]:
+    spec = SPECS[name]
+    bpath = os.path.join(baseline_dir, spec["baseline"])
+    fpath = os.path.join(fresh_dir, spec["fresh"])
+    if not os.path.exists(bpath):
+        return [{"table": name, "key": "-", "metric": "(baseline missing)",
+                 "baseline": bpath, "fresh": "", "delta": "",
+                 "verdict": "FAIL"}], True
+    if not os.path.exists(fpath):
+        return [{"table": name, "key": "-", "metric": "(fresh run missing)",
+                 "baseline": "", "fresh": fpath, "delta": "",
+                 "verdict": "FAIL"}], True
+    base_blob = json.load(open(bpath))
+    fresh_blob = json.load(open(fpath))
+    deltas, regressed = [], False
+    for label, getter, key_fields, metrics in spec["tables"]:
+        fresh_rows = {tuple(str(r[k]) for k in key_fields): r
+                      for r in getter(fresh_blob)}
+        for brow in getter(base_blob):
+            key = tuple(str(brow[k]) for k in key_fields)
+            frow = fresh_rows.get(key)
+            if frow is None:
+                regressed = True
+                deltas.append({"table": f"{name}.{label}",
+                               "key": "/".join(key), "metric": "(row)",
+                               "baseline": "present", "fresh": "MISSING",
+                               "delta": "", "verdict": "FAIL"})
+                continue
+            for metric, mspec in metrics.items():
+                if metric not in brow:
+                    continue  # baseline predates the metric: nothing to gate
+                if metric not in frow:
+                    regressed = True
+                    deltas.append({"table": f"{name}.{label}",
+                                   "key": "/".join(key), "metric": metric,
+                                   "baseline": brow[metric],
+                                   "fresh": "MISSING", "delta": "",
+                                   "verdict": "FAIL"})
+                    continue
+                worse, bad = _check_metric(metric, brow[metric],
+                                           frow[metric], mspec)
+                regressed |= bad
+                deltas.append({"table": f"{name}.{label}",
+                               "key": "/".join(key), "metric": metric,
+                               "baseline": brow[metric],
+                               "fresh": frow[metric],
+                               "delta": f"{-worse:+.4g}"
+                                        if mspec[0] == "low"
+                                        else f"{worse:+.4g}",
+                               "verdict": "FAIL" if bad else "ok"})
+    return deltas, regressed
+
+
+def update_baselines(names, fresh_dir: str = FRESH_DIR,
+                     baseline_dir: str = ROOT) -> int:
+    """Refuses artifacts not stamped ``"quick": true`` — CI regenerates and
+    diffs with ``--quick``, so a baseline refreshed from a full-mode run
+    (different row sets / SA budgets) would brick the gate for every
+    subsequent PR."""
+    rc = 0
+    for name in names:
+        spec = SPECS[name]
+        src = os.path.join(fresh_dir, spec["fresh"])
+        dst = os.path.join(baseline_dir, spec["baseline"])
+        if json.load(open(src)).get("quick") is not True:
+            print(f"REFUSED {dst}: {src} is not a --quick artifact "
+                  "(regenerate with `python -m benchmarks.run --quick "
+                  f"--only {name}` — the CI gate compares --quick runs)")
+            rc = 1
+            continue
+        shutil.copyfile(src, dst)
+        print(f"baseline {dst} <- {src}")
+    return rc
+
+
+def main(argv=None) -> int:
+    from benchmarks.common import table
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--names", default="kvstore,attn_backend,sched",
+                    help="comma-separated subset of "
+                         f"{sorted(SPECS)}")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the fresh artifacts over the committed "
+                         "baselines instead of comparing")
+    args = ap.parse_args(argv)
+    names = [n for n in args.names.split(",") if n]
+    unknown = set(names) - set(SPECS)
+    if unknown:
+        print(f"unknown benchmark names: {sorted(unknown)}")
+        return 2
+    if args.update:
+        return update_baselines(names)
+    all_deltas, rc = [], 0
+    for name in names:
+        deltas, regressed = compare_one(name)
+        all_deltas += deltas
+        rc |= int(regressed)
+    print(table(all_deltas, ["table", "key", "metric", "baseline", "fresh",
+                             "delta", "verdict"]))
+    n_fail = sum(d["verdict"] == "FAIL" for d in all_deltas)
+    if rc:
+        print(f"REGRESSION: {n_fail} metric(s) beyond tolerance vs the "
+              "committed BENCH_*.json baselines (refresh intentionally with "
+              "`python -m benchmarks.compare --update`)")
+    else:
+        print(f"bench gate PASS: {len(all_deltas)} metrics within tolerance")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

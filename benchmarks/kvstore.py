@@ -225,6 +225,7 @@ def run(quick: bool = False) -> dict:
                       for k, v in val.items()))
     assert int8_gain >= 1.5, int8_gain
     result = {"config": {"M": M, "N": N, "page_tokens": PAGE_TOKENS},
+              "quick": quick,
               "capacity": cap_rows, "tiers": tier_rows, "validation": val}
     os.makedirs(OUT_DIR, exist_ok=True)
     path = os.path.join(OUT_DIR, "kvstore.json")

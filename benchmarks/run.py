@@ -56,16 +56,19 @@ def main(argv=None) -> int:
          roofline_report.main, False),
     ]
     rc = 0
+    ran = skipped = 0
     for name, desc, fn, needs_spmd in jobs:
         if only and name not in only:
             continue
         print(f"\n================ {name}: {desc} ================",
               flush=True)
         if needs_spmd and not compat.supports_partial_auto_spmd():
+            skipped += 1
             print(f"[{name} SKIP: installed jaxlib cannot partition "
                   "partial-auto shard_map (PartitionId); rerun on jax >= "
                   "the jax.shard_map release]")
             continue
+        ran += 1
         t0 = time.time()
         try:
             fn()
@@ -75,6 +78,14 @@ def main(argv=None) -> int:
             import traceback
             traceback.print_exc()
             print(f"[{name} FAILED: {e}]")
+    if ran == 0:
+        # every selected job was gated away (or --only matched nothing):
+        # an empty artifact set must FAIL the caller, not ride a green exit
+        # to the upload step
+        print(f"\nERROR: 0 of {skipped} selected job(s) ran "
+              f"({'all SKIPPED' if skipped else '--only matched no jobs'})",
+              flush=True)
+        return 1
     return rc
 
 

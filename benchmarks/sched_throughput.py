@@ -11,8 +11,10 @@ pays the pipeline fill/drain bubble per request; the continuous scheduler
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
-from benchmarks.common import emit, table
+from benchmarks.common import OUT_DIR, emit, table
 from repro.configs.base import get_config
 from repro.core import costmodel as cm
 from repro.runtime.engine import (ContinuousEngine, EngineConfig,
@@ -68,6 +70,13 @@ def main(quick: bool = False) -> None:
     path = emit("sched_throughput", rows)
     print(f"csv -> {path}")
     worst = min(r["speedup"] for r in rows)
+    # JSON twin of the CSV so the bench-regression gate (benchmarks.compare)
+    # can diff it against the committed BENCH_sched.json baseline
+    jpath = os.path.join(OUT_DIR, "sched_throughput.json")
+    with open(jpath, "w") as f:
+        json.dump({"quick": quick, "min_speedup": round(worst, 3),
+                   "rows": rows}, f, indent=1)
+    print(f"-> {jpath}")
     print(f"min speedup across sweep: {worst:.2f}x "
           f"({'PASS' if worst >= 1.5 else 'BELOW'} the 1.5x floor)")
 

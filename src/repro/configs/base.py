@@ -224,6 +224,13 @@ class RunConfig:
     # "jnp" = pure-jnp online-softmax reference; "pallas" = the flash kernel
     # kernels.ops.chunk_attention (interpret mode off-TPU, Mosaic on TPU)
     attn_backend: str = "jnp"
+    # backend-per-source mixing: the POOL-sourced partial states (own-pool
+    # scan, fetch'd chunks, the creditor-side qship scan) may run a
+    # different backend than the causal self block — e.g. pallas self-block
+    # + jnp remote partials. "auto" follows attn_backend; under "pallas"
+    # the pool scan is ONE batched slot-grid kernel launch (O(1) in pool
+    # depth) instead of one chunk_attention launch per occupied slot
+    pool_backend: str = "auto"
     # SSD inner loop for the ssm/hybrid stage programs, same knob pattern:
     # "jnp" = models.ssm.ssd_chunked reference; "pallas" = kernels.ops.ssd
     ssm_backend: str = "jnp"

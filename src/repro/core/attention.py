@@ -31,8 +31,15 @@ block update; the pallas backend hands payload + scales straight to the
 kernel, which dequantizes in its epilogue (quantized bytes cross HBM).
 
 Backends are selected per-plan via ``RunConfig.attn_backend`` ->
-``PipelinePlan.attn_backend``; registration is open for follow-ons (SSD
-backend for the ssm stage program, TPU-native qship kernel — ROADMAP).
+``PipelinePlan.attn_backend``, and may be MIXED per source:
+``RunConfig.pool_backend`` routes the pool-sourced partials (own-pool scan,
+fetch/qship) separately from the self block. A backend that advertises
+``batched_pool`` additionally fuses the whole pool scan into one
+``pool_block`` call — the pallas slot-grid kernel
+(``kernels.ops.pool_attention``) makes that a SINGLE launch per (layer,
+tick), O(1) in pool depth, vs one ``chunk_attention`` launch per occupied
+slot in the per-slot reference order. Registration is open for follow-ons
+(TPU-native qship kernel — ROADMAP).
 """
 from __future__ import annotations
 
@@ -106,15 +113,43 @@ class AttentionBackend:
     """One way to compute a partial attention state. Subclasses implement
     ``self_block`` (causal, within-chunk) and ``chunk_block`` (one stored
     chunk, full visibility, gated by a traced ``valid`` scalar); the combine
-    chain and finish are shared module-level functions."""
+    chain and finish are shared module-level functions.
+
+    ``batched_pool`` advertises a fused multi-slot path: when True,
+    ``pool_scan`` gathers every visited slot's pages in one shot and calls
+    ``pool_block`` ONCE (the pallas backend turns that into a single kernel
+    launch); when False the scan stays per-slot (the jnp reference order)."""
 
     name = "abstract"
+    batched_pool = False
 
     def self_block(self, qg, k, v, scale, st: State) -> State:
         raise NotImplementedError
 
     def chunk_block(self, qg, k, v, valid, scale, st: State) -> State:
         raise NotImplementedError
+
+    def pool_block(self, qg, kq, vq, ks, vs, valid, scale,
+                   st: State) -> State:
+        """Attention over a STACK of stored chunks: payloads ``kq``/``vq``
+        [S, B, Ck, K, D], per-page scales ``ks``/``vs`` [S, ppc, B, 1, K, 1]
+        (None for a passthrough codec), ``valid`` [S] bool (traced). The
+        base implementation is the per-slot ``lax.scan`` through
+        ``chunk_block_q`` — slot order preserved, numerically identical to
+        the unbatched pool scan; backends with a fused multi-slot kernel
+        (pallas) override it."""
+        def body(carry, xs):
+            if ks is None:
+                kqi, vqi, vi = xs
+                ksi = vsi = None
+            else:
+                kqi, vqi, ksi, vsi, vi = xs
+            return self.chunk_block_q(qg, kqi, vqi, ksi, vsi, vi, scale,
+                                      carry), None
+
+        xs = (kq, vq, valid) if ks is None else (kq, vq, ks, vs, valid)
+        st, _ = jax.lax.scan(body, st, xs)
+        return st
 
     def chunk_block_q(self, qg, kq, vq, k_scale, v_scale, valid, scale,
                       st: State) -> State:
@@ -155,6 +190,7 @@ class PallasBackend(AttentionBackend):
     Interpret mode off-TPU; real Mosaic lowering on TPU."""
 
     name = "pallas"
+    batched_pool = True
 
     @staticmethod
     def _to_state(m, l, acc, kvh: int) -> State:
@@ -201,6 +237,30 @@ class PallasBackend(AttentionBackend):
                                 ksc, vsc)
         return attn_combine(st, self._gate(s2, valid))
 
+    def pool_block(self, qg, kq, vq, ks, vs, valid, scale,
+                   st: State) -> State:
+        """Fused slot-grid kernel: ONE ``kernels.ops.pool_attention`` launch
+        covers every stored chunk (grid = B x H x q-blocks x slots x
+        kv-blocks), with per-slot validity gating and the quantized-page
+        dequant epilogue inside the kernel — launch count per pool scan is
+        O(1) in pool depth instead of O(slots)."""
+        if not self.batched_pool:  # flag is authoritative: per-slot order
+            return super().pool_block(qg, kq, vq, ks, vs, valid, scale, st)
+        from repro.kernels import ops
+        b, c, kvh, g, d = qg.shape
+        q = qg.reshape(b, c, kvh * g, d)
+        ksc = vsc = None
+        if ks is not None:
+            # per-page scales [S, ppc, B, 1, K, 1] -> per-token rows with a
+            # leading slot axis [S, B, Ck, K] (pages axis leading for
+            # expand_page_scale, slot axis rides in the batch dims)
+            pt = kq.shape[2] // ks.shape[1]
+            ksc = kvquant.expand_page_scale(jnp.moveaxis(ks, 1, 0), pt)[..., 0]
+            vsc = kvquant.expand_page_scale(jnp.moveaxis(vs, 1, 0), pt)[..., 0]
+        m, l, acc = ops.pool_attention(q, kq, vq, valid, scale=float(scale),
+                                       k_scale=ksc, v_scale=vsc)
+        return attn_combine(st, self._to_state(m, l, acc, kvh))
+
 
 _BACKENDS: Dict[str, Callable[[], AttentionBackend]] = {}
 
@@ -236,7 +296,13 @@ def pool_scan(backend: AttentionBackend, qg, pool_l, slot_pages, slot_chunk,
     each visited slot's pages are gathered, and the ENCODED chunk goes to
     ``chunk_block_q`` (dequant-on-read is the backend's business).
     ``slots``: optional static subset of slot indices to visit (the creditor
-    scan touches only the few host slots, not the whole pool)."""
+    scan touches only the few host slots, not the whole pool).
+
+    Two traversal orders, numerically reconciled by tests: a backend with
+    ``batched_pool`` gets every visited slot's pages in ONE gather and ONE
+    ``pool_block`` call (the pallas slot-grid kernel — a single launch);
+    otherwise the per-slot ``lax.scan`` below is the reference order (one
+    chunk-layer resident at a time, one ``chunk_block_q`` per slot)."""
     k_l, v_l, ks_l, vs_l = pool_l
     if slots is not None:
         if len(slots) == 0:
@@ -250,6 +316,12 @@ def pool_scan(backend: AttentionBackend, qg, pool_l, slot_pages, slot_chunk,
             return st
         chunk_ids = jnp.asarray(slot_chunk[:nslots])
         page_rows = jnp.asarray(slot_pages[:nslots])
+
+    if backend.batched_pool:
+        kq, vq, ks, vs = kvpages.gather_chunks(k_l, v_l, ks_l, vs_l,
+                                               page_rows)
+        valid = (chunk_ids >= 0) & (chunk_ids < limit)
+        return backend.pool_block(qg, kq, vq, ks, vs, valid, scale, st)
 
     def body(carry, xs):
         pages, cid = xs

@@ -6,8 +6,7 @@ HGX-class GPU system (NVLink-limited; Fig. 1(c)), and the TPU v5e target.
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np

@@ -11,7 +11,7 @@ boundary perturbed per iteration, temperature-controlled acceptance.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np

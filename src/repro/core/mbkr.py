@@ -22,7 +22,7 @@ e.g. M = N = 16: peak 12 vs 16 — the 1/(1 - N/(4M)) = 1.33x max-seq-len gain.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np

@@ -38,6 +38,10 @@ class PipelinePlan:
     p2: int                   # spill threshold (chunks >= p2 spill); M if no MBKR
     remote_attn: str = "qship"   # fetch | qship
     attn_backend: str = "jnp"    # jnp | pallas (core.attention registry)
+    pool_backend: str = "jnp"    # backend for POOL-sourced partials (own
+                                 # pool scan + fetch/qship); resolved from
+                                 # RunConfig.pool_backend ("auto" follows
+                                 # attn_backend) — never "auto" here
     ssm_backend: str = "jnp"     # jnp | pallas (kernels.ops.ssd)
     spill_dtype: str = "bfloat16"  # int8 -> wire-only spill compression
     ship_dtype: str = "bfloat16"   # qship q/acc wire format (= model dtype)
@@ -94,10 +98,13 @@ def build_plan(cfg: ModelConfig, num_stages: int, seq_len: int,
     """Derive the static pipeline plan for one (arch, shape, run) cell."""
     mode = mode or ("mocap" if run.mbkr else "terapipe")
     m = run.num_chunks
+    pool_backend = (run.attn_backend if run.pool_backend in ("auto", "", None)
+                    else run.pool_backend)
     if mode == "gpipe":
         return PipelinePlan(mode, num_stages, m, 0,
                             _layers_per_stage(cfg, num_stages), 0, m,
                             attn_backend=run.attn_backend,
+                            pool_backend=pool_backend,
                             ssm_backend=run.ssm_backend)
     assert seq_len % m == 0, f"seq_len {seq_len} must divide into {m} chunks"
     c = seq_len // m
@@ -113,6 +120,7 @@ def build_plan(cfg: ModelConfig, num_stages: int, seq_len: int,
         num_slots=mp.num_slots, p2=mp.p2,
         remote_attn=run.remote_attn,
         attn_backend=run.attn_backend,
+        pool_backend=pool_backend,
         ssm_backend=run.ssm_backend,
         spill_dtype=run.kv_spill_dtype,
         ship_dtype=cfg.dtype,   # wire in model precision (bf16 in prod)

@@ -22,12 +22,15 @@ preserved bit-for-bit (quantize on the wire, dequantize into the pool).
 
 All attention math inside both paths routes through the pluggable backend
 (``core.attention``), so fetch/qship work identically under jnp and pallas.
-The functions take the per-trace stage context (``core.stagestep.StageCtx``)
-duck-typed to keep this layer import-light.
+The caller passes the plan's POOL backend (``plan.pool_backend``) — remote
+partials are pool-sourced, so they follow the pool knob, not the self-block
+one; under pallas the creditor-side qship scan is the batched slot-grid
+kernel (one launch over ``host_slots_used``). The functions take the
+per-trace stage context (``core.stagestep.StageCtx``) duck-typed to keep
+this layer import-light.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -110,7 +113,9 @@ def fetch_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State) -> State
 
 def qship_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State) -> State:
     """Beyond-paper qship: ship my Q to the creditor, which runs the backend
-    over ONLY the host slots it holds for me, then ships back (m, l, acc)."""
+    over ONLY the host slots it holds for me, then ships back (m, l, acc).
+    With a ``batched_pool`` backend the creditor-side scan is ONE slot-grid
+    kernel launch over the host-slot subset (``pool_scan`` handles both)."""
     plan = ctx.plan
     b, c, kvh, g, d = qg.shape
     sd = jnp.dtype(plan.ship_dtype)

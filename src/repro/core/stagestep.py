@@ -53,13 +53,21 @@ def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
                  k_new: jax.Array, v_new: jax.Array,
                  pool) -> jax.Array:
     """Full MOCAP attention for one layer of the current chunk:
-    own-pool prefix + (MBKR) remote prefix + causal self block, all through
-    the plan's attention backend.
+    own-pool prefix + (MBKR) remote prefix + causal self block.
     q [B,C,H,D]; k_new/v_new [B,C,K,D]; ``pool`` is the stage's paged KV
     store (``kvstore.pages.PagedPool``: payloads [P, lps, B, pt, K, D] +
-    per-head scales when quantized)."""
+    per-head scales when quantized).
+
+    Backends mix per SOURCE (the combine chain is backend-independent):
+    the causal self block runs ``plan.attn_backend``; every POOL-sourced
+    partial — the own-pool scan, fetch'd chunks, the creditor-side qship
+    scan — runs ``plan.pool_backend`` (= attn_backend unless overridden
+    via RunConfig.pool_backend). Under pallas the pool scan is one batched
+    slot-grid kernel launch per (layer, tick), O(1) in pool depth."""
     plan = ctx.plan
     backend = get_backend(plan.attn_backend)
+    pool_be = backend if plan.pool_backend == plan.attn_backend \
+        else get_backend(plan.pool_backend)
     b, c, h, d = q.shape
     kvh = k_new.shape[2]
     qg = group_queries(q, kvh)
@@ -69,15 +77,15 @@ def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
 
     # 1. own local prefix: chunks j < min(phase, p2)
     limit = jnp.minimum(ctx.phase, plan.p2)
-    st = pool_scan(backend, qg, pool_l, plan.slot_pages, plan.slot_own_chunk,
+    st = pool_scan(pool_be, qg, pool_l, plan.slot_pages, plan.slot_own_chunk,
                    limit, ctx.scale, st)
 
     # 2. remote prefix: chunks p2 <= j < phase live at my pair
     if plan.p2 < plan.num_chunks and plan.mode == "mocap":
         if plan.remote_attn == "fetch":
-            st = remote.fetch_remote(ctx, backend, qg, pool_l, st)
+            st = remote.fetch_remote(ctx, pool_be, qg, pool_l, st)
         else:
-            st = remote.qship_remote(ctx, backend, qg, pool_l, st)
+            st = remote.qship_remote(ctx, pool_be, qg, pool_l, st)
 
     # 3. self block (causal)
     st = backend.self_block(qg, k_new, v_new, ctx.scale, st)

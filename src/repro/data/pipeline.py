@@ -11,7 +11,7 @@ enough signal for the end-to-end training example without external data.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

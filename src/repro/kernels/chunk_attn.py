@@ -10,6 +10,11 @@ TPU); online-softmax accumulators live in fp32 VMEM scratch. Block shapes are
 (block_q, head_dim) / (block_k, head_dim) with head_dim padded to the 128-lane
 width by the wrapper (`ops.chunk_attention`). Blocks strictly above the causal
 diagonal are skipped via ``pl.when`` (no MXU work issued).
+
+``pool_attention_pallas`` is the batched sibling for MOCAP's POOL scan: the
+same online softmax with a slot axis in the grid — (B, H, nq, slots, nk) —
+so one launch covers every stored chunk a consumer attends over, instead of
+one launch (and one traced-level combine round-trip) per occupied slot.
 """
 from __future__ import annotations
 
@@ -25,6 +30,25 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
 NEG_INF = float(-1e30)
+
+
+def _block_update(q, k, v, mask, scale, m_ref, l_ref, acc_ref):
+    """One online-softmax block update against the VMEM scratch state —
+    shared by the per-chunk and the batched pool kernels (q/k/v already
+    fp32 and dequantized; only the mask differs between callers)."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    m_safe = jnp.where(m_new < NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe[:, None])
+    corr = jnp.exp(m_prev - m_safe)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+    m_ref[...] = m_new
 
 
 def _attn_kernel(q_ref, k_ref, v_ref, *refs,
@@ -70,20 +94,8 @@ def _attn_kernel(q_ref, k_ref, v_ref, *refs,
         if ksc_ref is not None:
             k = k * ksc_ref[0, :, 0][:, None]
             v = v * vsc_ref[0, :, 0][:, None]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
         mask = (k_pos <= q_pos + causal_offset) & (k_pos < kv_len)
-        s = jnp.where(mask, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=1))
-        m_safe = jnp.where(m_new < NEG_INF / 2, 0.0, m_new)
-        p = jnp.exp(s - m_safe[:, None])
-        corr = jnp.exp(m_prev - m_safe)
-        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
-        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
-        m_ref[...] = m_new
+        _block_update(q, k, v, mask, scale, m_ref, l_ref, acc_ref)
 
     @pl.when(kb == nk - 1)
     def _finish():
@@ -93,6 +105,128 @@ def _attn_kernel(q_ref, k_ref, v_ref, *refs,
             mo_ref[0, 0, :] = m_ref[...]
             lo_ref[0, 0, :] = l_ref[...]
             ao_ref[0, :, 0, :] = acc_ref[...]
+
+
+def _pool_kernel(q_ref, k_ref, v_ref, valid_ref, *refs,
+                 scale: float, kv_len: int, block_q: int, block_k: int,
+                 quantized: bool = False):
+    """Slot-grid pool attention: ONE launch over a stack of stored chunks.
+
+    Grid = (B, H, nq, S, nk) with (slot, kv-block) innermost and sequential,
+    so the online-softmax scratch accumulates across every slot's KV blocks
+    — the fused form of the per-slot ``chunk_attention`` + combine chain.
+    Every stored chunk is fully visible (no causal diagonal); a slot whose
+    ``valid`` flag is 0 issues no MXU work and contributes the identity
+    state, exactly like the gated per-slot path."""
+    if quantized:  # extra inputs: per-(slot, token, kv-head) dequant scales
+        ksc_ref, vsc_ref, *refs = refs
+    else:
+        ksc_ref = vsc_ref = None
+    mo_ref, lo_ref, ao_ref, m_ref, l_ref, acc_ref = refs
+    si = pl.program_id(3)
+    kb = pl.program_id(4)
+    ns = pl.num_programs(3)
+    nk = pl.num_programs(4)
+
+    @pl.when((si == 0) & (kb == 0))
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_pos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    @pl.when(valid_ref[0, 0] != 0)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, 0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, 0, :, 0, :].astype(jnp.float32)
+        if ksc_ref is not None:
+            k = k * ksc_ref[0, 0, :, 0][:, None]
+            v = v * vsc_ref[0, 0, :, 0][:, None]
+        # stored chunks are fully visible: only page padding masks
+        _block_update(q, k, v, k_pos < kv_len, scale, m_ref, l_ref, acc_ref)
+
+    @pl.when((si == ns - 1) & (kb == nk - 1))
+    def _finish():
+        mo_ref[0, 0, :] = m_ref[...]
+        lo_ref[0, 0, :] = l_ref[...]
+        ao_ref[0, :, 0, :] = acc_ref[...]
+
+
+def pool_attention_pallas(
+    q: jax.Array, k: jax.Array, v: jax.Array, valid: jax.Array, *,
+    scale: Optional[float] = None, kv_len: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q, block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+    k_scale: Optional[jax.Array] = None, v_scale: Optional[jax.Array] = None,
+):
+    """Batched pool attention: q [B, C, H, D] vs a STACK of stored chunks
+    k, v [S, B, T, KVH, D] (T padded to a multiple of block_k), in one
+    kernel launch. ``valid`` [S, 1] int32 gates each slot (0 = identity
+    contribution). Returns ONLY the online-softmax state — ``(m, l)
+    [B, H, C]`` fp32 and the unnormalized accumulator ``acc [B, C, H, D]``
+    fp32 — because the caller always combines the pool state with the self
+    block / remote partials before normalizing.
+
+    ``kv_len``: VALID tokens per chunk (uniform chunks; pad rows masked).
+    ``k_scale``/``v_scale`` [S, T, ...]-shaped ``[S, B, T, KVH]`` fp32: when
+    given, k/v are quantized page payloads and the per-slot scale rows (the
+    page store's per-page scales expanded per token, slot axis leading) are
+    multiplied out in the kernel epilogue after the block load."""
+    b, c, h, d = q.shape
+    ns, t, kvh = k.shape[0], k.shape[2], k.shape[3]
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kv_len = kv_len if kv_len is not None else t
+    block_q = min(block_q, c)
+    block_k = min(block_k, t)
+    assert c % block_q == 0 and t % block_k == 0, (c, t, block_q, block_k)
+    nq, nk = c // block_q, t // block_k
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None)
+
+    grid = (b, h, nq, ns, nk)
+    kernel = functools.partial(
+        _pool_kernel, scale=scale, kv_len=kv_len,
+        block_q=block_q, block_k=block_k, quantized=quantized)
+    ml_spec = pl.BlockSpec((1, 1, block_q),
+                           lambda bi, hi, qi, si, ki: (bi, hi, qi))
+    acc_spec = pl.BlockSpec((1, block_q, 1, d),
+                            lambda bi, hi, qi, si, ki: (bi, qi, hi, 0))
+    out_shapes = [jax.ShapeDtypeStruct((b, h, c), jnp.float32)] * 2 \
+        + [jax.ShapeDtypeStruct((b, c, h, d), jnp.float32)]
+    kv_spec = pl.BlockSpec((1, 1, block_k, 1, d),
+                           lambda bi, hi, qi, si, ki: (si, bi, ki, hi // g, 0))
+    in_specs = [
+        pl.BlockSpec((1, block_q, 1, d),
+                     lambda bi, hi, qi, si, ki: (bi, qi, hi, 0)),
+        kv_spec,
+        kv_spec,
+        pl.BlockSpec((1, 1), lambda bi, hi, qi, si, ki: (si, 0),
+                     memory_space=pltpu.SMEM),
+    ]
+    args = [q, k, v, valid.astype(jnp.int32)]
+    if quantized:
+        sc_spec = pl.BlockSpec((1, 1, block_k, 1),
+                               lambda bi, hi, qi, si, ki: (si, bi, ki, hi // g))
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+    m, l, acc = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[ml_spec, ml_spec, acc_spec],
+        out_shape=out_shapes,
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max
+            pltpu.VMEM((block_q,), jnp.float32),      # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(*args)
+    return m, l, acc
 
 
 def chunk_attention_pallas(

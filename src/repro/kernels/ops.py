@@ -6,6 +6,7 @@ kernels are validated in interpret mode and TARGET TPU — see DESIGN.md).
 """
 from __future__ import annotations
 
+import contextlib
 import math
 from functools import partial
 from typing import Optional
@@ -22,6 +23,51 @@ LANE = 128
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# --------------------------------------------------- launch-counting test hook
+# Counts RUNTIME kernel invocations (a kernel traced once inside a lax.scan
+# body still launches once per iteration — the thing the batched pool kernel
+# amortizes), via a debug callback staged next to each pallas_call.
+
+_LAUNCHES = {"enabled": False, "count": 0}
+
+
+def _note_launch() -> None:
+    if not _LAUNCHES["enabled"]:
+        return
+
+    def _bump():
+        _LAUNCHES["count"] += 1
+
+    jax.debug.callback(_bump)
+
+
+@contextlib.contextmanager
+def count_launches():
+    """Context manager: count Pallas kernel launches executed inside.
+
+        with ops.count_launches() as launches:
+            fn(*args)  # must TRACE inside the context (caches are cleared)
+        assert launches["count"] == ...
+
+    The enable flag is read at trace time, so the wrappers' jit caches are
+    cleared on entry/exit — callers pay a retrace, tests only."""
+    jitted = (chunk_attention, pool_attention, ssd, decode_attention)
+    _LAUNCHES["enabled"] = True
+    _LAUNCHES["count"] = 0
+    for f in jitted:
+        f.clear_cache()
+    try:
+        yield _LAUNCHES
+    finally:
+        # debug callbacks flush asynchronously under real (TPU) dispatch —
+        # block_until_ready() alone does not order them before the caller's
+        # read of launches["count"]
+        jax.effects_barrier()
+        _LAUNCHES["enabled"] = False
+        for f in jitted:
+            f.clear_cache()
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -67,6 +113,7 @@ def chunk_attention(q, k, v, *, causal_offset: int = 0,
     if k_scale is not None:
         k_scale = _pad_to(k_scale, 1, bk)  # pad rows are masked via kv_len
         v_scale = _pad_to(v_scale, 1, bk)
+    _note_launch()
     res = _ca.chunk_attention_pallas(
         qp, kp, vp, causal_offset=causal_offset, scale=scale, kv_len=t,
         block_q=bq, block_k=bk, interpret=not _on_tpu(),
@@ -75,6 +122,42 @@ def chunk_attention(q, k, v, *, causal_offset: int = 0,
         out, m, l, acc = res
         return out[..., :d], m, l, acc[..., :d]
     return res[..., :d]
+
+
+@partial(jax.jit, static_argnames=("scale", "block_q", "block_k"))
+def pool_attention(q, k, v, valid, *, scale: Optional[float] = None,
+                   block_q: int = _ca.DEFAULT_BLOCK_Q,
+                   block_k: int = _ca.DEFAULT_BLOCK_K,
+                   k_scale=None, v_scale=None):
+    """Batched pool attention (MOCAP pool scan, single launch). See
+    ``chunk_attn.pool_attention_pallas``.
+
+    q [B, C, H, D]; k, v [S, B, T, KVH, D] — a stack of S stored chunks,
+    each fully visible; ``valid`` [S] bool/int gates slots (False slot ==
+    identity-state contribution, exactly). ``k_scale``/``v_scale``
+    [S, B, T, KVH]: quantized page payloads, dequantized in the kernel
+    epilogue. Returns the fp32 online-softmax state ``(m, l) [B, H, C]`` +
+    unnormalized ``acc [B, C, H, D]`` for the caller's combine chain —
+    the launch count is O(1) in pool depth instead of O(slots)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    t, c = k.shape[2], q.shape[1]
+    bq = min(block_q, c)
+    while c % bq:
+        bq //= 2
+    bk = min(block_k, t)
+    qp = _pad_to(q, 3, LANE)
+    kp = _pad_to(_pad_to(k, 4, LANE), 2, bk)
+    vp = _pad_to(_pad_to(v, 4, LANE), 2, bk)
+    if k_scale is not None:
+        k_scale = _pad_to(k_scale, 2, bk)  # pad rows are masked via kv_len
+        v_scale = _pad_to(v_scale, 2, bk)
+    _note_launch()
+    m, l, acc = _ca.pool_attention_pallas(
+        qp, kp, vp, valid.astype(jnp.int32).reshape(-1, 1),
+        scale=scale, kv_len=t, block_q=bq, block_k=bk,
+        interpret=not _on_tpu(), k_scale=k_scale, v_scale=v_scale)
+    return m, l, acc[..., :d]
 
 
 def full_attention(q, k, v, *, scale: Optional[float] = None,
@@ -98,6 +181,7 @@ def ssd(x, dt, a_log, b, c, d_skip, *, chunk: int = 128, init_state=None,
     while t % ck:
         ck //= 2
     interpret = (not _on_tpu()) if interpret is None else interpret
+    _note_launch()
     return _ssd.ssd_pallas(x, dt, a_log, b, c, d_skip, chunk=ck,
                            init_state=init_state, interpret=interpret)
 
@@ -115,6 +199,7 @@ def decode_attention(q, k, v, kv_len, *, scale: Optional[float] = None,
     bs = min(block_s, s_len)
     while s_len % bs:
         bs //= 2
+    _note_launch()
     out = _da.decode_attention_pallas(qp, kp, vp, kv_len, scale=scale,
                                       block_s=bs, interpret=not _on_tpu())
     return out[..., :d]

@@ -191,3 +191,29 @@ def gather_chunk(k_l: jax.Array, v_l: jax.Array,
         ks = jnp.take(ks_l, pages, axis=0)     # [ppc, B, 1, kvh, 1]
         vs = jnp.take(vs_l, pages, axis=0)
     return kq, vq, ks, vs
+
+
+def gather_chunks(k_l: jax.Array, v_l: jax.Array,
+                  ks_l: Optional[jax.Array], vs_l: Optional[jax.Array],
+                  page_rows: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array,
+                             Optional[jax.Array], Optional[jax.Array]]:
+    """``gather_chunk`` over a STACK of slots in one shot: ``page_rows``
+    [S, ppc] (traced) -> payloads [S, B, C, kvh, hd] + per-page scales
+    [S, ppc, B, 1, kvh, 1]. One batched take per tensor — the feed for the
+    batched pool kernel (``kernels.ops.pool_attention``), where the slot
+    axis becomes a grid dimension instead of a scan carry."""
+    s, ppc = page_rows.shape
+    flat = page_rows.reshape(-1)
+    kq = jnp.take(k_l, flat, axis=0)           # [S*ppc, B, pt, kvh, hd]
+    vq = jnp.take(v_l, flat, axis=0)
+    _, b, pt, kvh, hd = kq.shape
+    kq = kq.reshape(s, ppc, b, pt, kvh, hd).transpose(0, 2, 1, 3, 4, 5) \
+           .reshape(s, b, ppc * pt, kvh, hd)
+    vq = vq.reshape(s, ppc, b, pt, kvh, hd).transpose(0, 2, 1, 3, 4, 5) \
+           .reshape(s, b, ppc * pt, kvh, hd)
+    ks = vs = None
+    if ks_l is not None:
+        ks = jnp.take(ks_l, flat, axis=0).reshape(s, ppc, *ks_l.shape[1:])
+        vs = jnp.take(vs_l, flat, axis=0).reshape(s, ppc, *vs_l.shape[1:])
+    return kq, vq, ks, vs

@@ -32,7 +32,8 @@ SHAPE_NAMES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
              out_dir: str, attn_backend: str = "jnp",
-             kv_dtype: str = "auto", kv_page_tokens: int = 0) -> dict:
+             kv_dtype: str = "auto", kv_page_tokens: int = 0,
+             pool_backend: str = "auto") -> dict:
     from repro import compat
     from repro.configs.base import SHAPES, get_config
     from repro.launch.cells import SkipCell, build_cell
@@ -45,7 +46,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
     chips = topo.mesh.size
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "mode": mode,
            "chips": chips, "attn_backend": attn_backend,
-           "kv_dtype": kv_dtype, "ok": False}
+           "pool_backend": pool_backend, "kv_dtype": kv_dtype, "ok": False}
     t0 = time.time()
     try:
         if mode == "mocap_opt":
@@ -53,12 +54,14 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
             # + sequence-parallel residual + EP for MoE + compact host scan
             run = RunConfig(num_stages=topo.num_stages,
                             attn_sharding="kv_split",
-                            attn_backend=attn_backend, kv_dtype=kv_dtype,
+                            attn_backend=attn_backend,
+                            pool_backend=pool_backend, kv_dtype=kv_dtype,
                             kv_page_tokens=kv_page_tokens)
             cell = build_cell(arch, shape_name, topo, mode="mocap", run=run)
         else:
             run = RunConfig(num_stages=topo.num_stages,
-                            attn_backend=attn_backend, kv_dtype=kv_dtype,
+                            attn_backend=attn_backend,
+                            pool_backend=pool_backend, kv_dtype=kv_dtype,
                             kv_page_tokens=kv_page_tokens)
             cell = build_cell(arch, shape_name, topo, mode=mode, run=run)
     except SkipCell as e:
@@ -122,6 +125,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     choices=("jnp", "pallas"),
                     help="attention backend for pipeline modes "
                          "(core.attention registry)")
+    ap.add_argument("--pool-backend", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="backend for pool-sourced partials (own-pool scan "
+                         "+ fetch/qship); auto follows --attn-backend")
     ap.add_argument("--kv-dtype", default="auto",
                     choices=("auto", "bfloat16", "int8", "fp8"),
                     help="KV page-store codec for pipeline modes "
@@ -144,12 +151,13 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     if args.jobs > 1:
         return _run_parallel(cells, args.out, args.jobs, args.attn_backend,
-                             args.kv_dtype, args.kv_page_tokens)
+                             args.kv_dtype, args.kv_page_tokens,
+                             args.pool_backend)
 
     failures = 0
     for arch, shape, mesh, mode in cells:
         rec = run_cell(arch, shape, mesh, mode, args.out, args.attn_backend,
-                       args.kv_dtype, args.kv_page_tokens)
+                       args.kv_dtype, args.kv_page_tokens, args.pool_backend)
         path = save(rec, args.out)
         status = ("SKIP" if rec.get("skipped") else
                   "OK" if rec["ok"] else "FAIL")
@@ -162,7 +170,7 @@ def main(argv: Optional[List[str]] = None) -> int:
 
 def _run_parallel(cells, out_dir: str, jobs: int,
                   attn_backend: str = "jnp", kv_dtype: str = "auto",
-                  kv_page_tokens: int = 0) -> int:
+                  kv_page_tokens: int = 0, pool_backend: str = "auto") -> int:
     procs: List[Tuple[subprocess.Popen, tuple]] = []
     pending = list(cells)
     failures = 0
@@ -171,7 +179,8 @@ def _run_parallel(cells, out_dir: str, jobs: int,
         arch, shape, mesh, mode = cell
         cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
                "--shape", shape, "--mesh", mesh, "--mode", mode,
-               "--attn-backend", attn_backend, "--kv-dtype", kv_dtype,
+               "--attn-backend", attn_backend, "--pool-backend", pool_backend,
+               "--kv-dtype", kv_dtype,
                "--kv-page-tokens", str(kv_page_tokens), "--out", out_dir]
         return subprocess.Popen(cmd, stdout=subprocess.PIPE,
                                 stderr=subprocess.STDOUT, text=True)

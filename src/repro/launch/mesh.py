@@ -13,7 +13,6 @@ Axis semantics (DESIGN.md §3):
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 

@@ -10,6 +10,9 @@ itself), or --executor sim for the analytic executor at production scale.
 --attn-backend picks the attention inner loop (core.attention registry):
 "jnp" is the pure-jnp online-softmax reference, "pallas" the flash kernel
 ``kernels.ops.chunk_attention`` (interpret mode off-TPU, Mosaic on TPU).
+--pool-backend overrides the backend for POOL-sourced partials only (the
+own-pool scan + fetch/qship) — backend-per-source mixing; under pallas the
+pool scan is a single batched slot-grid kernel launch per (layer, tick).
 
 Continuous chunk-level scheduling (cross-request pipelining, repro.sched):
 
@@ -24,7 +27,6 @@ edf); --slo-ms stamps deadlines so EDF and the SLO-attainment metric bite.
 from __future__ import annotations
 
 import argparse
-import math
 import time
 
 import numpy as np
@@ -33,7 +35,6 @@ from repro.configs.base import RunConfig, get_config, get_smoke_config, replace
 from repro.core import costmodel as cm
 from repro.core import pipeline as pp
 from repro.models.api import build_model
-from repro.models.topology import Topology
 from repro.runtime.engine import (ContinuousEngine, EngineConfig, JaxExecutor,
                                   PrefillEngine, Request, SimExecutor)
 
@@ -96,6 +97,13 @@ def main(argv=None) -> int:
                     help="attention inner-loop backend (core.attention): "
                          "jnp = pure-jnp reference, pallas = the flash "
                          "kernel (interpret mode off-TPU)")
+    ap.add_argument("--pool-backend", default="auto",
+                    choices=("auto", "jnp", "pallas"),
+                    help="backend for POOL-sourced partials (own-pool scan "
+                         "+ fetch/qship) — mixable with --attn-backend, "
+                         "e.g. pallas self-block + jnp remote partials; "
+                         "auto follows --attn-backend. pallas = ONE batched "
+                         "slot-grid kernel launch per pool scan")
     ap.add_argument("--ssm-backend", default="jnp",
                     choices=("jnp", "pallas"),
                     help="SSD inner loop for ssm/hybrid archs "
@@ -150,6 +158,7 @@ def main(argv=None) -> int:
         topo = make_test_topology(stages, tp)
         run = RunConfig(num_chunks=args.num_chunks, num_stages=stages,
                         attn_backend=args.attn_backend,
+                        pool_backend=args.pool_backend,
                         ssm_backend=args.ssm_backend,
                         kv_dtype=args.kv_dtype,
                         kv_page_tokens=args.kv_page_tokens,

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 import time
-from dataclasses import replace as dc_replace
 
 import jax
 import jax.numpy as jnp

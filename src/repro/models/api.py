@@ -17,7 +17,6 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import hybrid, ssm, transformer, whisper
 from repro.models import layers as L
-from repro.models.topology import Topology
 
 
 @dataclass(frozen=True)

@@ -7,7 +7,7 @@ The chunked SSD algorithm here is also the oracle for the Pallas kernel in
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ KV cache layout: dict(k=[L,B,S,K,Dh], v=[L,B,S,K,Dh], pos=[B]).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

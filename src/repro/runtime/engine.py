@@ -30,7 +30,7 @@ Two engines share the executors:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace as dc_replace
+from dataclasses import dataclass, replace as dc_replace
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -159,7 +159,6 @@ class JaxExecutor:
             num_stages: int, tp: int) -> Tuple[float, np.ndarray]:
         import time
         import jax
-        import jax.numpy as jnp
         seq = int(sum(chunks))
         key = (seq, len(chunks))
         if key not in self._fns:

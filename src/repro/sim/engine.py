@@ -23,8 +23,8 @@ from __future__ import annotations
 
 import math
 from bisect import insort
-from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 

@@ -7,14 +7,12 @@ the model's scan-over-layers.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, RunConfig
 from repro.models.api import Model
 from repro.models.topology import Topology
 from repro.train.optim import AdamWConfig, adamw_init, adamw_update

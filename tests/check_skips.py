@@ -1,0 +1,76 @@
+"""Assert the tier-1 SKIP matrix matches the installed jax capabilities.
+
+The CI ``tier1`` job runs on a jax matrix (current release + the oldest
+supported jaxlib, which predates ``jax.shard_map`` and therefore takes the
+``compat.supports_partial_auto_spmd`` fallback path everywhere). A compat
+drift — a test silently skipping on NEW jax, or the old-jaxlib leg skipping
+more/less than the two known kv_split/EP tests — should fail CI, not
+surface on user machines. This script parses a ``pytest -rs`` log and
+asserts the exact expected skip counts per reason class:
+
+- "old jaxlib"/PartitionId skips: exactly 2 (test_perf_variants kv_split +
+  EP) when partial-auto SPMD is unsupported, exactly 0 otherwise.
+- hypothesis skips: exactly 0 when hypothesis is importable (CI installs
+  it), exactly 4 otherwise (3 importorskip modules + the guarded
+  ragged-occupancy property test).
+- anything else: unknown skip reason -> fail.
+
+Usage:
+  PYTHONPATH=src python -m pytest -q -rs 2>&1 | tee pytest-report.log
+  PYTHONPATH=src python tests/check_skips.py pytest-report.log
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+SKIP_RE = re.compile(r"^SKIPPED \[(\d+)\] [^:]+(?::\d+)?: (.*)$", re.M)
+
+# the whisper-encoder case inside a hypothesis property test
+_ALLOWED_CONDITIONAL = ("causal-only",)
+
+
+def main(path: str) -> int:
+    from repro import compat
+    try:
+        import hypothesis  # noqa: F401
+        have_hyp = True
+    except ImportError:
+        have_hyp = False
+
+    text = open(path).read()
+    skips = [(int(m.group(1)), m.group(2).strip())
+             for m in SKIP_RE.finditer(text)]
+    n_partial = sum(c for c, r in skips
+                    if "old jaxlib" in r or "PartitionId" in r)
+    n_hyp = sum(c for c, r in skips if "hypothesis" in r)
+    unknown = [(c, r) for c, r in skips
+               if "old jaxlib" not in r and "PartitionId" not in r
+               and "hypothesis" not in r
+               and not any(a in r for a in _ALLOWED_CONDITIONAL)]
+
+    exp_partial = 0 if compat.supports_partial_auto_spmd() else 2
+    exp_hyp = 0 if have_hyp else 4
+    ok = True
+    if n_partial != exp_partial:
+        ok = False
+        print(f"FAIL: {n_partial} partial-auto-SPMD skips, expected "
+              f"{exp_partial} (supports_partial_auto_spmd()="
+              f"{compat.supports_partial_auto_spmd()}) — compat drift: "
+              "either a fallback path regressed or a new gated test wasn't "
+              "registered here")
+    if n_hyp != exp_hyp:
+        ok = False
+        print(f"FAIL: {n_hyp} hypothesis skips, expected {exp_hyp} "
+              f"(hypothesis importable={have_hyp})")
+    if unknown:
+        ok = False
+        print(f"FAIL: unknown skip reasons: {unknown}")
+    if ok:
+        print(f"skip matrix OK: partial-auto={n_partial} "
+              f"hypothesis={n_hyp} (jax capabilities match expectations)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1]))

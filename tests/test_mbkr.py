@@ -5,7 +5,6 @@ prove (a) no slot is ever clobbered while live, (b) attention always finds
 every prefix chunk, (c) the pool is strictly smaller than the Terapipe
 baseline whenever the cross-half stagger gives headroom.
 """
-import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # property tests need it; skip the
 #   module cleanly instead of erroring out the whole collection

@@ -3,7 +3,6 @@ batch-synchronous engine, KV leases never exceed the MBKR slot budget under
 concurrent requests, EDF beats FCFS on an adversarial deadline trace, and the
 trace/metrics/arrival plumbing is sound."""
 import json
-import math
 
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Event/lockstep simulator tests: closed-form agreement, paper orderings,
 OOM detection, and the uniform-chunks stagger-collapse finding."""
-import numpy as np
 import pytest
 
 from repro.configs.base import get_config
