@@ -45,6 +45,24 @@ CASES = [
 ]
 
 
+def _wire_bytes(b, c, kvh, g, d, npool):
+    """§3.4 per-(layer, tick) remote-traffic pricing of this case's
+    geometry, fp32 wire (the bench tensors' dtype) — the same formulas the
+    transport CollectiveLedger is pinned to at runtime within 1%
+    (core.transport.analytic_wire_bytes / tests/test_transport.py):
+
+      fetch  = n_remote chunk-layer payloads (2 * C * kvh * hd each),
+      qship  = one Q ship + one (m, l) fp32 + acc return, n_remote-free.
+
+    Deterministic byte counts -> exact directional gates in compare.py
+    (remote traffic must never regress upward unnoticed)."""
+    h = kvh * g
+    fetch = npool * (2 * b * c * kvh * d) * 4.0
+    qship = (b * c * h * d) * 4.0 + 2 * (b * h * c) * 4.0 \
+        + (b * c * h * d) * 4.0
+    return fetch, qship
+
+
 def _pool_fns(kpool, vpool, scale):
     """The three pool-scan traversal orders under test, as (name, fn) with
     fn: (qg, state) -> state over the SAME stacked pool KV."""
@@ -112,6 +130,7 @@ def run(iters: int = 3, quick: bool = False) -> dict:
         parity = float(np.max(np.abs(outs["jnp"] - outs["pool_batched"])))
         parity_scan = float(np.max(np.abs(outs["pallas_scan"]
                                           - outs["pool_batched"])))
+        wire_fetch, wire_qship = _wire_bytes(b, c, kvh, g, d, npool)
         rows.append({
             "shape": f"b{b} c{c} kv{kvh} g{g} d{d} pool{npool}",
             "jnp_ms": round(times["jnp"] * 1e3, 2),
@@ -120,6 +139,8 @@ def run(iters: int = 3, quick: bool = False) -> dict:
             "parity_abs": f"{parity:.1e}",
             "launches_scan": launches["pallas_scan"],
             "launches_batched": launches["pool_batched"],
+            "wire_bytes_fetch": int(wire_fetch),
+            "wire_bytes_qship": int(wire_qship),
             "tpu_roofline_us": round(tpu_s * 1e6, 1),
         })
         assert parity < 1e-4, f"backend divergence: {parity}"
@@ -145,6 +166,7 @@ def run(iters: int = 3, quick: bool = False) -> dict:
         json.dump(result, f, indent=1)
     print(table(rows, ["shape", "jnp_ms", "pallas_scan_ms", "pool_batched_ms",
                        "parity_abs", "launches_scan", "launches_batched",
+                       "wire_bytes_fetch", "wire_bytes_qship",
                        "tpu_roofline_us"]))
     print(f"-> {path}")
     return result

@@ -56,6 +56,10 @@ SPECS: Dict[str, Dict[str, Any]] = {
                 "parity_abs": ("high", 9.0, 1e-5),
                 "launches_scan": ("high", 0.0, 0.0),
                 "launches_batched": ("high", 0.0, 0.0),  # O(1) stays O(1)
+                # §3.4 remote-traffic pricing of the case: deterministic, so
+                # any upward drift is a real comms regression, not noise
+                "wire_bytes_fetch": ("high", 0.0, 0.0),
+                "wire_bytes_qship": ("high", 0.0, 0.0),
                 "jnp_ms": _TIME_GUARD,
                 "pallas_scan_ms": _TIME_GUARD,
                 "pool_batched_ms": _TIME_GUARD,

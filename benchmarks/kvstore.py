@@ -154,9 +154,9 @@ def device_validation():
 
 def pipeline_leg(quick: bool = False) -> dict:
     """Real-pipeline leg: jit the chunked pipeline with a TP-SHARDED paged
-    pool (kv head sharding needs partial-auto SPMD inside shard_map — the
-    run.py driver gates this job on ``compat.supports_partial_auto_spmd``)
-    and measure the pool's actual device bytes + prefill wall time per
+    pool (GSPMD kv-head sharding on new jaxlib; the manual TP lowering with
+    local kv heads on old jaxlib — ``compat.resolve_tp_lowering``) and
+    measure the pool's actual device bytes + prefill wall time per
     kv_dtype. Appends to artifacts/bench/kvstore.json."""
     import time
 
@@ -169,7 +169,7 @@ def pipeline_leg(quick: bool = False) -> dict:
     from repro.models.api import build_model
 
     cfg = replace(get_smoke_config("qwen3-8b"), dtype="float32")
-    stages, tp = 4, compat.max_auto_tp(2)
+    stages, tp = 4, 2  # old jaxlib: build_plan resolves the manual TP lowering
     topo = make_test_topology(stages, tp)
     seq, m = 256, 8
     model = build_model(cfg)

@@ -2,17 +2,57 @@
 
   PYTHONPATH=src python -m benchmarks.run [--quick]
 
-Jobs whose backend prerequisites are unavailable are SKIPPED, not crashed:
-jobs that lower the real chunked pipeline with a GSPMD-auto TP axis need
-partial-auto SPMD inside shard_map, which old jaxlib rejects at lowering
-time ("UNIMPLEMENTED: PartitionId") — ``compat.supports_partial_auto_spmd``
-is the gate.
+Jobs whose backend prerequisites are unavailable are SKIPPED, not crashed,
+and the SKIP line names the gating predicate (e.g.
+``compat.supports_partial_auto_spmd``) so a matrix-leg log says exactly WHY
+a job was gated. Job modules are imported lazily, exactly once, and only
+for the jobs actually selected — ``--only kvstore`` no longer pays the
+import cost (jax tracing setup included) of every other benchmark module.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import time
+from importlib import import_module
+
+# job name -> (module under benchmarks/, entrypoint attr, description,
+#              gating predicate dotted name or None)
+JOBS = {
+    "sched": ("sched_throughput", "main",
+              "Continuous chunk-level scheduling vs batch-synchronous", None),
+    "attn_backend": ("attn_backend", "run",
+                     "jnp vs pallas attention-backend comparison", None),
+    "kvstore": ("kvstore", "run",
+                "KV page store: max seq len vs kv_dtype + tier headroom",
+                None),
+    # was gated on compat.supports_partial_auto_spmd; the manual TP
+    # lowering (DESIGN.md §3.6) made tp=2 lower on old jaxlib too
+    "kvstore_pipeline": ("kvstore", "pipeline_leg",
+                         "Real-pipeline paged-pool bytes + wall time "
+                         "(TP-sharded pool)", None),
+    "fig6a": ("fig6a", "main",
+              "Fig 6(a): E2E latency/throughput vs GPipe & Terapipe", None),
+    "fig6b": ("fig6b", "main",
+              "Fig 6(b): max sequence length vs Terapipe x #chunks", None),
+    "fig1c": ("fig1c", "main",
+              "Fig 1(c): WSC vs GPU-system communication advantage", None),
+    "lbcp_ablation": ("lbcp_ablation", "main",
+                      "LBCP ablation + stagger-collapse study", None),
+    "kernels": ("kernels", "main",
+                "Pallas kernel correctness + analytic TPU timing", None),
+    "roofline": ("roofline_report", "main",
+                 "Roofline report from the dry-run artifacts", None),
+}
+
+_QUICK_AWARE = {"sched", "attn_backend", "kvstore", "kvstore_pipeline"}
+
+
+def _gate(predicate: str) -> bool:
+    """Evaluate a dotted gating predicate from ``repro.compat``."""
+    from repro import compat
+    assert predicate.startswith("compat."), predicate
+    return bool(getattr(compat, predicate.split(".", 1)[1])())
 
 
 def main(argv=None) -> int:
@@ -20,58 +60,34 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="smaller SA budgets / fewer probes")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: fig6a,fig6b,fig1c,"
-                         "lbcp_ablation,kernels,attn_backend,roofline,sched,"
-                         "kvstore,kvstore_pipeline")
+                    help="comma-separated subset: " + ",".join(JOBS))
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import attn_backend, fig1c, fig6a, fig6b, kernels
-    from benchmarks import kvstore as kvstore_bench
-    from benchmarks import lbcp_ablation, roofline_report, sched_throughput
-    from repro import compat
-
-    # (name, description, fn, needs_partial_auto_spmd)
-    jobs = [
-        ("sched", "Continuous chunk-level scheduling vs batch-synchronous",
-         lambda: sched_throughput.main(quick=args.quick), False),
-        ("attn_backend", "jnp vs pallas attention-backend comparison",
-         lambda: attn_backend.run(quick=args.quick), False),
-        ("kvstore", "KV page store: max seq len vs kv_dtype + tier headroom",
-         lambda: kvstore_bench.run(quick=args.quick), False),
-        ("kvstore_pipeline", "Real-pipeline paged-pool bytes + wall time "
-         "(TP-sharded pool)",
-         lambda: kvstore_bench.pipeline_leg(quick=args.quick), True),
-        ("fig6a", "Fig 6(a): E2E latency/throughput vs GPipe & Terapipe",
-         fig6a.main, False),
-        ("fig6b", "Fig 6(b): max sequence length vs Terapipe x #chunks",
-         fig6b.main, False),
-        ("fig1c", "Fig 1(c): WSC vs GPU-system communication advantage",
-         fig1c.main, False),
-        ("lbcp_ablation", "LBCP ablation + stagger-collapse study",
-         lbcp_ablation.main, False),
-        ("kernels", "Pallas kernel correctness + analytic TPU timing",
-         kernels.main, False),
-        ("roofline", "Roofline report from the dry-run artifacts",
-         roofline_report.main, False),
-    ]
     rc = 0
     ran = skipped = 0
-    for name, desc, fn, needs_spmd in jobs:
+    modules = {}  # one import pass: each selected module imported ONCE
+    for name, (mod_name, attr, desc, predicate) in JOBS.items():
         if only and name not in only:
             continue
         print(f"\n================ {name}: {desc} ================",
               flush=True)
-        if needs_spmd and not compat.supports_partial_auto_spmd():
+        if predicate is not None and not _gate(predicate):
             skipped += 1
-            print(f"[{name} SKIP: installed jaxlib cannot partition "
-                  "partial-auto shard_map (PartitionId); rerun on jax >= "
-                  "the jax.shard_map release]")
+            print(f"[{name} SKIP: gated on {predicate}() == False — "
+                  "installed jaxlib cannot partition partial-auto shard_map "
+                  "(PartitionId); rerun on jax >= the jax.shard_map release]")
             continue
+        if mod_name not in modules:
+            modules[mod_name] = import_module(f"benchmarks.{mod_name}")
+        fn = getattr(modules[mod_name], attr)
         ran += 1
         t0 = time.time()
         try:
-            fn()
+            if name in _QUICK_AWARE:
+                fn(quick=args.quick)
+            else:
+                fn()
             print(f"[{name} done in {time.time()-t0:.1f}s]")
         except Exception as e:  # noqa: BLE001
             rc = 1

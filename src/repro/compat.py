@@ -69,12 +69,27 @@ def ensure_host_devices(n: int = 8) -> None:
             flags + f" --xla_force_host_platform_device_count={n}").strip()
 
 
-def max_auto_tp(tp: int) -> int:
-    """Clamp a GSPMD-auto TP degree to what the installed jaxlib can
-    partition inside shard_map: old jaxlib (no partial-auto SPMD) forces
-    tp = 1; newer jax passes ``tp`` through. The single place launch
-    scripts and test helpers consult for the tp-fallback policy."""
-    return tp if tp <= 1 or supports_partial_auto_spmd() else 1
+def resolve_tp_lowering(requested: str = "auto") -> str:
+    """Resolve ``RunConfig.tp_lowering`` against the installed jaxlib.
+
+    "manual" is always honored. "auto" means GSPMD partial-auto SPMD when
+    the jaxlib can partition it inside shard_map, falling back to the
+    fully-manual lowering (explicit psums in the stage programs, all mesh
+    axes manual) on old jaxlib — which is what restores TP > 1 coverage
+    there (the old ``max_auto_tp`` tp=1 fallback is gone). The
+    ``REPRO_TP_LOWERING`` env var overrides the "auto" resolution (the CI
+    matrix uses it to pin the manual path on the old-jaxlib leg).
+    """
+    if requested == "manual":
+        return "manual"
+    if requested not in ("auto", "", None):
+        raise ValueError(f"unknown tp_lowering {requested!r}; "
+                         "choose 'auto' or 'manual'")
+    import os
+    env = os.environ.get("REPRO_TP_LOWERING")
+    if env in ("auto", "manual"):
+        return env
+    return "auto" if supports_partial_auto_spmd() else "manual"
 
 
 def supports_partial_auto_spmd() -> bool:

@@ -249,6 +249,21 @@ class RunConfig:
     # collective-free (beyond-paper perf variant; auto-falls-back when head
     # counts don't divide). "auto": plain 16-way model axis.
     attn_sharding: str = "auto"
+    # TP lowering strategy (core.transport / DESIGN.md §3.6): "auto" =
+    # GSPMD partial-auto shard_map (falls back to "manual" on old jaxlib,
+    # which cannot partition it — see compat.resolve_tp_lowering);
+    # "manual" = all mesh axes manual, explicit transport psums in the
+    # stage programs. Restores TP > 1 on the old-jaxlib CI leg.
+    tp_lowering: str = "auto"
+    # transport registry entry (core.transport): how cross-stage/cross-rank
+    # collectives lower. "jax" = jax.lax collectives; future TPU-native
+    # qship DMA / cold-streaming transports register here.
+    transport: str = "jax"
+    # batched fetch (core.remote): "auto" lands all remote chunk-layers in
+    # a staging buffer and runs ONE pool_attention launch when the pool
+    # backend advertises batched_pool; "off" forces the paper-faithful
+    # one-streamed-combine-per-chunk order; "on" requires a batched backend
+    fetch_batch: str = "auto"
     partition: str = "uniform"  # uniform | lbcp
     # Megatron-style TP degree is implied by the mesh "model" axis.
     fsdp: bool = True

@@ -4,6 +4,11 @@ Every microbatch carries the full sequence (full quadratic attention per
 tick, no KV pool) — the paper's Fig. 2(a) comparison point against MOCAP's
 chunked pipeline. Kept out of ``core.pipeline`` so the hot-path driver stays
 a thin scan loop; selected via ``PipelinePlan.mode == "gpipe"``.
+
+Collectives route through the transport registry (``core.transport``; no
+ledger — the fetch/qship traffic model is a chunked-pipeline concern), and
+the manual TP lowering works here too: ``layer_apply`` takes the same
+``ManualTPApply`` psum hooks the stage programs use.
 """
 from __future__ import annotations
 
@@ -13,9 +18,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ModelConfig
+from repro.core import transport as tx
 from repro.core.plan import PipelinePlan
 from repro.core.staging import (Params, batch_specs, manual_only, manual_tree,
-                                stage_param_specs)
+                                manual_tp_plan, stage_param_specs)
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.topology import Topology
@@ -25,9 +31,15 @@ def gpipe_prefill(cfg: ModelConfig, staged: Params, tokens: jax.Array,
                   plan: PipelinePlan, topo: Topology) -> jax.Array:
     n, m = plan.num_stages, plan.num_chunks
     st_ax = topo.stage_axis
-    manual, pod_axes = batch_specs(topo)
+    mtp = manual_tp_plan(cfg, plan, topo)
+    manual, pod_axes = batch_specs(topo, mtp)
+    transport = tx.get_transport(plan.transport)
     dt = jnp.dtype(cfg.dtype)
     ring_perm = [(i, (i + 1) % n) for i in range(n)]
+    tp_apply = None
+    if mtp is not None:
+        tp_apply = T.manual_tp_apply(
+            mtp, lambda y: transport.tp_psum(y, mtp.axes, None)[0])
 
     def body(stage_layers, embed, final_norm, tokens):
         stage = jax.lax.axis_index(st_ax)
@@ -49,7 +61,8 @@ def gpipe_prefill(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             x = jnp.where(stage == 0, x_emb, x_prev)
 
             def layer_body(xc, lp):
-                xo, _, _ = T.layer_apply(cfg, lp, xc, impl="xla_flash", topo=None)
+                xo, _, _ = T.layer_apply(cfg, lp, xc, impl="xla_flash",
+                                         topo=None, tp=tp_apply)
                 return xo, None
             x_out, _ = jax.lax.scan(layer_body, x, stage_layers)
             take = (stage == n - 1) & (phase >= 0) & (phase < m)
@@ -58,11 +71,13 @@ def gpipe_prefill(cfg: ModelConfig, staged: Params, tokens: jax.Array,
                             jax.lax.dynamic_slice(out, (mbp * bm, 0),
                                                   (bm, cfg.d_model)))
             out = jax.lax.dynamic_update_slice(out, upd, (mbp * bm, 0))
-            x_next = jax.lax.ppermute(x_out, st_ax, ring_perm)
+            x_next, _ = transport.ring_shift(x_out, st_ax, ring_perm)
             return (x_next, out), None
 
         (xf, out), _ = jax.lax.scan(tick, (x0, out0), jnp.arange(m + n - 1))
-        return jax.lax.psum(jnp.where(stage == n - 1, out, 0.0), st_ax)
+        out, _ = transport.stage_psum(jnp.where(stage == n - 1, out, 0.0),
+                                      st_ax)
+        return out
 
     specs = stage_param_specs(cfg, plan, topo)
     sl_specs = manual_tree(specs["stage_layers"], manual)

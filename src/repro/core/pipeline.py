@@ -34,13 +34,14 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ModelConfig
+from repro.core import transport as tx
 from repro.core.attention import NEG_INF  # noqa: F401  (re-export)
 from repro.core.gpipe import gpipe_prefill
 from repro.core.plan import PipelinePlan, build_plan  # noqa: F401
 from repro.core.staging import (Params, alloc_kv_pool,  # noqa: F401
                                 batch_specs, kv_split_axes, manual_only,
-                                manual_tree, pad_experts, pad_q_heads,
-                                stage_param_specs, stage_params)
+                                manual_tp_plan, manual_tree, pad_experts,
+                                pad_q_heads, stage_param_specs, stage_params)
 from repro.kvstore.pages import PagedPool
 from repro.core.stagestep import (StageCtx, attend_chunk,  # noqa: F401
                                   hybrid_stage_step, ssm_stage_step,
@@ -60,22 +61,33 @@ __all__ = [
 
 def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
                      plan: PipelinePlan, topo: Topology, *,
-                     embeds: Optional[jax.Array] = None) -> jax.Array:
+                     embeds: Optional[jax.Array] = None,
+                     return_ledger: bool = False) -> jax.Array:
     """Chunked-pipeline prefill of ``tokens`` [B, S]; returns next-token
     logits [B, Vpad] (prefill-only: ONE output token, KV is discarded).
 
     ``embeds``: stub frontend embeddings [B, F, d] (vlm / audio); spliced
     in FRONT of the token embeddings chunk-wise (they occupy the first
     F // C chunks; F must be chunk-aligned for the pipeline path).
+
+    ``return_ledger``: also return the CollectiveLedger — per-category wire
+    bytes summed over chips (``core.transport``; validated against the §3.4
+    analytic model in tests) as a dict of fp32 scalars.
     """
     if plan.mode == "gpipe":
+        assert not return_ledger, "gpipe has no MBKR transport ledger"
         return gpipe_prefill(cfg, staged, tokens, plan, topo)
     n, m, c = plan.num_stages, plan.num_chunks, plan.chunk_len
     lps = plan.layers_per_stage
     st_ax = topo.stage_axis
-    manual, pod_axes = batch_specs(topo)
+    mtp = manual_tp_plan(cfg, plan, topo)
+    manual, pod_axes = batch_specs(topo, mtp)
+    transport = tx.get_transport(plan.transport)
+    led_axes = (st_ax,) + (mtp.axes if mtp is not None else ())
     attn_free = cfg.family == "ssm"
     kvh = cfg.num_kv_heads if not attn_free else 1
+    if mtp is not None and not attn_free:
+        kvh //= mtp.kv_div  # pool and stage programs see LOCAL kv heads
     hd = cfg.resolved_head_dim if not attn_free else 1
     dt = jnp.dtype(cfg.dtype)
     pair_perm = [(i, (i + n // 2) % n) for i in range(n)]
@@ -113,7 +125,7 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         if is_ssm:  # attention-free: no KV pool at all
             pool = PagedPool(jnp.zeros((0,), dt), jnp.zeros((0,), dt))
         else:
-            pool = alloc_kv_pool(cfg, plan, b, topo)
+            pool = alloc_kv_pool(cfg, plan, b, topo, mtp=mtp)
         x0 = jnp.zeros((b, c, cfg.d_model), dt)
         if is_ssm or is_hybrid:
             d_in, nheads, conv_ch = S.dims(cfg)
@@ -140,17 +152,20 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             fpad = -(-n_front // c) * c
             embeds_pad = jnp.pad(emb_in, ((0, 0), (0, fpad - n_front), (0, 0)))
 
-        seq_sharded = (isinstance(topo.tp_axis, tuple)
+        # sequence-parallel residual is a GSPMD-auto-only optimization: the
+        # manual lowering keeps the residual stream replicated across TP
+        seq_sharded = (mtp is None and isinstance(topo.tp_axis, tuple)
                        and c % topo.tp_size == 0 and not is_ssm)
         x_spec = P(None, topo.tp_axis, None) if seq_sharded \
             else P(None, None, None)
 
         def tick(carry, t):
-            x_prev, pool, state, x_last = carry
+            x_prev, pool, state, x_last, led = carry
             phase = t - stage
             ctx = StageCtx(cfg=cfg, plan=plan, topo=topo, stage=stage,
                            phase=phase, first_half=stage < n // 2,
-                           pair_perm=pair_perm, scale=scale, x_spec=x_spec)
+                           pair_perm=pair_perm, scale=scale,
+                           transport=transport, mtp=mtp, x_spec=x_spec)
             # ---- input: stage 0 embeds chunk t; others consume the ring buffer
             tc = jnp.clip(t, 0, m - 1)
             if n_front:
@@ -168,29 +183,35 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             if cfg.embedding_multiplier != 1.0:
                 x_emb = x_emb * cfg.embedding_multiplier
             x = jnp.where(stage == 0, x_emb.astype(dt), x_prev)
-            x = jax.lax.with_sharding_constraint(x, x_spec)
+            if mtp is None:
+                x = jax.lax.with_sharding_constraint(x, x_spec)
             # ---- stage compute
             if is_ssm:
-                x_out, state = ssm_stage_step(ctx, stage_layers, x, state)
+                x_out, state, led = ssm_stage_step(ctx, stage_layers, x,
+                                                   state, led)
             elif is_hybrid:
-                x_out, state, pool = hybrid_stage_step(
-                    ctx, stage_layers, extra["shared"], x, state, pool)
+                x_out, state, pool, led = hybrid_stage_step(
+                    ctx, stage_layers, extra["shared"], x, state, pool, led)
             else:
-                x_out, pool = tfm_stage_step(
-                    ctx, stage_layers, x, pool, cross=cross)
+                x_out, pool, led = tfm_stage_step(
+                    ctx, stage_layers, x, pool, led, cross=cross)
             # ---- capture the last token's hidden state at the last stage
             take = (stage == n - 1) & (phase == m - 1)
             x_last = jnp.where(take, x_out[:, -1].astype(jnp.float32), x_last)
-            # ---- ring transfer to the next stage
-            x_next = jax.lax.ppermute(x_out, st_ax, ring_perm)
-            return (x_next, pool, state, x_last), None
+            # ---- ring transfer to the next stage (useful while my chunk is
+            # real and a downstream stage consumes it)
+            ring_active = (phase >= 0) & (phase < m) & (stage < n - 1)
+            x_next, led = transport.ring_shift(x_out, st_ax, ring_perm, led,
+                                               active=ring_active)
+            return (x_next, pool, state, x_last, led), None
 
-        carry0 = (x0, pool, state0, x_last0)
-        (xf, _, _, x_last), _ = jax.lax.scan(
+        carry0 = (x0, pool, state0, x_last0, tx.ledger_init())
+        (xf, _, _, x_last, led), _ = jax.lax.scan(
             tick, carry0, jnp.arange(plan.num_ticks))
         # replicate the final hidden state across stages
-        x_last = jax.lax.psum(x_last, st_ax)
-        return x_last
+        x_last, led = transport.stage_psum(x_last, st_ax, led)
+        led = tx.ledger_collect(led, led_axes)
+        return x_last, led
 
     extra: Params = {}
     if is_hybrid:
@@ -211,13 +232,14 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         extra_specs["embeds"] = P(pod_axes if pod_axes else None, None, None)
     tok_spec = P(pod_axes if pod_axes else None, None)
     out_spec = P(pod_axes if pod_axes else None, None)
+    led_specs = {k: P() for k in tx.LEDGER_KEYS}
 
-    x_last = compat.shard_map(
+    x_last, ledger = compat.shard_map(
         body, mesh=topo.mesh,
         in_specs=(sl_specs, manual_only(specs["embed"], manual),
                   manual_only(specs["final_norm"], manual),
                   extra_specs, tok_spec),
-        out_specs=out_spec, axis_names=manual, check_vma=False,
+        out_specs=(out_spec, led_specs), axis_names=manual, check_vma=False,
     )(staged["stage_layers"], staged["embed"], staged["final_norm"],
       extra, tokens)
 
@@ -230,5 +252,7 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     logits = jax.lax.with_sharding_constraint(
         logits, NamedSharding(topo.mesh, P(
             tuple(a for a in topo.batch_axes if a != topo.stage_axis) or None,
-            None, topo.tp_axis)))
+            None, None if mtp is not None else topo.tp_axis)))
+    if return_ledger:
+        return logits[:, 0], ledger
     return logits[:, 0]

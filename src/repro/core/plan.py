@@ -38,6 +38,15 @@ class PipelinePlan:
     p2: int                   # spill threshold (chunks >= p2 spill); M if no MBKR
     remote_attn: str = "qship"   # fetch | qship
     attn_backend: str = "jnp"    # jnp | pallas (core.attention registry)
+    transport: str = "jax"       # core.transport registry entry
+    tp_lowering: str = "auto"    # RESOLVED: auto (GSPMD) | manual (explicit
+                                 # transport psums, all mesh axes manual) —
+                                 # compat.resolve_tp_lowering decides "auto"
+    fetch_batch: str = "auto"    # auto | on | off: land fetched chunk-layers
+                                 # in a staging buffer and run ONE
+                                 # pool_attention launch ("auto" follows the
+                                 # pool backend's batched_pool flag; resolved
+                                 # at use time in core.remote)
     pool_backend: str = "jnp"    # backend for POOL-sourced partials (own
                                  # pool scan + fetch/qship); resolved from
                                  # RunConfig.pool_backend ("auto" follows
@@ -96,16 +105,24 @@ def _invert(table: np.ndarray, num_slots: int, lo: int, hi: int) -> np.ndarray:
 def build_plan(cfg: ModelConfig, num_stages: int, seq_len: int,
                run: RunConfig, *, mode: Optional[str] = None) -> PipelinePlan:
     """Derive the static pipeline plan for one (arch, shape, run) cell."""
+    from repro import compat
+
     mode = mode or ("mocap" if run.mbkr else "terapipe")
     m = run.num_chunks
     pool_backend = (run.attn_backend if run.pool_backend in ("auto", "", None)
                     else run.pool_backend)
+    tp_lowering = compat.resolve_tp_lowering(run.tp_lowering)
+    if run.fetch_batch not in ("auto", "on", "off"):
+        raise ValueError(f"unknown fetch_batch {run.fetch_batch!r}")
     if mode == "gpipe":
         return PipelinePlan(mode, num_stages, m, 0,
                             _layers_per_stage(cfg, num_stages), 0, m,
                             attn_backend=run.attn_backend,
                             pool_backend=pool_backend,
-                            ssm_backend=run.ssm_backend)
+                            ssm_backend=run.ssm_backend,
+                            transport=run.transport,
+                            tp_lowering=tp_lowering,
+                            fetch_batch=run.fetch_batch)
     assert seq_len % m == 0, f"seq_len {seq_len} must divide into {m} chunks"
     c = seq_len // m
     use_mbkr = mode == "mocap" and not cfg.attn_free and num_stages >= 2 and m >= 2
@@ -122,6 +139,9 @@ def build_plan(cfg: ModelConfig, num_stages: int, seq_len: int,
         attn_backend=run.attn_backend,
         pool_backend=pool_backend,
         ssm_backend=run.ssm_backend,
+        transport=run.transport,
+        tp_lowering=tp_lowering,
+        fetch_batch=run.fetch_batch,
         spill_dtype=run.kv_spill_dtype,
         ship_dtype=cfg.dtype,   # wire in model precision (bf16 in prod)
         kv_dtype=codec.name, page_tokens=geom.page_tokens,

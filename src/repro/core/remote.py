@@ -1,16 +1,30 @@
 """Remote KV access: the spill / fetch / qship collectives (DESIGN.md §3.4).
 
-MBKR spills chunks with index >= p2 at creation: one ``ppermute`` by N/2 (the
-fixed cross-half stage pairing) moves their KV to the paired stage's host
-slots. At attention time the debtor reaches its remote prefix one of two ways:
+MBKR spills chunks with index >= p2 at creation: one pairing permute by N/2
+(the fixed cross-half stage pairing) moves their KV to the paired stage's
+host slots. At attention time the debtor reaches its remote prefix one of
+two ways:
 
 - ``fetch``  (paper-faithful): re-read each spilled chunk from the pair, one
-  chunk-layer slice per ppermute, streamed through the online-softmax combine
-  (residency = 1 chunk-layer). Traffic O(n_remote * kv).
+  chunk-layer slice per permute. The streamed order runs each landed chunk
+  through the online-softmax combine as it arrives (residency = 1
+  chunk-layer); with a ``batched_pool`` backend (and
+  ``plan.fetch_batch != "off"``) the landed chunk-layers accumulate in a
+  staging buffer instead and go through ONE ``pool_block`` launch — same
+  wire traffic, O(1) attention launches per (layer, tick) instead of one
+  per remote chunk (``ops.count_launches`` pins it).
 - ``qship``  (beyond-paper, TPU-native): ship the QUERY to the creditor,
   which computes partial flash attention over the chunks it hosts and ships
   back (acc, lse). Traffic O(q + out): cheaper whenever >= 2 chunks are
   remote under GQA, and one round-trip instead of n_remote transfers.
+
+ALL wire movement goes through the pluggable transport
+(``core.transport``): this module contains no raw collective calls. Every
+function takes and returns the ``CollectiveLedger`` — per-category wire
+bytes, charged from the actual shipped arrays (quantized codec compression
+shows up automatically) and gated by the consumption predicate the §3.4
+analytic model prices (a lockstep transfer whose payload is never read does
+not count).
 
 KV bytes live in the page store (``repro.kvstore``): slot tables resolve to
 page handles through ``plan.slot_pages``, and with a quantized ``kv_dtype``
@@ -37,6 +51,7 @@ import jax.numpy as jnp
 
 from repro.core.attention import (AttentionBackend, State, attn_combine,
                                   attn_init, pool_scan)
+from repro.core.transport import Ledger
 from repro.kvstore import pages as kvpages
 from repro.kvstore import quant as kvquant
 
@@ -47,20 +62,24 @@ def pair_phase(ctx) -> jax.Array:
     return jnp.where(ctx.first_half, ctx.phase - n2, ctx.phase + n2)
 
 
-def spill_permute(ctx, kv: jax.Array) -> jax.Array:
+def spill_permute(ctx, kv: jax.Array, led: Ledger = None, *,
+                  active=None):
     """Cross-half spill transfer for a PASSTHROUGH pool. int8 spill_dtype:
     the WIRE carries the int8 payload + one fp32 scale per (tensor, layer,
     kv head) — half the spill bytes; the pool stays in model dtype
     (dequantized at the creditor)."""
-    plan = ctx.plan
+    plan, tr = ctx.plan, ctx.transport
     if plan.spill_dtype != "int8":
-        return jax.lax.ppermute(kv, ctx.topo.stage_axis, ctx.pair_perm)
+        return tr.pair_shift(kv, ctx.topo.stage_axis, ctx.pair_perm, led,
+                             tag="spill", active=active)
     amax = jnp.max(jnp.abs(kv.astype(jnp.float32)), axis=(-3, -1), keepdims=True)
     scale = jnp.maximum(amax, 1e-6) / 127.0
     q = jnp.clip(jnp.round(kv.astype(jnp.float32) / scale), -127, 127)
-    q8 = jax.lax.ppermute(q.astype(jnp.int8), ctx.topo.stage_axis, ctx.pair_perm)
-    s = jax.lax.ppermute(scale, ctx.topo.stage_axis, ctx.pair_perm)
-    return (q8.astype(jnp.float32) * s).astype(kv.dtype)
+    q8, led = tr.pair_shift(q.astype(jnp.int8), ctx.topo.stage_axis,
+                            ctx.pair_perm, led, tag="spill", active=active)
+    s, led = tr.pair_shift(scale, ctx.topo.stage_axis, ctx.pair_perm, led,
+                           tag="spill", active=active)
+    return (q8.astype(jnp.float32) * s).astype(kv.dtype), led
 
 
 def host_table(ctx) -> jax.Array:
@@ -81,46 +100,92 @@ def _pool_layer(pool: kvpages.PagedPool, l_idx: jax.Array):
     return sl(pool.k), sl(pool.v), ks, vs
 
 
-def fetch_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State) -> State:
-    """Paper-faithful fetch: stream one chunk-layer per ppermute through the
-    online-softmax combine. The slot *I* host for my pair at index j holds —
-    after the symmetric cross-half exchange — my own chunk j. The wire
-    carries the ENCODED pages (quantized codec: the fetch traffic shrinks by
-    the same factor as the pool)."""
+def fetch_batched(ctx, backend: AttentionBackend) -> bool:
+    """Resolve the batched-fetch knob against the pool backend: "auto"
+    batches exactly when the backend fuses multi-slot stacks into one
+    launch (``batched_pool``)."""
+    fb = ctx.plan.fetch_batch
+    return fb == "on" or (fb == "auto" and backend.batched_pool)
+
+
+def fetch_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State,
+                 led: Ledger = None):
+    """Paper-faithful fetch wire: stream one chunk-layer per pairing permute.
+    The slot *I* host for my pair at index j holds — after the symmetric
+    cross-half exchange — my own chunk j. The wire carries the ENCODED pages
+    (quantized codec: the fetch traffic shrinks by the same factor as the
+    pool).
+
+    Post-transfer attention order (``fetch_batched``): streamed = one
+    online-softmax combine per landed chunk (the reference order, residency
+    1 chunk-layer); batched = land every chunk-layer in a staging buffer and
+    run ONE ``pool_block`` over the stack (a single slot-grid kernel launch
+    under the pallas pool backend — the combine happens inside VMEM). The
+    two orders agree to 1e-6 on float pages (``tests/test_transport.py``).
+    """
     plan = ctx.plan
     host_tbl = host_table(ctx)
     slot_pages = jnp.asarray(plan.slot_pages)
     quantized = plan.codec.quantized
+    js = jnp.arange(plan.p2, plan.num_chunks)
 
-    def fetch_body(carry, j):
-        stc = carry
+    def wire_one(led, j):
+        """Permute chunk j's encoded pages from the pair (ledger-charged
+        iff the chunk is actually consumed this tick)."""
         pages = slot_pages[host_tbl[j]]
         kq, vq, ks, vs = kvpages.gather_chunk(*pool_l, pages)
-        pk = jax.lax.ppermute(jnp.stack([kq, vq]), ctx.topo.stage_axis,
-                              ctx.pair_perm)
+        active = (j < ctx.phase) & (ctx.phase < plan.num_chunks)
+        pk, led = ctx.transport.pair_shift(
+            jnp.stack([kq, vq]), ctx.topo.stage_axis, ctx.pair_perm, led,
+            tag="fetch", active=active)
         if quantized:
-            ps = jax.lax.ppermute(jnp.stack([ks, vs]), ctx.topo.stage_axis,
-                                  ctx.pair_perm)
+            ps, led = ctx.transport.pair_shift(
+                jnp.stack([ks, vs]), ctx.topo.stage_axis, ctx.pair_perm, led,
+                tag="fetch", active=active)
             ks, vs = ps[0], ps[1]
-        stc = backend.chunk_block_q(qg, pk[0], pk[1], ks, vs, j < ctx.phase,
+        return (pk[0], pk[1], ks, vs), led
+
+    if fetch_batched(ctx, backend):
+        def land(led, j):
+            (kq, vq, ks, vs), led = wire_one(led, j)
+            ys = (kq, vq, ks, vs) if quantized else (kq, vq)
+            return led, ys
+
+        led, landed = jax.lax.scan(land, led, js)
+        if quantized:
+            kqs, vqs, kss, vss = landed
+        else:
+            (kqs, vqs), kss, vss = landed, None, None
+        valid = js < ctx.phase
+        st = backend.pool_block(qg, kqs, vqs, kss, vss, valid, ctx.scale, st)
+        return st, led
+
+    def fetch_body(carry, j):
+        stc, led = carry
+        (kq, vq, ks, vs), led = wire_one(led, j)
+        stc = backend.chunk_block_q(qg, kq, vq, ks, vs, j < ctx.phase,
                                     ctx.scale, stc)
-        return stc, None
+        return (stc, led), None
 
-    st, _ = jax.lax.scan(fetch_body, st,
-                         jnp.arange(plan.p2, plan.num_chunks))
-    return st
+    (st, led), _ = jax.lax.scan(fetch_body, (st, led), js)
+    return st, led
 
 
-def qship_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State) -> State:
+def qship_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State,
+                 led: Ledger = None):
     """Beyond-paper qship: ship my Q to the creditor, which runs the backend
     over ONLY the host slots it holds for me, then ships back (m, l, acc).
     With a ``batched_pool`` backend the creditor-side scan is ONE slot-grid
     kernel launch over the host-slot subset (``pool_scan`` handles both)."""
-    plan = ctx.plan
+    plan, tr = ctx.plan, ctx.transport
     b, c, kvh, g, d = qg.shape
     sd = jnp.dtype(plan.ship_dtype)
-    q_pair = jax.lax.ppermute(qg.astype(sd), ctx.topo.stage_axis,
-                              ctx.pair_perm).astype(qg.dtype)
+    # useful iff I actually have a remote prefix this tick (phase > p2)
+    active = (ctx.phase > plan.p2) & (ctx.phase < plan.num_chunks)
+    q_pair, led = tr.pair_shift(qg.astype(sd), ctx.topo.stage_axis,
+                                ctx.pair_perm, led, tag="qship_q",
+                                active=active)
+    q_pair = q_pair.astype(qg.dtype)
     host_chunk = jnp.where(ctx.first_half,
                            jnp.asarray(plan.slot_host_chunk_a),
                            jnp.asarray(plan.slot_host_chunk_b))
@@ -131,15 +196,17 @@ def qship_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State) -> State
                      pair_limit, ctx.scale, st_r,
                      slots=plan.host_slots_used)
     # ship (m, l) packed fp32 + acc in the wire dtype
-    ml = jax.lax.ppermute(jnp.stack([st_r[0], st_r[1]]),
-                          ctx.topo.stage_axis, ctx.pair_perm)
-    a_r = jax.lax.ppermute(st_r[2].astype(sd), ctx.topo.stage_axis,
-                           ctx.pair_perm).astype(jnp.float32)
-    return attn_combine(st, (ml[0], ml[1], a_r))
+    ml, led = tr.pair_shift(jnp.stack([st_r[0], st_r[1]]),
+                            ctx.topo.stage_axis, ctx.pair_perm, led,
+                            tag="qship_state", active=active)
+    a_r, led = tr.pair_shift(st_r[2].astype(sd), ctx.topo.stage_axis,
+                             ctx.pair_perm, led, tag="qship_state",
+                             active=active)
+    return attn_combine(st, (ml[0], ml[1], a_r.astype(jnp.float32))), led
 
 
-def write_pools(ctx, pool: kvpages.PagedPool, stage_k,
-                stage_v) -> kvpages.PagedPool:
+def write_pools(ctx, pool: kvpages.PagedPool, stage_k, stage_v,
+                led: Ledger = None):
     """End-of-tick page writes: encode the fresh chunk once, scatter its
     pages to the own slot (phase < p2) or ship the payload cross-half and
     scatter under the creditor's page table. Inactive phases write to the
@@ -163,18 +230,23 @@ def write_pools(ctx, pool: kvpages.PagedPool, stage_k,
         ppc = jnp.clip(pp, 0, plan.num_chunks - 1)
         hslot = jnp.where((pp >= plan.p2) & (pp < plan.num_chunks),
                           host_tbl[ppc], plan.scratch)
+        # I ship MY chunk; it is useful iff MY phase needs hosting
+        ship_active = (phase >= plan.p2) & (phase < plan.num_chunks)
         if codec.quantized:
             # the wire carries the already-encoded pages + scales
-            sq = jax.lax.ppermute(jnp.stack([kq, vq]), ctx.topo.stage_axis,
-                                  ctx.pair_perm)
-            ss = jax.lax.ppermute(jnp.stack([ksc, vsc]), ctx.topo.stage_axis,
-                                  ctx.pair_perm)
+            sq, led = ctx.transport.pair_shift(
+                jnp.stack([kq, vq]), ctx.topo.stage_axis, ctx.pair_perm,
+                led, tag="spill", active=ship_active)
+            ss, led = ctx.transport.pair_shift(
+                jnp.stack([ksc, vsc]), ctx.topo.stage_axis, ctx.pair_perm,
+                led, tag="spill", active=ship_active)
             pool = kvpages.scatter_chunk_raw(pool, slot_pages[hslot],
                                              sq[0], sq[1], ss[0], ss[1])
         else:
-            spill = spill_permute(ctx, jnp.stack([stage_k, stage_v]))
+            spill, led = spill_permute(ctx, jnp.stack([stage_k, stage_v]),
+                                       led, active=ship_active)
             pool = kvpages.scatter_chunk_raw(pool, slot_pages[hslot],
                                              spill[0].astype(pool.k.dtype),
                                              spill[1].astype(pool.v.dtype),
                                              None, None)
-    return pool
+    return pool, led

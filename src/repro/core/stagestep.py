@@ -10,6 +10,14 @@ causal self block):
 - ``hybrid_stage_step``  Zamba2: SSM groups + a shared attention block whose
                          KV participates in MBKR (one "layer" per group).
 
+Every cross-chip byte goes through ``ctx.transport`` (core.transport) and
+the stage programs thread the CollectiveLedger through their layer scans.
+Under the MANUAL TP lowering (``ctx.mtp`` set, DESIGN.md §3.6) the programs
+insert the explicit tensor-parallel psums GSPMD would otherwise derive: one
+after each attention o-projection, one after each FFN down-projection (the
+residual stream stays replicated; head/row counts come from the LOCAL param
+shapes, so the same code traces both lowerings).
+
 New model families plug in here without touching the driver (DESIGN.md §2.4).
 """
 from __future__ import annotations
@@ -26,7 +34,9 @@ from repro.core import remote
 from repro.core.attention import (attn_finish, attn_init, get_backend,
                                   group_queries, pool_scan)
 from repro.core.plan import PipelinePlan
-from repro.core.staging import _hyb_scfg
+from repro.core.staging import ManualTP, _hyb_scfg
+from repro.core import transport as tx
+from repro.core.transport import Ledger, Transport
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models import transformer as T
@@ -46,17 +56,44 @@ class StageCtx:
     first_half: jax.Array     # bool: stage < N/2
     pair_perm: Sequence[Tuple[int, int]]
     scale: float
+    transport: Transport = None
+    mtp: Optional[ManualTP] = None  # manual TP lowering plan (None = GSPMD)
     x_spec: Any = P(None, None, None)  # residual-stream sharding (SP variant)
+
+    @property
+    def active(self):
+        """My phase is a real chunk this tick (not fill/drain garbage)."""
+        return (self.phase >= 0) & (self.phase < self.plan.num_chunks)
+
+
+def _tp_apply(ctx: StageCtx) -> Optional[T.ManualTPApply]:
+    """Build the model-layer manual-TP hooks (psum closures) from the plan.
+    Ledger charges for these reduces happen at the stage-program level (the
+    closures stay ledger-free so they can run inside ``models`` code)."""
+    mtp = ctx.mtp
+    if mtp is None:
+        return None
+    tr = ctx.transport
+    return T.manual_tp_apply(mtp, lambda y: tr.tp_psum(y, mtp.axes, None)[0])
+
+
+def _psum_bytes(ctx: StageCtx, x: jax.Array) -> float:
+    """Ring-all-reduce wire bytes of one manual tp_psum of ``x`` (per chip)."""
+    k = ctx.mtp.tp
+    return 2.0 * (k - 1) / k * tx.nbytes(x)
 
 
 def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
                  k_new: jax.Array, v_new: jax.Array,
-                 pool) -> jax.Array:
+                 pool, led: Ledger = None):
     """Full MOCAP attention for one layer of the current chunk:
-    own-pool prefix + (MBKR) remote prefix + causal self block.
+    own-pool prefix + (MBKR) remote prefix + causal self block. Returns
+    ``(att, ledger)``.
+
     q [B,C,H,D]; k_new/v_new [B,C,K,D]; ``pool`` is the stage's paged KV
     store (``kvstore.pages.PagedPool``: payloads [P, lps, B, pt, K, D] +
-    per-head scales when quantized).
+    per-head scales when quantized). Under manual TP the shapes are the
+    LOCAL shards (heads grouped per local kv head).
 
     Backends mix per SOURCE (the combine chain is backend-independent):
     the causal self block runs ``plan.attn_backend``; every POOL-sourced
@@ -83,54 +120,75 @@ def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
     # 2. remote prefix: chunks p2 <= j < phase live at my pair
     if plan.p2 < plan.num_chunks and plan.mode == "mocap":
         if plan.remote_attn == "fetch":
-            st = remote.fetch_remote(ctx, pool_be, qg, pool_l, st)
+            st, led = remote.fetch_remote(ctx, pool_be, qg, pool_l, st, led)
         else:
-            st = remote.qship_remote(ctx, pool_be, qg, pool_l, st)
+            st, led = remote.qship_remote(ctx, pool_be, qg, pool_l, st, led)
 
     # 3. self block (causal)
     st = backend.self_block(qg, k_new, v_new, ctx.scale, st)
-    return attn_finish(st, q.dtype)
+    return attn_finish(st, q.dtype), led
 
 
 # --------------------------------------------------------- transformer step
 
 def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
-                   pool, *, cross: Optional[Tuple] = None):
+                   pool, led: Ledger = None, *,
+                   cross: Optional[Tuple] = None):
     """Apply this stage's layers to chunk ``ctx.phase``. Returns
-    (x_out, pool). ``cross`` = (enc_xk, enc_xv) [lps,B,F,K,D] for
+    (x_out, pool, ledger). ``cross`` = (enc_xk, enc_xv) [lps,B,F,K,D] for
     whisper decoder stages."""
-    cfg, plan = ctx.cfg, ctx.plan
+    cfg, plan, mtp = ctx.cfg, ctx.plan, ctx.mtp
+    tr = ctx.transport
     b, c, dm = x.shape
-    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    hd = cfg.resolved_head_dim
     positions = jnp.clip(ctx.phase, 0, plan.num_chunks - 1) * plan.chunk_len \
         + jnp.arange(c)[None, :]
     cos, sin = L.rope_angles(positions, hd, cfg.rope_theta)
+    tp_apply = _tp_apply(ctx)
+    # mirrors ffn_block's psum condition exactly: ONE reduce iff any FFN
+    # part is actually sharded for THIS config (dense for non-MoE; expert
+    # and/or present shared-expert parts for MoE)
+    ffn_reduced = tp_apply is not None and (
+        tp_apply.dense if cfg.moe is None else
+        (tp_apply.moe or (cfg.moe.num_shared_experts > 0
+                          and tp_apply.shared)))
 
     def layer_body(carry, xs):
-        xc, li = carry
+        xc, li, led = carry
         lp = xs if cross is None else xs[0]
         hn = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
-        q = jnp.einsum("bcd,dq->bcq", hn, lp["wq"]).reshape(b, c, h, hd)
-        k = jnp.einsum("bcd,dq->bcq", hn, lp["wk"]).reshape(b, c, kvh, hd)
-        v = jnp.einsum("bcd,dq->bcq", hn, lp["wv"]).reshape(b, c, kvh, hd)
+        # LOCAL head counts come from the (possibly TP-sharded) params
+        q = jnp.einsum("bcd,dq->bcq", hn, lp["wq"])
+        k = jnp.einsum("bcd,dq->bcq", hn, lp["wk"])
+        v = jnp.einsum("bcd,dq->bcq", hn, lp["wv"])
+        q = q.reshape(b, c, q.shape[-1] // hd, hd)
+        k = k.reshape(b, c, k.shape[-1] // hd, hd)
+        v = v.reshape(b, c, v.shape[-1] // hd, hd)
         if cfg.qk_norm:
             q = L.rms_norm(q, lp["q_norm"], cfg.norm_eps)
             k = L.rms_norm(k, lp["k_norm"], cfg.norm_eps)
         q = L.apply_rope(q, cos, sin)
         k = L.apply_rope(k, cos, sin)
-        q = jax.lax.with_sharding_constraint(q, P(None, None, ctx.topo.tp_axis, None))
-        if isinstance(ctx.topo.tp_axis, tuple):
-            kv_ax = ctx.topo.tp_axis[0]
-            k = jax.lax.with_sharding_constraint(k, P(None, None, kv_ax, None))
-            v = jax.lax.with_sharding_constraint(v, P(None, None, kv_ax, None))
-        att = attend_chunk(ctx, li, q, k, v, pool)
-        xc = xc + cfg.residual_multiplier * jnp.einsum(
-            "bcq,qd->bcd", att.reshape(b, c, h * hd), lp["wo"])
+        if mtp is None:
+            q = jax.lax.with_sharding_constraint(
+                q, P(None, None, ctx.topo.tp_axis, None))
+            if isinstance(ctx.topo.tp_axis, tuple):
+                kv_ax = ctx.topo.tp_axis[0]
+                k = jax.lax.with_sharding_constraint(k, P(None, None, kv_ax, None))
+                v = jax.lax.with_sharding_constraint(v, P(None, None, kv_ax, None))
+        att, led = attend_chunk(ctx, li, q, k, v, pool, led)
+        h_loc = att.shape[2]
+        upd = jnp.einsum("bcq,qd->bcd", att.reshape(b, c, h_loc * hd),
+                         lp["wo"])
+        if mtp is not None and mtp.attn:
+            upd, led = tr.tp_psum(upd, mtp.axes, led, active=ctx.active)
+        xc = xc + cfg.residual_multiplier * upd
         if cross is not None:
             xk_l = jax.lax.dynamic_index_in_dim(cross[0], li, 0, keepdims=False)
             xv_l = jax.lax.dynamic_index_in_dim(cross[1], li, 0, keepdims=False)
             hnx = L.rms_norm(xc, lp["lnx"], cfg.norm_eps)
-            qx = jnp.einsum("bcd,dq->bcq", hnx, lp["xwq"]).reshape(b, c, h, hd)
+            qx = jnp.einsum("bcd,dq->bcq", hnx, lp["xwq"])
+            qx = qx.reshape(b, c, qx.shape[-1] // hd, hd)
             if plan.attn_backend == "pallas":
                 # non-causal chunk_attention: decoder chunk vs the whole
                 # encoder output through the flash kernel (ROADMAP item)
@@ -138,32 +196,43 @@ def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
                 attx = kops.full_attention(qx, xk_l, xv_l)
             else:
                 attx = L.flash_attention_xla(qx, xk_l, xv_l, causal_offset=None)
-            xc = xc + jnp.einsum("bcq,qd->bcd", attx.reshape(b, c, h * hd), lp["xwo"])
+            hx_loc = attx.shape[2]
+            updx = jnp.einsum("bcq,qd->bcd", attx.reshape(b, c, hx_loc * hd),
+                              lp["xwo"])
+            if mtp is not None and mtp.attn:
+                updx, led = tr.tp_psum(updx, mtp.axes, led, active=ctx.active)
+            xc = xc + updx
         ep_axis = ctx.topo.tp_axis if (cfg.moe is not None and isinstance(
-            ctx.topo.tp_axis, tuple)) else None
+            ctx.topo.tp_axis, tuple) and mtp is None) else None
         if ep_axis is not None:
             # EP dispatch gathers tokens arbitrarily: replicate x first
             xc = jax.lax.with_sharding_constraint(xc, P(None, None, None))
-        xc = T.ffn_block(cfg, lp, xc, topo=None, ep_axis=ep_axis)
+        xc = T.ffn_block(cfg, lp, xc, topo=None, ep_axis=ep_axis, tp=tp_apply)
+        if ffn_reduced:
+            # one [B,C,d] psum inside ffn_block — charge it here
+            led = tx.charge(led, "tp", _psum_bytes(ctx, xc), ctx.active)
         # kv_split: keep the residual stream SEQUENCE-SHARDED between layers
         # (Megatron-SP): psums become reduce-scatters and the stage-boundary
         # ring permute moves C/tp tokens per chip instead of C
-        xc = jax.lax.with_sharding_constraint(xc, ctx.x_spec)
-        return (xc, li + 1), (k, v)
+        if mtp is None:
+            xc = jax.lax.with_sharding_constraint(xc, ctx.x_spec)
+        return (xc, li + 1, led), (k, v)
 
     xs = layers if cross is None else (layers,)
-    (x, _), (ks, vs) = jax.lax.scan(layer_body, (x, jnp.int32(0)), xs)
-    pool = remote.write_pools(ctx, pool, ks, vs)
-    return x, pool
+    (x, _, led), (ks, vs) = jax.lax.scan(layer_body, (x, jnp.int32(0), led), xs)
+    pool, led = remote.write_pools(ctx, pool, ks, vs, led)
+    return x, pool, led
 
 
 # --------------------------------------------------------------- SSM step
 
-def ssm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array, state):
+def ssm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array, state,
+                   led: Ledger = None):
     """Mamba2 stage: lps blocks; SSM/conv state carried tick-to-tick and
     zeroed at phase 0 (start of the request). The SSD inner loop routes
     through ``plan.ssm_backend`` (jnp reference | kernels.ops.ssd), the same
-    knob pattern as attention."""
+    knob pattern as attention. SSM blocks replicate under manual TP (no
+    collectives — see staging.ManualTP), so the ledger passes through."""
     cfg, impl = ctx.cfg, ctx.plan.ssm_backend
     fresh = ctx.phase <= 0
 
@@ -177,28 +246,30 @@ def ssm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array, state):
         return xo, (st2["conv"], st2["ssd"])
 
     x, (conv2, ssd2) = jax.lax.scan(layer_body, x, (layers, state[0], state[1]))
-    return x, (conv2, ssd2)
+    return x, (conv2, ssd2), led
 
 
 # ------------------------------------------------------------- hybrid step
 
 def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
-                      x: jax.Array, state, pool):
+                      x: jax.Array, state, pool, led: Ledger = None):
     """Zamba2 stage = up to lps groups of (pg Mamba2 + shared attn block).
     The shared block's KV participates in MBKR (1 'layer' per group)."""
-    cfg, plan = ctx.cfg, ctx.plan
+    cfg, plan, mtp = ctx.cfg, ctx.plan, ctx.mtp
+    tr = ctx.transport
     ssd_impl = plan.ssm_backend
     scfg = _hyb_scfg(cfg)
     b, c, dm = x.shape
-    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    hd = cfg.resolved_head_dim
     n_groups = cfg.hybrid.num_groups
     fresh = ctx.phase <= 0
     positions = jnp.clip(ctx.phase, 0, plan.num_chunks - 1) * plan.chunk_len \
         + jnp.arange(c)[None, :]
     cos, sin = L.rope_angles(positions, hd, cfg.rope_theta)
+    tp_apply = _tp_apply(ctx)
 
     def group_body(carry, xs):
-        xc, gi = carry
+        xc, gi, led = carry
         g_lp, conv_st, ssd_st = xs
 
         def mamba_body(xm, ms):
@@ -215,19 +286,29 @@ def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
         gid = ctx.stage * plan.layers_per_stage + gi
         has_attn = gid < n_groups
         hn = L.rms_norm(xc2, shared["ln1"], cfg.norm_eps)
-        q = jnp.einsum("bcd,dq->bcq", hn, shared["wq"]).reshape(b, c, h, hd)
-        k = jnp.einsum("bcd,dq->bcq", hn, shared["wk"]).reshape(b, c, kvh, hd)
-        v = jnp.einsum("bcd,dq->bcq", hn, shared["wv"]).reshape(b, c, kvh, hd)
+        q = jnp.einsum("bcd,dq->bcq", hn, shared["wq"])
+        k = jnp.einsum("bcd,dq->bcq", hn, shared["wk"])
+        v = jnp.einsum("bcd,dq->bcq", hn, shared["wv"])
+        q = q.reshape(b, c, q.shape[-1] // hd, hd)
+        k = k.reshape(b, c, k.shape[-1] // hd, hd)
+        v = v.reshape(b, c, v.shape[-1] // hd, hd)
         q = L.apply_rope(q, cos, sin)
         k = L.apply_rope(k, cos, sin)
-        att = attend_chunk(ctx, gi, q, k, v, pool)
-        upd = jnp.einsum("bcq,qd->bcd", att.reshape(b, c, h * hd), shared["wo"])
+        att, led = attend_chunk(ctx, gi, q, k, v, pool, led)
+        h_loc = att.shape[2]
+        upd = jnp.einsum("bcq,qd->bcd", att.reshape(b, c, h_loc * hd),
+                         shared["wo"])
+        if mtp is not None and mtp.attn:
+            upd, led = tr.tp_psum(upd, mtp.axes, led, active=ctx.active)
         xc3 = xc2 + jnp.where(has_attn, upd, 0.0)
-        ffn = T.ffn_block(scfg, shared, xc3, topo=None) - xc3  # isolate update
+        ffn = T.ffn_block(scfg, shared, xc3, topo=None,
+                          tp=tp_apply) - xc3  # isolate update
+        if tp_apply is not None and tp_apply.dense:
+            led = tx.charge(led, "tp", _psum_bytes(ctx, xc3), ctx.active)
         xc3 = xc3 + jnp.where(has_attn, ffn, 0.0)
-        return (xc3, gi + 1), (conv2, ssd2, k, v)
+        return (xc3, gi + 1, led), (conv2, ssd2, k, v)
 
-    (x, _), (conv2, ssd2, ks, vs) = jax.lax.scan(
-        group_body, (x, jnp.int32(0)), (groups, state[0], state[1]))
-    pool = remote.write_pools(ctx, pool, ks, vs)
-    return x, (conv2, ssd2), pool
+    (x, _, led), (conv2, ssd2, ks, vs) = jax.lax.scan(
+        group_body, (x, jnp.int32(0), led), (groups, state[0], state[1]))
+    pool, led = remote.write_pools(ctx, pool, ks, vs, led)
+    return x, (conv2, ssd2), pool, led

@@ -12,7 +12,8 @@ padding for EP). See DESIGN.md §2 (layering), §3 (mesh mapping) and §6
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,16 +29,124 @@ from repro.models.topology import Topology
 Params = Dict[str, Any]
 
 
+# ------------------------------------------------- manual TP lowering plan
+
+@dataclass(frozen=True)
+class ManualTP:
+    """Static description of the MANUAL tensor-parallel lowering
+    (``PipelinePlan.tp_lowering == "manual"``, DESIGN.md §3.6): which param
+    groups are sharded over the (now fully-manual) TP mesh axes, and hence
+    where the stage programs must insert explicit transport psums.
+
+    A group is sharded only when the split is HEAD/ROW-exact (a GSPMD-auto
+    axis can shard elementwise; a manual lowering cannot cut a head or an
+    expert in half) — otherwise that group's params replicate and its
+    compute needs no collective. This keeps the manual path correct for
+    every family at any tp, degrading sharding rather than failing."""
+    axes: Tuple[str, ...]   # flattened TP mesh axis names (all manual)
+    tp: int                 # product of their sizes
+    attn: bool              # q/k/v/o head-sharded -> psum after the o-proj
+    kv_div: int             # kv-head shard factor (1 when attn is False)
+    ffn: bool               # dense SwiGLU f-sharded -> psum after down-proj
+    moe_ffn: bool           # expert FFN f-sharded (plain TP axis)
+    moe_ep: bool            # experts sharded over the axes (kv_split view)
+    shared_moe: bool        # shared-experts SwiGLU f-sharded
+
+
+def manual_tp_plan(cfg: ModelConfig, plan: PipelinePlan,
+                   topo: Optional[Topology]) -> Optional[ManualTP]:
+    """None unless the plan asks for manual lowering AND tp > 1."""
+    if topo is None or plan.tp_lowering != "manual" or topo.tp_size <= 1:
+        return None
+    md = topo.tp_axis
+    axes = md if isinstance(md, tuple) else (md,)
+    tp = topo.tp_size
+    kvh, h = cfg.num_kv_heads, cfg.num_heads
+    if isinstance(md, tuple):
+        kv_ax = topo.mesh.shape[md[0]]
+        qg_ax = tp // kv_ax
+        attn = (kvh > 0 and kvh % kv_ax == 0
+                and (h // max(kvh, 1)) % qg_ax == 0)
+        kv_div = kv_ax if attn else 1
+    else:
+        attn = kvh > 0 and kvh % tp == 0
+        kv_div = tp if attn else 1
+    ffn = cfg.d_ff > 0 and cfg.d_ff % tp == 0
+    moe_ffn = moe_ep = shared_moe = False
+    if cfg.moe is not None:
+        fe = cfg.moe.d_expert or cfg.d_ff
+        if isinstance(md, tuple):
+            moe_ep = cfg.moe.num_experts % tp == 0
+        else:
+            moe_ffn = fe % tp == 0
+        if cfg.moe.num_shared_experts:
+            shared_moe = (fe * cfg.moe.num_shared_experts) % tp == 0
+    if cfg.family == "ssm":
+        attn, ffn = False, False
+    return ManualTP(axes=tuple(axes), tp=tp, attn=attn, kv_div=kv_div,
+                    ffn=ffn, moe_ffn=moe_ffn, moe_ep=moe_ep,
+                    shared_moe=shared_moe)
+
+
+def _strip_axes(spec: P, axes) -> P:
+    """Drop the given mesh axes from a PartitionSpec (replicate there)."""
+    def keep(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(a for a in e if a not in axes)
+            return kept if kept else None
+        return None if e in axes else e
+    return P(*(keep(e) for e in spec))
+
+
+def _apply_manual_tp(cfg: ModelConfig, out: Params, mtp: ManualTP) -> Params:
+    """Replicate every param group the manual lowering does not shard (see
+    ``ManualTP``); embed / lm_head always replicate under manual (the gather
+    and unembed run replicated inside the body — vocab sharding is a
+    GSPMD-auto-only optimization)."""
+    drop = set(mtp.axes)
+    strip = {"embed", "lm_head"}
+    if not mtp.attn:
+        strip |= {"wq", "wk", "wv", "wo", "xwq", "xwk", "xwv", "xwo"}
+    if not mtp.ffn:
+        strip |= {"wg", "wu", "wd"}
+    if not (mtp.moe_ffn or mtp.moe_ep):
+        strip |= {"e_wg", "e_wu", "e_wd"}
+    if not mtp.shared_moe:
+        strip |= {"s_wg", "s_wu", "s_wd"}
+    # SSM blocks never TP-shard under manual (out_proj's row split would
+    # need an activation slice + psum inside the scan; replication is exact)
+    ssm_keys = {"in_proj", "out_proj", "conv_w", "conv_b", "a_log",
+                "dt_bias", "d_skip", "gate_norm", "ln"}
+    strip |= ssm_keys
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (jax.tree.map(
+                        lambda p: _strip_axes(p, drop), v,
+                        is_leaf=lambda x: isinstance(x, P))
+                        if k in strip else walk(v))
+                    for k, v in tree.items()}
+        return tree
+    return walk(out)
+
+
 def alloc_kv_pool(cfg: ModelConfig, plan: PipelinePlan, b: int,
-                  topo: Topology = None) -> kvpages.PagedPool:
+                  topo: Topology = None, *,
+                  mtp: Optional[ManualTP] = None) -> kvpages.PagedPool:
     """One stage's paged KV pool, zero-initialized in the plan's storage
     codec; kv_split meshes get the pool sharded by kv head (payloads AND
-    scales carry kvh on axis 4)."""
+    scales carry kvh on axis 4). Under the MANUAL lowering the body is
+    mapped over the TP axes too, so the pool is allocated with the LOCAL
+    kv-head count and no sharding hint."""
     kvh = cfg.num_kv_heads
     hd = cfg.resolved_head_dim
+    if mtp is not None:
+        kvh //= mtp.kv_div
     pool = kvpages.alloc_pool(plan.page_geometry, plan.codec,
                               plan.layers_per_stage, b, kvh, hd)
-    if topo is not None and isinstance(topo.tp_axis, tuple):
+    if mtp is None and topo is not None and isinstance(topo.tp_axis, tuple):
         spec = P(None, None, None, None, topo.tp_axis[0], None)
         shard = lambda a: (jax.lax.with_sharding_constraint(a, spec)
                            if a is not None else None)
@@ -98,7 +207,17 @@ def stage_params(cfg: ModelConfig, params: Params, plan: PipelinePlan) -> Params
 
 def stage_param_specs(cfg: ModelConfig, plan: PipelinePlan, topo: Topology) -> Params:
     """PartitionSpecs for ``stage_params`` output: stage dim over the stage
-    axis, TP dims over the model axis, embed d-sharded (gather stays local)."""
+    axis, TP dims over the model axis, embed d-sharded (gather stays local).
+    Under the manual TP lowering the sharding degrades per ``ManualTP``
+    (head/row-exact splits only; the rest replicates)."""
+    out = _stage_param_specs(cfg, plan, topo)
+    mtp = manual_tp_plan(cfg, plan, topo)
+    if mtp is not None:
+        out = _apply_manual_tp(cfg, out, mtp)
+    return out
+
+
+def _stage_param_specs(cfg: ModelConfig, plan: PipelinePlan, topo: Topology) -> Params:
     st, md = topo.stage_axis, topo.tp_axis
 
     def lift(spec: P) -> P:
@@ -141,10 +260,14 @@ def stage_param_specs(cfg: ModelConfig, plan: PipelinePlan, topo: Topology) -> P
     return out
 
 
-def batch_specs(topo: Topology):
-    """(manual shard_map axis_names, batch axes outside the stage axis)."""
+def batch_specs(topo: Topology, mtp: Optional[ManualTP] = None):
+    """(manual shard_map axis_names, batch axes outside the stage axis).
+    The manual TP lowering adds the TP axes to the manual set — the whole
+    mesh is then manual, which is what old jaxlib can partition."""
     pod_axes = tuple(a for a in topo.batch_axes if a != topo.stage_axis)
     manual = set(pod_axes) | {topo.stage_axis}
+    if mtp is not None:
+        manual |= set(mtp.axes)
     return manual, pod_axes
 
 

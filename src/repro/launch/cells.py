@@ -197,8 +197,12 @@ def _prefill_pipeline_cell(model: Model, shape: ShapeConfig, topo: Topology,
         fn = lambda st, tk: pp.prefill_pipeline(cfg, st, tk, plan, topo)
         args = (staged_sh, tokens)
         shard = (_named(topo, spec_tree), NamedSharding(topo.mesh, tok_spec))
+    from repro.core import transport as _tx
+    wire = (None if mode == "gpipe" or cfg.family == "ssm" else
+            _tx.analytic_wire_bytes(plan, cfg, int(tokens.shape[0])))
     return Cell(cfg.arch, shape, mode, fn, args, shard,
-                meta={"family": cfg.family, "plan": plan, "mesh": topo.mesh})
+                meta={"family": cfg.family, "plan": plan, "mesh": topo.mesh,
+                      "wire_model": wire})
 
 
 def _prefill_baseline_cell(model: Model, shape: ShapeConfig, topo: Topology,

@@ -33,7 +33,7 @@ SHAPE_NAMES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
              out_dir: str, attn_backend: str = "jnp",
              kv_dtype: str = "auto", kv_page_tokens: int = 0,
-             pool_backend: str = "auto") -> dict:
+             pool_backend: str = "auto", tp_lowering: str = "auto") -> dict:
     from repro import compat
     from repro.configs.base import SHAPES, get_config
     from repro.launch.cells import SkipCell, build_cell
@@ -56,17 +56,25 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
                             attn_sharding="kv_split",
                             attn_backend=attn_backend,
                             pool_backend=pool_backend, kv_dtype=kv_dtype,
-                            kv_page_tokens=kv_page_tokens)
+                            kv_page_tokens=kv_page_tokens,
+                            tp_lowering=tp_lowering)
             cell = build_cell(arch, shape_name, topo, mode="mocap", run=run)
         else:
             run = RunConfig(num_stages=topo.num_stages,
                             attn_backend=attn_backend,
                             pool_backend=pool_backend, kv_dtype=kv_dtype,
-                            kv_page_tokens=kv_page_tokens)
+                            kv_page_tokens=kv_page_tokens,
+                            tp_lowering=tp_lowering)
             cell = build_cell(arch, shape_name, topo, mode=mode, run=run)
     except SkipCell as e:
         rec.update(ok=True, skipped=True, reason=str(e))
         return rec
+    if cell.meta.get("wire_model"):
+        # §3.4 analytic per-run wire bytes (core.transport.analytic_wire_
+        # bytes) — the runtime CollectiveLedger is pinned to this model
+        # within 1% by tests/test_transport.py
+        rec["wire_model"] = cell.meta["wire_model"]
+        rec["tp_lowering"] = cell.meta["plan"].tp_lowering
     try:
         with compat.set_mesh(cell.meta.get("mesh", topo.mesh)):
             lowered = cell.lower()
@@ -129,6 +137,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                     choices=("auto", "jnp", "pallas"),
                     help="backend for pool-sourced partials (own-pool scan "
                          "+ fetch/qship); auto follows --attn-backend")
+    ap.add_argument("--tp-lowering", default="auto",
+                    choices=("auto", "manual"),
+                    help="TP lowering for pipeline modes (core.transport): "
+                         "auto = GSPMD partial-auto (manual fallback on old "
+                         "jaxlib); manual = explicit transport psums")
     ap.add_argument("--kv-dtype", default="auto",
                     choices=("auto", "bfloat16", "int8", "fp8"),
                     help="KV page-store codec for pipeline modes "
@@ -152,12 +165,13 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.jobs > 1:
         return _run_parallel(cells, args.out, args.jobs, args.attn_backend,
                              args.kv_dtype, args.kv_page_tokens,
-                             args.pool_backend)
+                             args.pool_backend, args.tp_lowering)
 
     failures = 0
     for arch, shape, mesh, mode in cells:
         rec = run_cell(arch, shape, mesh, mode, args.out, args.attn_backend,
-                       args.kv_dtype, args.kv_page_tokens, args.pool_backend)
+                       args.kv_dtype, args.kv_page_tokens, args.pool_backend,
+                       args.tp_lowering)
         path = save(rec, args.out)
         status = ("SKIP" if rec.get("skipped") else
                   "OK" if rec["ok"] else "FAIL")
@@ -170,7 +184,8 @@ def main(argv: Optional[List[str]] = None) -> int:
 
 def _run_parallel(cells, out_dir: str, jobs: int,
                   attn_backend: str = "jnp", kv_dtype: str = "auto",
-                  kv_page_tokens: int = 0, pool_backend: str = "auto") -> int:
+                  kv_page_tokens: int = 0, pool_backend: str = "auto",
+                  tp_lowering: str = "auto") -> int:
     procs: List[Tuple[subprocess.Popen, tuple]] = []
     pending = list(cells)
     failures = 0
@@ -180,7 +195,7 @@ def _run_parallel(cells, out_dir: str, jobs: int,
         cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
                "--shape", shape, "--mesh", mesh, "--mode", mode,
                "--attn-backend", attn_backend, "--pool-backend", pool_backend,
-               "--kv-dtype", kv_dtype,
+               "--kv-dtype", kv_dtype, "--tp-lowering", tp_lowering,
                "--kv-page-tokens", str(kv_page_tokens), "--out", out_dir]
         return subprocess.Popen(cmd, stdout=subprocess.PIPE,
                                 stderr=subprocess.STDOUT, text=True)

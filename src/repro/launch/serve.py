@@ -108,6 +108,21 @@ def main(argv=None) -> int:
                     choices=("jnp", "pallas"),
                     help="SSD inner loop for ssm/hybrid archs "
                          "(kernels.ops.ssd behind the same knob pattern)")
+    ap.add_argument("--tp-lowering", default="auto",
+                    choices=("auto", "manual"),
+                    help="TP lowering (core.transport, DESIGN.md §3.6): "
+                         "auto = GSPMD partial-auto shard_map (falls back "
+                         "to manual on old jaxlib); manual = all mesh axes "
+                         "manual with explicit transport psums — restores "
+                         "TP>1 on old jaxlib")
+    ap.add_argument("--transport", default="jax",
+                    help="transport registry entry for cross-stage/"
+                         "cross-rank collectives (core.transport)")
+    ap.add_argument("--fetch-batch", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="batched fetch: land remote chunk-layers in a "
+                         "staging buffer + ONE pool_attention launch "
+                         "(auto follows the pool backend's batched_pool)")
     ap.add_argument("--kv-dtype", default="auto",
                     choices=("auto", "bfloat16", "int8", "fp8"),
                     help="KV page-store codec (repro.kvstore): auto = model "
@@ -150,9 +165,10 @@ def main(argv=None) -> int:
                       if args.preset == "smoke" else get_config(args.arch),
                       dtype="float32")
         n_dev = jax.device_count()
-        # tp=2 when the device count affords it AND the jaxlib can partition
-        # auto-TP inside shard_map (old jaxlib falls back to tp=1)
-        tp = compat.max_auto_tp(2) if n_dev >= 4 else 1
+        # tp=2 when the device count affords it; old jaxlib takes the
+        # MANUAL TP lowering (build_plan resolves tp_lowering="auto" via
+        # compat.resolve_tp_lowering — no more tp=1 fallback)
+        tp = 2 if n_dev >= 4 else 1
         stages = max(n_dev // tp, 2)
         from repro.launch.mesh import make_test_topology
         topo = make_test_topology(stages, tp)
@@ -160,10 +176,16 @@ def main(argv=None) -> int:
                         attn_backend=args.attn_backend,
                         pool_backend=args.pool_backend,
                         ssm_backend=args.ssm_backend,
+                        tp_lowering=args.tp_lowering,
+                        transport=args.transport,
+                        fetch_batch=args.fetch_batch,
                         kv_dtype=args.kv_dtype,
                         kv_page_tokens=args.kv_page_tokens,
                         kv_offload=args.kv_offload)
         plan = pp.build_plan(cfg, stages, args.seq, run)
+        if plan.tp_lowering == "manual" and tp > 1:
+            print(f"[transport] manual TP lowering (tp={tp}, "
+                  f"transport={plan.transport})")
         model = build_model(cfg)
         params = model.init(jax.random.key(args.seed))
         staged = pp.stage_params(cfg, params, plan)

@@ -199,16 +199,21 @@ def swiglu(params, x):
 
 def moe_layer(params, x, *, num_experts: int, top_k: int, capacity_factor: float,
               topo: Optional[Topology] = None, num_real: int = 0,
-              ep_axis=None):
+              ep_axis=None, ep_axes=None):
     """Token-choice top-k MoE with per-example capacity-bounded sort dispatch.
 
     Dispatch is vmapped over the batch dim so token sorts never cross data
-    shards. Two layouts:
+    shards. Three layouts:
       - default: expert FFNs TENSOR-parallel over the TP axis;
-      - ``ep_axis``: EXPERT-parallel — the dispatched [B,E,cap,*] tensors are
-        E-sharded so expert FFNs are chip-local and the only collective is
-        the [B,S,d] psum at combine (experts zero-padded to the axis size,
-        ``num_real`` masks their router logits — bit-exact).
+      - ``ep_axis``: EXPERT-parallel via GSPMD — the dispatched [B,E,cap,*]
+        tensors are E-sharded so expert FFNs are chip-local and the only
+        collective is the [B,S,d] psum at combine (experts zero-padded to
+        the axis size, ``num_real`` masks their router logits — bit-exact);
+      - ``ep_axes``: MANUAL expert parallelism (DESIGN.md §3.6) — the
+        expert params arrive pre-sliced (``wg.shape[0]`` local experts per
+        chip, kv-major over the named manual mesh axes); the full dispatch
+        is computed replicated, MY expert rows are sliced out by axis index,
+        and the returned [B,S,d] is the PARTIAL combine — the caller psums.
     x: [B,S,d]. params: router [d,E], wg/wu [E,d,f], wd [E,f,d].
     """
     b, s, d = x.shape
@@ -247,6 +252,16 @@ def moe_layer(params, x, *, num_experts: int, top_k: int, capacity_factor: float
         return xd, slots_tok[:e], slots_valid[:e], slots_w[:e]
 
     xd, tok, valid, wgt = jax.vmap(dispatch_one)(x, choices, weights)  # [B,E,cap,...]
+    if ep_axes is not None:
+        # manual EP: slice MY contiguous expert block (kv-major flat index
+        # over the named axes, matching the P(..., axes, ...) layout)
+        e_loc = params["wg"].shape[0]
+        idx = jnp.int32(0)
+        for a in ep_axes:
+            idx = idx * jax.lax.psum(1, a) + jax.lax.axis_index(a)
+        off = idx * e_loc
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, off, e_loc, axis=1)
+        xd, tok, valid, wgt = sl(xd), sl(tok), sl(valid), sl(wgt)
     if ep_axis is not None:
         ep = P(None, ep_axis, None, None)
         xd = jax.lax.with_sharding_constraint(xd, ep)

@@ -8,7 +8,8 @@ KV cache layout: dict(k=[L,B,S,K,Dh], v=[L,B,S,K,Dh], pos=[B]).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,34 @@ from repro.models import layers as L
 from repro.models.topology import Topology
 
 Params = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class ManualTPApply:
+    """Manual-TP hooks for the block fns (DESIGN.md §3.6): which param
+    groups arrive SHARDED (so the matching contraction needs ``reduce`` — a
+    psum over the manual TP axes, supplied by the caller as a transport
+    closure) and, for manual expert parallelism, the mesh axes to derive the
+    local expert range from. ``None`` (the default everywhere) is the plain
+    single-device / GSPMD path, bit-identical to before."""
+    reduce: Callable[[jax.Array], jax.Array]
+    attn: bool = False        # wq/wk/wv/wo head-sharded -> psum after wo
+    dense: bool = False       # wg/wu/wd f-sharded -> psum after wd
+    moe: bool = False         # expert output partial (f- or expert-sharded)
+    shared: bool = False      # shared-experts s_w* f-sharded
+    ep_axes: Optional[Tuple[str, ...]] = None  # manual EP: slice my experts
+
+
+def manual_tp_apply(mtp, reduce: Callable[[jax.Array], jax.Array]
+                    ) -> ManualTPApply:
+    """The ONE mapping from a ``staging.ManualTP`` plan (duck-typed — this
+    layer sits below core) to the block-fn hooks; both drivers (stage
+    programs and gpipe) build through here so the flag semantics cannot
+    drift between them."""
+    return ManualTPApply(
+        reduce=reduce, attn=mtp.attn, dense=mtp.ffn,
+        moe=(mtp.moe_ffn or mtp.moe_ep), shared=mtp.shared_moe,
+        ep_axes=(mtp.axes if mtp.moe_ep else None))
 
 
 def _dtype(cfg: ModelConfig):
@@ -120,16 +149,22 @@ def specs(cfg: ModelConfig, *, fsdp: bool = True) -> Params:
 def attn_block(cfg: ModelConfig, lp: Params, x: jax.Array, *,
                k_cache=None, v_cache=None, positions=None,
                causal_offset=0, impl="xla_flash",
-               topo: Optional[Topology] = None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+               topo: Optional[Topology] = None,
+               tp: Optional[ManualTPApply] = None) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Pre-norm attention block. Returns (residual_out, k, v) where k/v are the
     NEW keys/values of these positions (for caching). ``k_cache``/``v_cache``,
-    when given, are prepended (chunked prefill against a prefix)."""
+    when given, are prepended (chunked prefill against a prefix). Head counts
+    come from the param shapes, so under the manual TP lowering (``tp``)
+    this computes the LOCAL heads and psums the o-projection."""
     b, s, d = x.shape
-    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    hd = cfg.resolved_head_dim
     hn = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
-    q = jnp.einsum("bsd,dq->bsq", hn, lp["wq"]).reshape(b, s, h, hd)
-    k = jnp.einsum("bsd,dq->bsq", hn, lp["wk"]).reshape(b, s, kv, hd)
-    v = jnp.einsum("bsd,dq->bsq", hn, lp["wv"]).reshape(b, s, kv, hd)
+    q = jnp.einsum("bsd,dq->bsq", hn, lp["wq"])
+    k = jnp.einsum("bsd,dq->bsq", hn, lp["wk"])
+    v = jnp.einsum("bsd,dq->bsq", hn, lp["wv"])
+    q = q.reshape(b, s, q.shape[-1] // hd, hd)
+    k = k.reshape(b, s, k.shape[-1] // hd, hd)
+    v = v.reshape(b, s, v.shape[-1] // hd, hd)
     if cfg.qk_norm:
         q = L.rms_norm(q, lp["q_norm"], cfg.norm_eps)
         k = L.rms_norm(k, lp["k_norm"], cfg.norm_eps)
@@ -147,34 +182,60 @@ def attn_block(cfg: ModelConfig, lp: Params, x: jax.Array, *,
     off = None if causal_offset is None else (
         causal_offset if k_cache is None else k_cache.shape[1])
     att = L.attention(q, k_all, v_all, causal_offset=off, scale=scale, impl=impl)
-    out = jnp.einsum("bsq,qd->bsd", att.reshape(b, s, h * hd), lp["wo"])
+    h_loc = att.shape[2]
+    out = jnp.einsum("bsq,qd->bsd", att.reshape(b, s, h_loc * hd), lp["wo"])
+    if tp is not None and tp.attn:
+        out = tp.reduce(out)
     return x + cfg.residual_multiplier * out, k, v
 
 
 def ffn_block(cfg: ModelConfig, lp: Params, x: jax.Array, *,
-              topo: Optional[Topology] = None, ep_axis=None) -> jax.Array:
+              topo: Optional[Topology] = None, ep_axis=None,
+              tp: Optional[ManualTPApply] = None) -> jax.Array:
+    """FFN / MoE block. Under manual TP (``tp``) the SHARDED parts (per the
+    flags) are summed and reduced with ONE psum; unsharded parts add after
+    the reduce so replication is never double-counted."""
     hn = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    partial, replicated = None, None
+
+    def acc(out, sharded):
+        nonlocal partial, replicated
+        if tp is not None and sharded:
+            partial = out if partial is None else partial + out
+        else:
+            replicated = out if replicated is None else replicated + out
+
     if cfg.moe is None:
-        out = L.swiglu({"wg": lp["wg"], "wu": lp["wu"], "wd": lp["wd"]}, hn)
+        acc(L.swiglu({"wg": lp["wg"], "wu": lp["wu"], "wd": lp["wd"]}, hn),
+            tp is not None and tp.dense)
     else:
         m = cfg.moe
-        out = L.moe_layer(
-            {"router": lp["router"], "wg": lp["e_wg"], "wu": lp["e_wu"], "wd": lp["e_wd"]},
+        acc(L.moe_layer(
+            {"router": lp["router"], "wg": lp["e_wg"], "wu": lp["e_wu"],
+             "wd": lp["e_wd"]},
             hn, num_experts=m.num_experts, top_k=m.top_k,
             capacity_factor=m.capacity_factor, topo=topo,
-            num_real=m.real_experts, ep_axis=ep_axis)
+            num_real=m.real_experts, ep_axis=ep_axis,
+            ep_axes=tp.ep_axes if tp is not None else None),
+            tp is not None and tp.moe)
         if m.num_shared_experts:
-            out = out + L.swiglu({"wg": lp["s_wg"], "wu": lp["s_wu"], "wd": lp["s_wd"]}, hn)
+            acc(L.swiglu({"wg": lp["s_wg"], "wu": lp["s_wu"],
+                          "wd": lp["s_wd"]}, hn),
+                tp is not None and tp.shared)
+    out = replicated
+    if partial is not None:
+        out = tp.reduce(partial) if out is None else tp.reduce(partial) + out
+    assert out is not None, "ffn_block produced no parts"
     return x + cfg.residual_multiplier * out
 
 
 def layer_apply(cfg: ModelConfig, lp: Params, x: jax.Array, *,
                 k_cache=None, v_cache=None, positions=None, causal_offset=0,
-                impl="xla_flash", topo=None):
+                impl="xla_flash", topo=None, tp=None):
     x, k, v = attn_block(cfg, lp, x, k_cache=k_cache, v_cache=v_cache,
                          positions=positions, causal_offset=causal_offset,
-                         impl=impl, topo=topo)
-    x = ffn_block(cfg, lp, x, topo=topo)
+                         impl=impl, topo=topo, tp=tp)
+    x = ffn_block(cfg, lp, x, topo=topo, tp=tp)
     return x, k, v
 
 

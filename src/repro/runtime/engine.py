@@ -409,7 +409,7 @@ class ContinuousEngine:
         self.scheduler = ChunkScheduler(
             ec.num_stages, self._chunk_plan, policy=policy, lease=self.lease,
             trace=self.trace, compress=ec.compress, kv_compress=kv_compress,
-            stage_scale=scale)
+            stage_scale=scale, page_tokens=ec.kv_page_tokens)
 
     # ---------------------------------------------------------- admission
     def submit(self, req: Request) -> None:

@@ -46,6 +46,37 @@ class Lease:
     release_time: float
 
 
+def chunk_page_bytes(
+    kvb: Sequence[float],
+    chunks: Sequence[int],
+    seq_len: Optional[int],
+    page_tokens: int,
+) -> List[float]:
+    """Per-chunk STORED bytes at PAGE granularity.
+
+    ``kvb[i]`` prices the whole bucket chunk; the page store only allocates
+    pages for the request's VALID tokens (a request near the bottom of its
+    bucket fills only part of its tail chunk, and chunks entirely beyond
+    ``seq_len`` allocate nothing). Bytes round UP to whole pages — page
+    granularity, not token granularity — and never exceed the whole-chunk
+    figure. ``page_tokens <= 0`` means one page per chunk (the coarsest
+    paging: a touched chunk allocates fully, an untouched chunk nothing).
+    ``seq_len=None`` keeps the legacy whole-bucket accounting.
+    """
+    if seq_len is None:
+        return [float(b) for b in kvb]
+    out: List[float] = []
+    start = 0
+    for b, c in zip(kvb, chunks):
+        valid = min(max(seq_len - start, 0), int(c))
+        pt = page_tokens if page_tokens > 0 else int(c)
+        n_pages = -(-valid // pt)
+        full_pages = -(-int(c) // pt)
+        out.append(float(b) * min(n_pages, full_pages) / full_pages)
+        start += int(c)
+    return out
+
+
 def request_lease_events(
     rid: int,
     finish: np.ndarray,            # [M][N] chunk completion times
@@ -54,6 +85,10 @@ def request_lease_events(
     pair: Sequence[int],           # stage -> MBKR pair stage
     compress: float = 1.0,
     kv_compress: float = 1.0,
+    *,
+    seq_len: Optional[int] = None,
+    chunks: Optional[Sequence[int]] = None,
+    page_tokens: int = 0,
 ) -> Lease:
     """Build the lease for one scheduled request from its chunk finish times.
 
@@ -61,6 +96,11 @@ def request_lease_events(
     (locally for i < p2, at the pair stage scaled by ``compress`` for spilled
     chunks); everything a request holds at stage s frees when its tail chunk
     clears s — the same lifecycle the event simulator's memory tracker uses.
+    Alloc AND free events are per-chunk page allocations (see
+    ``chunk_page_bytes``): with ``seq_len``/``chunks``/``page_tokens`` given,
+    a request leases only the pages its valid tokens touch — a long unused
+    bucket tail (seq_len far below the bucket) stops reserving phantom
+    bytes, so longer-tail buckets admit sooner (asserted in test_sched).
 
     ``kv_compress`` is the KV page store's stored-bytes factor
     (``kvstore.quant.kv_compress_factor``): with a quantized ``kv_dtype``
@@ -70,22 +110,22 @@ def request_lease_events(
     spilled chunks only.
     """
     m, n = finish.shape
+    if chunks is None:
+        seq_len = None  # page accounting needs the chunk split
+    pkvb = chunk_page_bytes(kvb, chunks if chunks is not None else [1] * m,
+                            seq_len, page_tokens)
     ev: List[LeaseEvent] = []
-    local = sum(kvb[:p2]) * kv_compress
-    hosted = sum(kvb[p2:]) * compress * kv_compress
     for s in range(n):
-        for i in range(m):
-            if i < p2:
-                ev.append(LeaseEvent(s, float(finish[i][s]),
-                                     float(kvb[i]) * kv_compress))
-            else:
-                ev.append(LeaseEvent(pair[s], float(finish[i][s]),
-                                     float(kvb[i]) * compress * kv_compress))
         t_drain = float(finish[m - 1][s])
-        if local:
-            ev.append(LeaseEvent(s, t_drain, -float(local)))
-        if hosted:
-            ev.append(LeaseEvent(pair[s], t_drain, -float(hosted)))
+        for i in range(m):
+            b = pkvb[i] * kv_compress
+            if i >= p2:
+                b *= compress
+            if b == 0.0:
+                continue  # beyond seq_len: no pages, no events
+            stage = s if i < p2 else pair[s]
+            ev.append(LeaseEvent(stage, float(finish[i][s]), b))
+            ev.append(LeaseEvent(stage, t_drain, -b))
     release = float(finish[m - 1].max())
     return Lease(rid, tuple(ev), release)
 

@@ -145,6 +145,7 @@ class ChunkScheduler:
         compress: float = 1.0,
         kv_compress: float = 1.0,
         stage_scale: Optional[Sequence[float]] = None,
+        page_tokens: int = 0,
     ):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; "
@@ -160,6 +161,11 @@ class ChunkScheduler:
         # count QUANTIZED bytes, so a one-byte kv_dtype admits ~2x the
         # concurrency against the same physical budget
         self.kv_compress = kv_compress
+        # page size for PAGE-GRANULAR lease events (kvlease.chunk_page_
+        # bytes): a request leases only the pages its seq_len touches, so
+        # bucket-tail padding stops reserving phantom bytes; 0 = one page
+        # per chunk (chunks beyond seq_len still lease nothing)
+        self.page_tokens = page_tokens
         self.stage_scale = (np.asarray(stage_scale, float)
                             if stage_scale is not None else None)
         self.pair = [mb.pair_of(s, num_stages) for s in range(num_stages)]
@@ -185,7 +191,10 @@ class ChunkScheduler:
         if self.lease is not None:
             lease = request_lease_events(r.rid, finish, plan.kvb, plan.p2,
                                          self.pair, self.compress,
-                                         self.kv_compress)
+                                         self.kv_compress,
+                                         seq_len=r.seq_len,
+                                         chunks=plan.chunks,
+                                         page_tokens=self.page_tokens)
             if not self.lease.admit(lease):
                 return False
         # commit: replay for the hooks (busy accounting + trace)

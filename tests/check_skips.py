@@ -1,19 +1,24 @@
 """Assert the tier-1 SKIP matrix matches the installed jax capabilities.
 
 The CI ``tier1`` job runs on a jax matrix (current release + the oldest
-supported jaxlib, which predates ``jax.shard_map`` and therefore takes the
-``compat.supports_partial_auto_spmd`` fallback path everywhere). A compat
-drift — a test silently skipping on NEW jax, or the old-jaxlib leg skipping
-more/less than the two known kv_split/EP tests — should fail CI, not
-surface on user machines. This script parses a ``pytest -rs`` log and
-asserts the exact expected skip counts per reason class:
+supported jaxlib, which predates ``jax.shard_map``). Since the manual TP
+lowering landed (``compat.resolve_tp_lowering`` / DESIGN.md §3.6) the
+old-jaxlib leg runs TP=2 and the kv_split / EP perf-variant tests instead
+of skipping them — the partial-auto skip count is 0 on BOTH legs, and a
+reappearing "old jaxlib"/PartitionId skip means the manual-lowering
+fallback regressed. This script parses a ``pytest -rs`` log and asserts the
+exact expected skip counts per reason class:
 
-- "old jaxlib"/PartitionId skips: exactly 2 (test_perf_variants kv_split +
-  EP) when partial-auto SPMD is unsupported, exactly 0 otherwise.
+- "old jaxlib"/PartitionId skips: exactly 0 on every leg (the manual
+  lowering replaced the tp=1 fallback).
 - hypothesis skips: exactly 0 when hypothesis is importable (CI installs
   it), exactly 4 otherwise (3 importorskip modules + the guarded
   ragged-occupancy property test).
 - anything else: unknown skip reason -> fail.
+
+It also asserts the resolved TP lowering matches ``REPRO_EXPECT_TP_LOWERING``
+when the CI matrix sets it (the old-jaxlib leg pins "manual"), so a compat
+drift that silently flips the lowering fails CI instead of shipping.
 
 Usage:
   PYTHONPATH=src python -m pytest -q -rs 2>&1 | tee pytest-report.log
@@ -21,6 +26,7 @@ Usage:
 """
 from __future__ import annotations
 
+import os
 import re
 import sys
 
@@ -49,16 +55,15 @@ def main(path: str) -> int:
                and "hypothesis" not in r
                and not any(a in r for a in _ALLOWED_CONDITIONAL)]
 
-    exp_partial = 0 if compat.supports_partial_auto_spmd() else 2
     exp_hyp = 0 if have_hyp else 4
     ok = True
-    if n_partial != exp_partial:
+    if n_partial != 0:
         ok = False
-        print(f"FAIL: {n_partial} partial-auto-SPMD skips, expected "
-              f"{exp_partial} (supports_partial_auto_spmd()="
-              f"{compat.supports_partial_auto_spmd()}) — compat drift: "
-              "either a fallback path regressed or a new gated test wasn't "
-              "registered here")
+        print(f"FAIL: {n_partial} partial-auto-SPMD skips, expected 0 on "
+              "every leg (supports_partial_auto_spmd()="
+              f"{compat.supports_partial_auto_spmd()}) — the manual TP "
+              "lowering should have replaced the tp=1 fallback; either it "
+              "regressed or a new gated test wasn't registered here")
     if n_hyp != exp_hyp:
         ok = False
         print(f"FAIL: {n_hyp} hypothesis skips, expected {exp_hyp} "
@@ -66,9 +71,17 @@ def main(path: str) -> int:
     if unknown:
         ok = False
         print(f"FAIL: unknown skip reasons: {unknown}")
+    expect_tl = os.environ.get("REPRO_EXPECT_TP_LOWERING")
+    resolved_tl = compat.resolve_tp_lowering("auto")
+    if expect_tl and resolved_tl != expect_tl:
+        ok = False
+        print(f"FAIL: tp_lowering resolves to {resolved_tl!r} but this CI "
+              f"leg expects {expect_tl!r} (REPRO_EXPECT_TP_LOWERING) — the "
+              "matrix env and compat.resolve_tp_lowering disagree")
     if ok:
         print(f"skip matrix OK: partial-auto={n_partial} "
-              f"hypothesis={n_hyp} (jax capabilities match expectations)")
+              f"hypothesis={n_hyp} tp_lowering={resolved_tl} "
+              "(jax capabilities match expectations)")
     return 0 if ok else 1
 
 

@@ -13,9 +13,11 @@ Prints "PASS <max_err>" or raises.
 
 jax-version note: on old jaxlib (no partial-auto SPMD — see
 ``repro.compat.supports_partial_auto_spmd``) the shallow 4-stage x tp=2 mesh
-cannot lower (PartitionId), so this worker falls back to tp=1 with the same
-stage count; TP>1-specific coverage lives in test_perf_variants.py, which
-skips there with a reason.
+cannot lower with GSPMD-auto TP (PartitionId) — ``build_plan`` resolves
+``tp_lowering="auto"`` to the MANUAL lowering there (explicit transport
+psums, all mesh axes manual; DESIGN.md §3.6), so TP=2 coverage runs on BOTH
+jaxlib legs. ``REPRO_TP_LOWERING`` pins the choice (the CI matrix asserts
+the manual path is exercised on the old-jaxlib leg).
 """
 import sys
 
@@ -45,7 +47,6 @@ def main(arch: str, mode: str, remote_attn: str, spill_dtype: str = "bfloat16",
     # consumed by chunk 7's attention (exercises fetch/qship VALUES and the
     # int8 wire quantization, not just their masking)
     n_stages, tp = (8, 1) if deep else (4, 2)
-    tp = compat.max_auto_tp(tp)  # old jaxlib falls back to tp=1
     mesh = compat.make_mesh((n_stages, tp), ("data", "model"),
                             axis_types=(AxisType.Auto,) * 2)
     topo = Topology(mesh=mesh)

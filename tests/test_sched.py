@@ -118,6 +118,56 @@ def test_lease_tight_budget_defers_but_never_overflows():
     assert eng.metrics()["completed"] == 6
 
 
+def test_page_granular_lease_admits_long_tail_sooner():
+    """Page-granular lease events (kvlease.chunk_page_bytes): a request
+    filling only part of its bucket leases only the pages its valid tokens
+    touch — the unused bucket tail stops reserving phantom bytes. Under the
+    same tight budget, the longer-tail workload must run with a lower
+    occupancy peak, fewer deferrals, and earlier final admission than the
+    bucket-filling workload."""
+    ec = _ec(kv_page_tokens=256)
+    runs = {}
+    for name, seq in (("full", 65536), ("tail", 40000)):
+        eng = _continuous(ec)
+        eng.lease.budget[:] = 14 * eng._chunk_plan(65536).kvb[0]
+        _submit_burst(eng, 6, seq)
+        eng.run_until_drained()
+        assert np.all(eng.lease.hwm <= eng.lease.budget * (1 + 1e-9))
+        assert eng.metrics()["completed"] == 6
+        runs[name] = {
+            "refusals": eng.lease.refusals,
+            "hwm": float(eng.lease.hwm.max()),
+            "last_admit": max(sr.admit_time for sr in eng.scheduler.admitted),
+        }
+    assert runs["full"]["refusals"] > 0  # the tight budget actually bites
+    assert runs["tail"]["hwm"] < runs["full"]["hwm"]
+    assert runs["tail"]["refusals"] < runs["full"]["refusals"]
+    assert runs["tail"]["last_admit"] < runs["full"]["last_admit"]
+
+
+def test_chunk_page_bytes_unit():
+    """Per-chunk page accounting: rounds UP to whole pages, zeroes chunks
+    beyond seq_len, caps at the whole-chunk figure, and preserves the
+    legacy whole-bucket totals when seq_len is None."""
+    from repro.sched.kvlease import chunk_page_bytes
+    kvb = [4096.0, 4096.0, 4096.0, 4096.0]
+    chunks = [1024, 1024, 1024, 1024]
+    # full bucket: identical to legacy
+    assert chunk_page_bytes(kvb, chunks, 4096, 256) == kvb
+    assert chunk_page_bytes(kvb, chunks, None, 256) == kvb
+    # 2.5 chunks valid: tail chunk rounds up to pages, last chunk drops
+    got = chunk_page_bytes(kvb, chunks, 2560, 256)
+    assert got[0] == got[1] == 4096.0
+    assert got[2] == 4096.0 * 2 / 4  # 512 tokens -> 2 of 4 pages
+    assert got[3] == 0.0
+    # page rounding: 1 token into a page still leases the whole page
+    got = chunk_page_bytes(kvb, chunks, 1025, 256)
+    assert got[1] == 4096.0 / 4
+    # page_tokens=0 -> one page per chunk (touched = fully leased)
+    got = chunk_page_bytes(kvb, chunks, 1025, 0)
+    assert got[:2] == [4096.0, 4096.0] and got[2:] == [0.0, 0.0]
+
+
 def test_lease_manager_unit():
     mgr = KVLeaseManager(2, [10.0, 10.0])
     l1 = Lease(0, (LeaseEvent(0, 1.0, 8.0), LeaseEvent(0, 5.0, -8.0)), 5.0)
