@@ -96,6 +96,10 @@ SPECS: Dict[str, Dict[str, Any]] = {
                 "cont_p99_ttft": ("high", 0.05, 1e-4),
                 "bubble_frac": ("high", 0.05, 0.01),
                 "lease_refusals": ("high", 0.0, 0.0),
+                # obs-on / obs-off wall-clock ratio (~1.0): tracing the run
+                # + building the merged timeline must stay within 5% of the
+                # bare engine — the repro.obs "near-free" contract
+                "telem_overhead": ("high", 0.0, 0.05),
             }),
         ],
     },

@@ -1,0 +1,81 @@
+"""Export a sample merged observability bundle as a CI artifact.
+
+Runs the continuous engine (sim executor, WSC_PAPER profile) with tracing
+on and exports everything ``repro.obs`` produces for one serve run:
+
+- ``obs_trace.json``   — the merged Perfetto timeline (scheduler task spans
+  + kv_lease_bytes / wire_bytes counter tracks),
+- ``obs_metrics.json`` — the serving metrics as JSON lines,
+- ``obs_metrics.prom`` — the same registry as a Prometheus textfile,
+
+so every PR carries a timeline a reviewer can drop into
+https://ui.perfetto.dev without rerunning anything. The job FAILS (raises)
+if the trace is missing any of the surfaces the merge is supposed to
+contain — that is the "one file has everything" contract of DESIGN.md
+§Observability.
+
+  PYTHONPATH=src python -m benchmarks.obs_export [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR
+from repro.configs.base import get_config
+from repro.core import costmodel as cm
+from repro.runtime.engine import (ContinuousEngine, EngineConfig, Request,
+                                  SimExecutor)
+
+ARCH = "llama3-70b"
+
+
+def run(quick: bool = False) -> None:
+    cfg = get_config(ARCH)
+    ec = EngineConfig(model=cfg, hw=cm.WSC_PAPER, num_stages=16, tp=1,
+                      num_chunks=16, max_batch=4, buckets=(8192, 32768),
+                      partition="lbcp", sa_iters=8 if quick else 24)
+    eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw), policy="edf",
+                           slo=5.0, trace=True)
+    rng = np.random.default_rng(0)
+    n_req = 6 if quick else 12
+    for i in range(n_req):
+        eng.submit(Request(rid=i, arrival=float(rng.exponential(0.2) * i),
+                           seq_len=int(rng.choice(ec.buckets))))
+    eng.run_until_drained()
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    paths = eng.export_obs(
+        trace_out=os.path.join(OUT_DIR, "obs_trace.json"),
+        metrics_out=os.path.join(OUT_DIR, "obs_metrics.json"))
+    prom = eng.export_obs(
+        metrics_out=os.path.join(OUT_DIR, "obs_metrics.prom"))
+    paths["prom"] = prom["metrics"]
+
+    evs = json.load(open(paths["trace"]))["traceEvents"]
+    counters = {e["name"] for e in evs if e["ph"] == "C"}
+    missing = []
+    if not any(e["ph"] == "X" and e.get("cat") == "chunk" for e in evs):
+        missing.append("scheduler task spans")
+    if "kv_lease_bytes" not in counters:
+        missing.append("kv_lease_bytes counter track")
+    if "wire_bytes" not in counters:
+        missing.append("wire_bytes counter track")
+    if not any(e["ph"] == "M" for e in evs):
+        missing.append("process_name metadata")
+    if missing:
+        raise RuntimeError(f"merged trace is missing: {missing}")
+    m = eng.metrics()
+    print(f"[obs] {m['completed']} requests | {len(evs)} trace events | "
+          f"counters {sorted(counters)}")
+    for kind, path in paths.items():
+        print(f"{kind} -> {path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

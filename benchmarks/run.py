@@ -43,9 +43,13 @@ JOBS = {
                 "Pallas kernel correctness + analytic TPU timing", None),
     "roofline": ("roofline_report", "main",
                  "Roofline report from the dry-run artifacts", None),
+    "obs": ("obs_export", "run",
+            "Merged Perfetto trace + metrics exporter sample artifacts",
+            None),
 }
 
-_QUICK_AWARE = {"sched", "attn_backend", "kvstore", "kvstore_pipeline"}
+_QUICK_AWARE = {"sched", "attn_backend", "kvstore", "kvstore_pipeline",
+                "obs"}
 
 
 def _gate(predicate: str) -> bool:
@@ -63,6 +67,14 @@ def main(argv=None) -> int:
                     help="comma-separated subset: " + ",".join(JOBS))
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(JOBS)
+        if unknown:
+            # a typo'd job name must not ride the "0 ran" path with the
+            # all-SKIPPED message — name the bad names and the valid set
+            print(f"ERROR: unknown job name(s) {sorted(unknown)}; "
+                  f"valid: {','.join(JOBS)}")
+            return 2
 
     rc = 0
     ran = skipped = 0

@@ -18,6 +18,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.configs.base import ModelConfig
+from repro.core import costmodel as cm
 from repro.core import transport as tx
 from repro.core.plan import PipelinePlan
 from repro.core.staging import (Params, batch_specs, manual_only, manual_tree,
@@ -25,10 +26,16 @@ from repro.core.staging import (Params, batch_specs, manual_only, manual_tree,
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.topology import Topology
+from repro.obs import telemetry as obs_t
 
 
 def gpipe_prefill(cfg: ModelConfig, staged: Params, tokens: jax.Array,
-                  plan: PipelinePlan, topo: Topology) -> jax.Array:
+                  plan: PipelinePlan, topo: Topology, *,
+                  return_telemetry: bool = False) -> jax.Array:
+    """``return_telemetry``: also return the [N, T] StageTelemetry profile.
+    GPipe has no KV pool or MBKR wire, so only ``attn_work`` (full-sequence
+    causal attention per microbatch tick) and ``launches`` are non-zero —
+    the baseline column of the occupancy comparison."""
     n, m = plan.num_stages, plan.num_chunks
     st_ax = topo.stage_axis
     mtp = manual_tp_plan(cfg, plan, topo)
@@ -50,8 +57,11 @@ def gpipe_prefill(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         x0 = jnp.zeros((bm, s_full, cfg.d_model), dt)
         out0 = jnp.zeros((b, cfg.d_model), jnp.float32)
 
+        lps = plan.layers_per_stage
+        rep = mtp.tp if mtp is not None else 1
+
         def tick(carry, t):
-            x_prev, out = carry
+            x_prev, out, tel = carry
             phase = t - stage
             mb = jnp.clip(t, 0, m - 1)
             tok_mb = jax.lax.dynamic_slice(tokens, (mb * bm, 0), (bm, s_full))
@@ -71,26 +81,46 @@ def gpipe_prefill(cfg: ModelConfig, staged: Params, tokens: jax.Array,
                             jax.lax.dynamic_slice(out, (mbp * bm, 0),
                                                   (bm, cfg.d_model)))
             out = jax.lax.dynamic_update_slice(out, upd, (mbp * bm, 0))
+            active = (phase >= 0) & (phase < m)
+            tel = obs_t.charge(tel, "attn_work",
+                               lps * cm.attn_flops(cfg, s_full, 0),
+                               active, rep)
+            tel = obs_t.charge(tel, "launches", float(lps), None, rep)
+            tel_ys = None if tel is None else dict(tel)
             x_next, _ = transport.ring_shift(x_out, st_ax, ring_perm)
-            return (x_next, out), None
+            return (x_next, out, tel), tel_ys
 
-        (xf, out), _ = jax.lax.scan(tick, (x0, out0), jnp.arange(m + n - 1))
+        tel0 = obs_t.telemetry_init() if return_telemetry else None
+        (xf, out, _), tel_ys = jax.lax.scan(tick, (x0, out0, tel0),
+                                            jnp.arange(m + n - 1))
         out, _ = transport.stage_psum(jnp.where(stage == n - 1, out, 0.0),
                                       st_ax)
-        return out
+        if not return_telemetry:
+            return out
+        tel_ys = obs_t.telemetry_collect(
+            tel_ys, mtp.axes if mtp is not None else None)
+        return out, {k: v[None, :] for k, v in tel_ys.items()}
 
     specs = stage_param_specs(cfg, plan, topo)
     sl_specs = manual_tree(specs["stage_layers"], manual)
     tok_spec = P(pod_axes if pod_axes else None, None)
-    x_last = compat.shard_map(
+    tel_specs = {k: P(st_ax, None) for k in obs_t.TELEM_KEYS}
+    out_specs = (tok_spec, tel_specs) if return_telemetry else tok_spec
+    outs = compat.shard_map(
         body, mesh=topo.mesh,
         in_specs=(sl_specs, manual_only(specs["embed"], manual),
                   manual_only(specs["final_norm"], manual), tok_spec),
-        out_specs=tok_spec, axis_names=manual, check_vma=False,
+        out_specs=out_specs, axis_names=manual, check_vma=False,
     )(staged["stage_layers"], staged["embed"], staged["final_norm"], tokens)
+    if return_telemetry:
+        x_last, telem = outs
+    else:
+        x_last, telem = outs, None
 
     x_last = L.rms_norm(x_last[:, None, :].astype(dt), staged["final_norm"],
                         cfg.norm_eps)
     w = staged["embed"].T if ("lm_head" not in staged) else staged["lm_head"]
     logits = L.unembed_logits(x_last, w, scale=cfg.logits_scaling)
+    if return_telemetry:
+        return logits[:, 0], telem
     return logits[:, 0]

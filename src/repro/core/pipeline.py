@@ -49,6 +49,7 @@ from repro.core.stagestep import (StageCtx, attend_chunk,  # noqa: F401
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models.topology import Topology
+from repro.obs import telemetry as obs_t
 
 __all__ = [
     "PipelinePlan", "build_plan", "stage_params", "stage_param_specs",
@@ -62,7 +63,8 @@ __all__ = [
 def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
                      plan: PipelinePlan, topo: Topology, *,
                      embeds: Optional[jax.Array] = None,
-                     return_ledger: bool = False) -> jax.Array:
+                     return_ledger: bool = False,
+                     return_telemetry: bool = False) -> jax.Array:
     """Chunked-pipeline prefill of ``tokens`` [B, S]; returns next-token
     logits [B, Vpad] (prefill-only: ONE output token, KV is discarded).
 
@@ -73,10 +75,19 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     ``return_ledger``: also return the CollectiveLedger — per-category wire
     bytes summed over chips (``core.transport``; validated against the §3.4
     analytic model in tests) as a dict of fp32 scalars.
+
+    ``return_telemetry``: also return the StageTelemetry profile
+    (``repro.obs.telemetry``) — per-(stage, tick) ``[N, T]`` fp32 arrays of
+    pool occupancy, resident KV bytes, spill/fetch/qship events, attention
+    work and backend launches. When False (the default) no telemetry math
+    is traced at all: the carry threads ``None`` and every charge
+    short-circuits, so the compiled program is identical. Return order is
+    ``logits[, ledger][, telemetry]``.
     """
     if plan.mode == "gpipe":
         assert not return_ledger, "gpipe has no MBKR transport ledger"
-        return gpipe_prefill(cfg, staged, tokens, plan, topo)
+        return gpipe_prefill(cfg, staged, tokens, plan, topo,
+                             return_telemetry=return_telemetry)
     n, m, c = plan.num_stages, plan.num_chunks, plan.chunk_len
     lps = plan.layers_per_stage
     st_ax = topo.stage_axis
@@ -159,8 +170,14 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         x_spec = P(None, topo.tp_axis, None) if seq_sharded \
             else P(None, None, None)
 
+        # one chunk's STORED pool bytes (local shard geometry under manual
+        # TP — the telemetry collect psum restores logical stage bytes)
+        chunk_bytes = 0.0 if is_ssm else obs_t.chunk_stored_bytes(
+            plan, lps, b, c, kvh, hd)
+        rep = mtp.tp if mtp is not None else 1
+
         def tick(carry, t):
-            x_prev, pool, state, x_last, led = carry
+            x_prev, pool, state, x_last, led, tel = carry
             phase = t - stage
             ctx = StageCtx(cfg=cfg, plan=plan, topo=topo, stage=stage,
                            phase=phase, first_half=stage < n // 2,
@@ -187,14 +204,19 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
                 x = jax.lax.with_sharding_constraint(x, x_spec)
             # ---- stage compute
             if is_ssm:
-                x_out, state, led = ssm_stage_step(ctx, stage_layers, x,
-                                                   state, led)
+                x_out, state, led, tel = ssm_stage_step(ctx, stage_layers, x,
+                                                        state, led, tel)
             elif is_hybrid:
-                x_out, state, pool, led = hybrid_stage_step(
-                    ctx, stage_layers, extra["shared"], x, state, pool, led)
+                x_out, state, pool, led, tel = hybrid_stage_step(
+                    ctx, stage_layers, extra["shared"], x, state, pool, led,
+                    tel)
             else:
-                x_out, pool, led = tfm_stage_step(
-                    ctx, stage_layers, x, pool, led, cross=cross)
+                x_out, pool, led, tel = tfm_stage_step(
+                    ctx, stage_layers, x, pool, led, tel, cross=cross)
+            # ---- telemetry: this tick's pool-residency deltas + snapshot
+            if not is_ssm:
+                tel = obs_t.charge_tick_residency(tel, ctx, chunk_bytes, rep)
+            tel_ys = None if tel is None else dict(tel)
             # ---- capture the last token's hidden state at the last stage
             take = (stage == n - 1) & (phase == m - 1)
             x_last = jnp.where(take, x_out[:, -1].astype(jnp.float32), x_last)
@@ -203,15 +225,21 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             ring_active = (phase >= 0) & (phase < m) & (stage < n - 1)
             x_next, led = transport.ring_shift(x_out, st_ax, ring_perm, led,
                                                active=ring_active)
-            return (x_next, pool, state, x_last, led), None
+            return (x_next, pool, state, x_last, led, tel), tel_ys
 
-        carry0 = (x0, pool, state0, x_last0, tx.ledger_init())
-        (xf, _, _, x_last, led), _ = jax.lax.scan(
+        tel0 = obs_t.telemetry_init() if return_telemetry else None
+        carry0 = (x0, pool, state0, x_last0, tx.ledger_init(), tel0)
+        (xf, _, _, x_last, led, _), tel_ys = jax.lax.scan(
             tick, carry0, jnp.arange(plan.num_ticks))
         # replicate the final hidden state across stages
         x_last, led = transport.stage_psum(x_last, st_ax, led)
         led = tx.ledger_collect(led, led_axes)
-        return x_last, led
+        if not return_telemetry:
+            return x_last, led
+        tel_ys = obs_t.telemetry_collect(
+            tel_ys, mtp.axes if mtp is not None else None)
+        tel_out = {k: v[None, :] for k, v in tel_ys.items()}  # [1, T] local
+        return x_last, led, tel_out
 
     extra: Params = {}
     if is_hybrid:
@@ -233,15 +261,22 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     tok_spec = P(pod_axes if pod_axes else None, None)
     out_spec = P(pod_axes if pod_axes else None, None)
     led_specs = {k: P() for k in tx.LEDGER_KEYS}
+    tel_specs = {k: P(st_ax, None) for k in obs_t.TELEM_KEYS}
+    out_specs = (out_spec, led_specs, tel_specs) if return_telemetry \
+        else (out_spec, led_specs)
 
-    x_last, ledger = compat.shard_map(
+    outs = compat.shard_map(
         body, mesh=topo.mesh,
         in_specs=(sl_specs, manual_only(specs["embed"], manual),
                   manual_only(specs["final_norm"], manual),
                   extra_specs, tok_spec),
-        out_specs=(out_spec, led_specs), axis_names=manual, check_vma=False,
+        out_specs=out_specs, axis_names=manual, check_vma=False,
     )(staged["stage_layers"], staged["embed"], staged["final_norm"],
       extra, tokens)
+    if return_telemetry:
+        x_last, ledger, telem = outs
+    else:
+        (x_last, ledger), telem = outs, None
 
     # final norm + unembed of the single output token (prefill-only)
     from jax.sharding import NamedSharding
@@ -253,6 +288,10 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         logits, NamedSharding(topo.mesh, P(
             tuple(a for a in topo.batch_axes if a != topo.stage_axis) or None,
             None, None if mtp is not None else topo.tp_axis)))
+    if return_ledger and return_telemetry:
+        return logits[:, 0], ledger, telem
     if return_ledger:
         return logits[:, 0], ledger
+    if return_telemetry:
+        return logits[:, 0], telem
     return logits[:, 0]

@@ -54,6 +54,13 @@ from repro.core.attention import (AttentionBackend, State, attn_combine,
 from repro.core.transport import Ledger
 from repro.kvstore import pages as kvpages
 from repro.kvstore import quant as kvquant
+from repro.obs import telemetry as obs_t
+from repro.obs.telemetry import StageTelemetry
+
+
+def _rep(ctx) -> int:
+    """Telemetry count replication under the manual TP lowering."""
+    return ctx.mtp.tp if ctx.mtp is not None else 1
 
 
 def pair_phase(ctx) -> jax.Array:
@@ -109,7 +116,7 @@ def fetch_batched(ctx, backend: AttentionBackend) -> bool:
 
 
 def fetch_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State,
-                 led: Ledger = None):
+                 led: Ledger = None, tel: StageTelemetry = None):
     """Paper-faithful fetch wire: stream one chunk-layer per pairing permute.
     The slot *I* host for my pair at index j holds — after the symmetric
     cross-half exchange — my own chunk j. The wire carries the ENCODED pages
@@ -129,7 +136,7 @@ def fetch_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State,
     quantized = plan.codec.quantized
     js = jnp.arange(plan.p2, plan.num_chunks)
 
-    def wire_one(led, j):
+    def wire_one(led, tel, j):
         """Permute chunk j's encoded pages from the pair (ledger-charged
         iff the chunk is actually consumed this tick)."""
         pages = slot_pages[host_tbl[j]]
@@ -143,36 +150,42 @@ def fetch_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State,
                 jnp.stack([ks, vs]), ctx.topo.stage_axis, ctx.pair_perm, led,
                 tag="fetch", active=active)
             ks, vs = ps[0], ps[1]
-        return (pk[0], pk[1], ks, vs), led
+        # one telemetry event per CONSUMED chunk-layer (same gate as the
+        # ledger — wire bytes = events x per_event_wire_bytes["fetch"])
+        tel = obs_t.charge(tel, "fetch_events", 1.0, active, _rep(ctx))
+        return (pk[0], pk[1], ks, vs), led, tel
 
     if fetch_batched(ctx, backend):
-        def land(led, j):
-            (kq, vq, ks, vs), led = wire_one(led, j)
+        def land(carry, j):
+            led, tel = carry
+            (kq, vq, ks, vs), led, tel = wire_one(led, tel, j)
             ys = (kq, vq, ks, vs) if quantized else (kq, vq)
-            return led, ys
+            return (led, tel), ys
 
-        led, landed = jax.lax.scan(land, led, js)
+        (led, tel), landed = jax.lax.scan(land, (led, tel), js)
         if quantized:
             kqs, vqs, kss, vss = landed
         else:
             (kqs, vqs), kss, vss = landed, None, None
         valid = js < ctx.phase
         st = backend.pool_block(qg, kqs, vqs, kss, vss, valid, ctx.scale, st)
-        return st, led
+        tel = obs_t.charge(tel, "launches", 1.0, None, _rep(ctx))
+        return st, led, tel
 
     def fetch_body(carry, j):
-        stc, led = carry
-        (kq, vq, ks, vs), led = wire_one(led, j)
+        stc, led, tel = carry
+        (kq, vq, ks, vs), led, tel = wire_one(led, tel, j)
         stc = backend.chunk_block_q(qg, kq, vq, ks, vs, j < ctx.phase,
                                     ctx.scale, stc)
-        return (stc, led), None
+        tel = obs_t.charge(tel, "launches", 1.0, None, _rep(ctx))
+        return (stc, led, tel), None
 
-    (st, led), _ = jax.lax.scan(fetch_body, (st, led), js)
-    return st, led
+    (st, led, tel), _ = jax.lax.scan(fetch_body, (st, led, tel), js)
+    return st, led, tel
 
 
 def qship_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State,
-                 led: Ledger = None):
+                 led: Ledger = None, tel: StageTelemetry = None):
     """Beyond-paper qship: ship my Q to the creditor, which runs the backend
     over ONLY the host slots it holds for me, then ships back (m, l, acc).
     With a ``batched_pool`` backend the creditor-side scan is ONE slot-grid
@@ -202,11 +215,17 @@ def qship_remote(ctx, backend: AttentionBackend, qg, pool_l, st: State,
     a_r, led = tr.pair_shift(st_r[2].astype(sd), ctx.topo.stage_axis,
                              ctx.pair_perm, led, tag="qship_state",
                              active=active)
-    return attn_combine(st, (ml[0], ml[1], a_r.astype(jnp.float32))), led
+    # one event per useful round-trip; launches = the creditor-side scan
+    tel = obs_t.charge(tel, "qship_events", 1.0, active, _rep(ctx))
+    tel = obs_t.charge(tel, "launches",
+                       1.0 if backend.batched_pool
+                       else float(len(plan.host_slots_used)),
+                       None, _rep(ctx))
+    return attn_combine(st, (ml[0], ml[1], a_r.astype(jnp.float32))), led, tel
 
 
 def write_pools(ctx, pool: kvpages.PagedPool, stage_k, stage_v,
-                led: Ledger = None):
+                led: Ledger = None, tel: StageTelemetry = None):
     """End-of-tick page writes: encode the fresh chunk once, scatter its
     pages to the own slot (phase < p2) or ship the payload cross-half and
     scatter under the creditor's page table. Inactive phases write to the
@@ -232,6 +251,7 @@ def write_pools(ctx, pool: kvpages.PagedPool, stage_k, stage_v,
                           host_tbl[ppc], plan.scratch)
         # I ship MY chunk; it is useful iff MY phase needs hosting
         ship_active = (phase >= plan.p2) & (phase < plan.num_chunks)
+        tel = obs_t.charge(tel, "spill_events", 1.0, ship_active, _rep(ctx))
         if codec.quantized:
             # the wire carries the already-encoded pages + scales
             sq, led = ctx.transport.pair_shift(
@@ -249,4 +269,4 @@ def write_pools(ctx, pool: kvpages.PagedPool, stage_k, stage_v,
                                              spill[0].astype(pool.k.dtype),
                                              spill[1].astype(pool.v.dtype),
                                              None, None)
-    return pool, led
+    return pool, led, tel

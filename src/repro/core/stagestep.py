@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import costmodel as cm
 from repro.core import remote
 from repro.core.attention import (attn_finish, attn_init, get_backend,
                                   group_queries, pool_scan)
@@ -37,6 +38,8 @@ from repro.core.plan import PipelinePlan
 from repro.core.staging import ManualTP, _hyb_scfg
 from repro.core import transport as tx
 from repro.core.transport import Ledger, Transport
+from repro.obs import telemetry as obs_t
+from repro.obs.telemetry import StageTelemetry
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models import transformer as T
@@ -83,12 +86,18 @@ def _psum_bytes(ctx: StageCtx, x: jax.Array) -> float:
     return 2.0 * (k - 1) / k * tx.nbytes(x)
 
 
+def _rep(ctx: StageCtx) -> int:
+    """Telemetry count replication: manual TP chips charge 1/tp each so the
+    collect psum restores logical per-stage counts."""
+    return ctx.mtp.tp if ctx.mtp is not None else 1
+
+
 def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
                  k_new: jax.Array, v_new: jax.Array,
-                 pool, led: Ledger = None):
+                 pool, led: Ledger = None, tel: StageTelemetry = None):
     """Full MOCAP attention for one layer of the current chunk:
     own-pool prefix + (MBKR) remote prefix + causal self block. Returns
-    ``(att, ledger)``.
+    ``(att, ledger, telemetry)``.
 
     q [B,C,H,D]; k_new/v_new [B,C,K,D]; ``pool`` is the stage's paged KV
     store (``kvstore.pages.PagedPool``: payloads [P, lps, B, pt, K, D] +
@@ -112,31 +121,47 @@ def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
 
     pool_l = remote._pool_layer(pool, l_idx)
 
+    # telemetry: actual attention work this (layer, tick) — the LBCP cost
+    # term with the TRACED prefix (phase * c tokens behind this chunk)
+    if tel is not None:
+        prefix = jnp.clip(ctx.phase, 0, plan.num_chunks - 1) * c
+        tel = obs_t.charge(tel, "attn_work",
+                           cm.attn_flops(ctx.cfg, c, prefix),
+                           ctx.active, _rep(ctx))
+
     # 1. own local prefix: chunks j < min(phase, p2)
     limit = jnp.minimum(ctx.phase, plan.p2)
     st = pool_scan(pool_be, qg, pool_l, plan.slot_pages, plan.slot_own_chunk,
                    limit, ctx.scale, st)
+    # lockstep: the pool scan launches every tick (batched = one slot-grid
+    # block; streamed = one block per slot)
+    tel = obs_t.charge(tel, "launches",
+                       1.0 if pool_be.batched_pool else float(plan.num_slots),
+                       None, _rep(ctx))
 
     # 2. remote prefix: chunks p2 <= j < phase live at my pair
     if plan.p2 < plan.num_chunks and plan.mode == "mocap":
         if plan.remote_attn == "fetch":
-            st, led = remote.fetch_remote(ctx, pool_be, qg, pool_l, st, led)
+            st, led, tel = remote.fetch_remote(ctx, pool_be, qg, pool_l, st,
+                                               led, tel)
         else:
-            st, led = remote.qship_remote(ctx, pool_be, qg, pool_l, st, led)
+            st, led, tel = remote.qship_remote(ctx, pool_be, qg, pool_l, st,
+                                               led, tel)
 
     # 3. self block (causal)
     st = backend.self_block(qg, k_new, v_new, ctx.scale, st)
-    return attn_finish(st, q.dtype), led
+    tel = obs_t.charge(tel, "launches", 1.0, None, _rep(ctx))
+    return attn_finish(st, q.dtype), led, tel
 
 
 # --------------------------------------------------------- transformer step
 
 def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
-                   pool, led: Ledger = None, *,
+                   pool, led: Ledger = None, tel: StageTelemetry = None, *,
                    cross: Optional[Tuple] = None):
     """Apply this stage's layers to chunk ``ctx.phase``. Returns
-    (x_out, pool, ledger). ``cross`` = (enc_xk, enc_xv) [lps,B,F,K,D] for
-    whisper decoder stages."""
+    (x_out, pool, ledger, telemetry). ``cross`` = (enc_xk, enc_xv)
+    [lps,B,F,K,D] for whisper decoder stages."""
     cfg, plan, mtp = ctx.cfg, ctx.plan, ctx.mtp
     tr = ctx.transport
     b, c, dm = x.shape
@@ -154,7 +179,7 @@ def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
                           and tp_apply.shared)))
 
     def layer_body(carry, xs):
-        xc, li, led = carry
+        xc, li, led, tel = carry
         lp = xs if cross is None else xs[0]
         hn = L.rms_norm(xc, lp["ln1"], cfg.norm_eps)
         # LOCAL head counts come from the (possibly TP-sharded) params
@@ -176,7 +201,7 @@ def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
                 kv_ax = ctx.topo.tp_axis[0]
                 k = jax.lax.with_sharding_constraint(k, P(None, None, kv_ax, None))
                 v = jax.lax.with_sharding_constraint(v, P(None, None, kv_ax, None))
-        att, led = attend_chunk(ctx, li, q, k, v, pool, led)
+        att, led, tel = attend_chunk(ctx, li, q, k, v, pool, led, tel)
         h_loc = att.shape[2]
         upd = jnp.einsum("bcq,qd->bcd", att.reshape(b, c, h_loc * hd),
                          lp["wo"])
@@ -202,6 +227,7 @@ def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
             if mtp is not None and mtp.attn:
                 updx, led = tr.tp_psum(updx, mtp.axes, led, active=ctx.active)
             xc = xc + updx
+            tel = obs_t.charge(tel, "launches", 1.0, None, _rep(ctx))
         ep_axis = ctx.topo.tp_axis if (cfg.moe is not None and isinstance(
             ctx.topo.tp_axis, tuple) and mtp is None) else None
         if ep_axis is not None:
@@ -216,18 +242,19 @@ def tfm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array,
         # ring permute moves C/tp tokens per chip instead of C
         if mtp is None:
             xc = jax.lax.with_sharding_constraint(xc, ctx.x_spec)
-        return (xc, li + 1, led), (k, v)
+        return (xc, li + 1, led, tel), (k, v)
 
     xs = layers if cross is None else (layers,)
-    (x, _, led), (ks, vs) = jax.lax.scan(layer_body, (x, jnp.int32(0), led), xs)
-    pool, led = remote.write_pools(ctx, pool, ks, vs, led)
-    return x, pool, led
+    (x, _, led, tel), (ks, vs) = jax.lax.scan(
+        layer_body, (x, jnp.int32(0), led, tel), xs)
+    pool, led, tel = remote.write_pools(ctx, pool, ks, vs, led, tel)
+    return x, pool, led, tel
 
 
 # --------------------------------------------------------------- SSM step
 
 def ssm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array, state,
-                   led: Ledger = None):
+                   led: Ledger = None, tel: StageTelemetry = None):
     """Mamba2 stage: lps blocks; SSM/conv state carried tick-to-tick and
     zeroed at phase 0 (start of the request). The SSD inner loop routes
     through ``plan.ssm_backend`` (jnp reference | kernels.ops.ssd), the same
@@ -235,6 +262,13 @@ def ssm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array, state,
     collectives — see staging.ManualTP), so the ledger passes through."""
     cfg, impl = ctx.cfg, ctx.plan.ssm_backend
     fresh = ctx.phase <= 0
+    if tel is not None:
+        lps = ctx.plan.layers_per_stage
+        tel = obs_t.charge(tel, "attn_work",
+                           lps * cm.attn_flops(cfg, x.shape[1], 0),
+                           ctx.active, _rep(ctx))
+        if impl == "pallas":
+            tel = obs_t.charge(tel, "launches", float(lps), None, _rep(ctx))
 
     def layer_body(xc, xs):
         lp, conv_st, ssd_st = xs
@@ -246,13 +280,14 @@ def ssm_stage_step(ctx: StageCtx, layers: Params, x: jax.Array, state,
         return xo, (st2["conv"], st2["ssd"])
 
     x, (conv2, ssd2) = jax.lax.scan(layer_body, x, (layers, state[0], state[1]))
-    return x, (conv2, ssd2), led
+    return x, (conv2, ssd2), led, tel
 
 
 # ------------------------------------------------------------- hybrid step
 
 def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
-                      x: jax.Array, state, pool, led: Ledger = None):
+                      x: jax.Array, state, pool, led: Ledger = None,
+                      tel: StageTelemetry = None):
     """Zamba2 stage = up to lps groups of (pg Mamba2 + shared attn block).
     The shared block's KV participates in MBKR (1 'layer' per group)."""
     cfg, plan, mtp = ctx.cfg, ctx.plan, ctx.mtp
@@ -269,7 +304,7 @@ def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
     tp_apply = _tp_apply(ctx)
 
     def group_body(carry, xs):
-        xc, gi, led = carry
+        xc, gi, led, tel = carry
         g_lp, conv_st, ssd_st = xs
 
         def mamba_body(xm, ms):
@@ -294,7 +329,7 @@ def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
         v = v.reshape(b, c, v.shape[-1] // hd, hd)
         q = L.apply_rope(q, cos, sin)
         k = L.apply_rope(k, cos, sin)
-        att, led = attend_chunk(ctx, gi, q, k, v, pool, led)
+        att, led, tel = attend_chunk(ctx, gi, q, k, v, pool, led, tel)
         h_loc = att.shape[2]
         upd = jnp.einsum("bcq,qd->bcd", att.reshape(b, c, h_loc * hd),
                          shared["wo"])
@@ -306,9 +341,9 @@ def hybrid_stage_step(ctx: StageCtx, groups: Params, shared: Params,
         if tp_apply is not None and tp_apply.dense:
             led = tx.charge(led, "tp", _psum_bytes(ctx, xc3), ctx.active)
         xc3 = xc3 + jnp.where(has_attn, ffn, 0.0)
-        return (xc3, gi + 1, led), (conv2, ssd2, k, v)
+        return (xc3, gi + 1, led, tel), (conv2, ssd2, k, v)
 
-    (x, _, led), (conv2, ssd2, ks, vs) = jax.lax.scan(
-        group_body, (x, jnp.int32(0), led), (groups, state[0], state[1]))
-    pool, led = remote.write_pools(ctx, pool, ks, vs, led)
-    return x, (conv2, ssd2), pool, led
+    (x, _, led, tel), (conv2, ssd2, ks, vs) = jax.lax.scan(
+        group_body, (x, jnp.int32(0), led, tel), (groups, state[0], state[1]))
+    pool, led, tel = remote.write_pools(ctx, pool, ks, vs, led, tel)
+    return x, (conv2, ssd2), pool, led, tel

@@ -29,16 +29,23 @@ def _on_tpu() -> bool:
 # Counts RUNTIME kernel invocations (a kernel traced once inside a lax.scan
 # body still launches once per iteration — the thing the batched pool kernel
 # amortizes), via a debug callback staged next to each pallas_call.
+#
+# A STACK of counter frames makes the hook nesting-safe (an outer harness
+# and an inner assertion both observe their own window) and each frame keys
+# launches by kernel tag next to the all-kernel "count", so obs can
+# attribute launches to the self-block vs pool vs fetch paths.
 
-_LAUNCHES = {"enabled": False, "count": 0}
+_LAUNCH_FRAMES: list = []
 
 
-def _note_launch() -> None:
-    if not _LAUNCHES["enabled"]:
+def _note_launch(tag: str) -> None:
+    if not _LAUNCH_FRAMES:  # read at TRACE time: zero cost when unused
         return
 
     def _bump():
-        _LAUNCHES["count"] += 1
+        for frame in _LAUNCH_FRAMES:
+            frame["count"] += 1
+            frame[tag] = frame.get(tag, 0) + 1
 
     jax.debug.callback(_bump)
 
@@ -50,22 +57,28 @@ def count_launches():
         with ops.count_launches() as launches:
             fn(*args)  # must TRACE inside the context (caches are cleared)
         assert launches["count"] == ...
+        assert launches["pool_attention"] == ...   # per-kernel attribution
 
-    The enable flag is read at trace time, so the wrappers' jit caches are
+    The yielded dict holds the all-kernel ``"count"`` plus one key per
+    kernel tag (``chunk_attention`` / ``pool_attention`` / ``ssd`` /
+    ``decode_attention``) that launched at least once. Contexts nest: every
+    active frame counts every launch in its window.
+
+    The stack is read at trace time, so the wrappers' jit caches are
     cleared on entry/exit — callers pay a retrace, tests only."""
     jitted = (chunk_attention, pool_attention, ssd, decode_attention)
-    _LAUNCHES["enabled"] = True
-    _LAUNCHES["count"] = 0
+    frame = {"count": 0}
     for f in jitted:
         f.clear_cache()
+    _LAUNCH_FRAMES.append(frame)
     try:
-        yield _LAUNCHES
+        yield frame
     finally:
         # debug callbacks flush asynchronously under real (TPU) dispatch —
         # block_until_ready() alone does not order them before the caller's
         # read of launches["count"]
         jax.effects_barrier()
-        _LAUNCHES["enabled"] = False
+        _LAUNCH_FRAMES.remove(frame)
         for f in jitted:
             f.clear_cache()
 
@@ -113,7 +126,7 @@ def chunk_attention(q, k, v, *, causal_offset: int = 0,
     if k_scale is not None:
         k_scale = _pad_to(k_scale, 1, bk)  # pad rows are masked via kv_len
         v_scale = _pad_to(v_scale, 1, bk)
-    _note_launch()
+    _note_launch("chunk_attention")
     res = _ca.chunk_attention_pallas(
         qp, kp, vp, causal_offset=causal_offset, scale=scale, kv_len=t,
         block_q=bq, block_k=bk, interpret=not _on_tpu(),
@@ -152,7 +165,7 @@ def pool_attention(q, k, v, valid, *, scale: Optional[float] = None,
     if k_scale is not None:
         k_scale = _pad_to(k_scale, 2, bk)  # pad rows are masked via kv_len
         v_scale = _pad_to(v_scale, 2, bk)
-    _note_launch()
+    _note_launch("pool_attention")
     m, l, acc = _ca.pool_attention_pallas(
         qp, kp, vp, valid.astype(jnp.int32).reshape(-1, 1),
         scale=scale, kv_len=t, block_q=bq, block_k=bk,
@@ -181,7 +194,7 @@ def ssd(x, dt, a_log, b, c, d_skip, *, chunk: int = 128, init_state=None,
     while t % ck:
         ck //= 2
     interpret = (not _on_tpu()) if interpret is None else interpret
-    _note_launch()
+    _note_launch("ssd")
     return _ssd.ssd_pallas(x, dt, a_log, b, c, d_skip, chunk=ck,
                            init_state=init_state, interpret=interpret)
 
@@ -199,7 +212,7 @@ def decode_attention(q, k, v, kv_len, *, scale: Optional[float] = None,
     bs = min(block_s, s_len)
     while s_len % bs:
         bs //= 2
-    _note_launch()
+    _note_launch("decode_attention")
     out = _da.decode_attention_pallas(qp, kp, vp, kv_len, scale=scale,
                                       block_s=bs, interpret=not _on_tpu())
     return out[..., :d]

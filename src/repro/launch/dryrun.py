@@ -75,6 +75,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
         # within 1% by tests/test_transport.py
         rec["wire_model"] = cell.meta["wire_model"]
         rec["tp_lowering"] = cell.meta["plan"].tp_lowering
+        # tick x stage slot-occupancy profile off the same plan — the
+        # device StageTelemetry counters are pinned to this analytic twin
+        # by tests/test_obs.py
+        from repro.obs.telemetry import occupancy_model
+        rec["occupancy_model"] = occupancy_model(cell.meta["plan"])
     try:
         with compat.set_mesh(cell.meta.get("mesh", topo.mesh)):
             lowered = cell.lower()

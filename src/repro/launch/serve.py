@@ -146,7 +146,19 @@ def main(argv=None) -> int:
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="per-request SLO (deadline = arrival + slo)")
     ap.add_argument("--trace-out", default=None,
-                    help="write a Chrome-format JSON scheduler trace here")
+                    help="write ONE merged Chrome/Perfetto trace here "
+                         "(scheduler task spans + engine wave/tick spans + "
+                         "KV/wire counter tracks; repro.obs). With the jax "
+                         "executor this also turns on per-(stage, tick) "
+                         "device telemetry")
+    ap.add_argument("--metrics-out", default=None,
+                    help="export serving metrics here (repro.obs.metrics): "
+                         ".prom extension = Prometheus textfile, anything "
+                         "else = JSON lines")
+    ap.add_argument("--profile-dir", default=None,
+                    help="wrap the run in jax.profiler.trace(dir) — a real "
+                         "XLA profile next to the repro.obs timeline "
+                         "(jax executor only)")
     args = ap.parse_args(argv)
 
     if args.executor == "sim":
@@ -205,6 +217,10 @@ def main(argv=None) -> int:
                                trace=args.trace_out is not None)
     else:
         eng = PrefillEngine(ec, executor)
+    if args.trace_out and isinstance(executor, JaxExecutor):
+        # the merged timeline wants the device-side (stage, tick) profile:
+        # switch the jit cache to the return_telemetry=True pipeline
+        executor.collect_telemetry = True
 
     from repro.sched import poisson_arrivals
     if args.scheduler == "batch" and args.arrival_rate > 0:
@@ -222,7 +238,15 @@ def main(argv=None) -> int:
         eng.submit(Request(rid=i, arrival=float(arrivals[i]), seq_len=args.seq,
                            tokens=toks if args.executor == "jax" else None))
     t0 = time.time()
-    eng.run_until_drained()
+    if args.profile_dir and args.executor == "jax":
+        import jax
+        with jax.profiler.trace(args.profile_dir):
+            eng.run_until_drained()
+        print(f"xla profile -> {args.profile_dir}")
+    else:
+        if args.profile_dir:
+            print("note: --profile-dir needs --executor jax; skipping")
+        eng.run_until_drained()
     wall = time.time() - t0
     m = eng.metrics()
     if args.scheduler == "continuous":
@@ -235,14 +259,24 @@ def main(argv=None) -> int:
               f"avg queue {m['avg_queue_wait']:.3f}s | "
               f"{m['throughput']:.3f} req/s | "
               f"bubble {m['bubble_frac']*100:.1f}%{slo_txt}")
-        if args.trace_out:
-            path = eng.trace.export(args.trace_out)
-            print(f"trace -> {path}")
+        if args.trace_out or args.metrics_out:
+            paths = eng.export_obs(trace_out=args.trace_out,
+                                   metrics_out=args.metrics_out,
+                                   extra={"wall_seconds": wall})
+            for kind, path in paths.items():
+                print(f"{kind} -> {path}")
     else:
         print(f"completed {m['completed']} requests in {wall:.2f}s wall | "
               f"engine clock {eng.clock:.3f}s | avg E2E {m['avg_e2e']:.3f}s | "
               f"p99 {m['p99_e2e']:.3f}s | {m['throughput']:.3f} req/s | "
               f"stages {m['num_stages']}")
+        if args.trace_out:
+            print("note: --trace-out needs --scheduler continuous; skipping")
+        if args.metrics_out:
+            from repro.obs.metrics import export_engine_metrics
+            path = export_engine_metrics(args.metrics_out, m,
+                                         extra={"wall_seconds": wall})
+            print(f"metrics -> {path}")
     if args.executor == "jax":
         done = sorted(eng.done, key=lambda r: r.rid)[:3]
         for r in done:

@@ -1,0 +1,24 @@
+"""Unified observability: device telemetry, merged traces, metrics export.
+
+Three coordinated surfaces (DESIGN.md §Observability):
+
+- ``obs.telemetry``   the carry-threaded ``StageTelemetry`` pytree charged
+                      per (stage, tick) inside the jitted pipeline scan —
+                      pool occupancy, resident KV bytes, spill/fetch/qship
+                      event counts, attention work units, launch counts.
+                      Returned by ``prefill_pipeline(...,
+                      return_telemetry=True)`` as ``[N, T]`` profiles.
+- ``obs.trace``       the Chrome/Perfetto trace recorder: scheduler task
+                      spans + engine wave/tick spans + per-stage counter
+                      tracks, one merged file (atomic export).
+- ``obs.metrics``     counters/gauges/histograms with JSON-lines and
+                      Prometheus-textfile export for serving runs.
+
+``obs.trace`` / ``obs.metrics`` are import-light (stdlib only) so the
+scheduler package can depend on them; ``obs.telemetry`` pulls in jax and is
+imported only by ``repro.core`` and engine code.
+"""
+from repro.obs.metrics import MetricsRegistry, export_engine_metrics
+from repro.obs.trace import TraceRecorder
+
+__all__ = ["MetricsRegistry", "TraceRecorder", "export_engine_metrics"]

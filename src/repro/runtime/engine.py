@@ -146,36 +146,67 @@ class SimExecutor:
 
 
 class JaxExecutor:
-    """Real executor: jit'd chunked-pipeline prefill on the current mesh."""
+    """Real executor: jit'd chunked-pipeline prefill on the current mesh.
+
+    ``collect_telemetry`` (settable any time; keyed into the jit cache)
+    switches the pipeline to ``return_telemetry=True`` and records one
+    entry per wave in ``self.waves``: wall-clock (start, dur) relative to
+    executor construction, the [N, T] StageTelemetry profile, and the
+    per-event wire prices — ``ContinuousEngine.merged_trace`` turns these
+    into engine wave spans, per-stage tick spans and KV/wire counter
+    tracks. Off by default: the compiled program is the plain pipeline."""
 
     def __init__(self, cfg: ModelConfig, staged_params, topo, run: RunConfig):
+        import time
         from repro.core import pipeline as pp
         self.cfg, self.topo, self.run_cfg = cfg, topo, run
         self.staged = staged_params
-        self._fns: Dict[Tuple[int, int], Callable] = {}
+        self._fns: Dict[Tuple[int, int, bool], Tuple[Callable, Any]] = {}
         self._pp = pp
+        self.collect_telemetry = False
+        self.waves: List[Dict[str, Any]] = []
+        self._epoch = time.perf_counter()
 
     def run(self, requests: Sequence[Request], chunks: Sequence[int],
             num_stages: int, tp: int) -> Tuple[float, np.ndarray]:
         import time
         import jax
         seq = int(sum(chunks))
-        key = (seq, len(chunks))
+        collect = bool(self.collect_telemetry)
+        key = (seq, len(chunks), collect)
         if key not in self._fns:
             plan = self._pp.build_plan(
                 self.cfg, num_stages, seq,
                 dc_replace(self.run_cfg, num_chunks=len(chunks)))
-            cfg, topo, staged = self.cfg, self.topo, self.staged
-            self._fns[key] = jax.jit(
-                lambda st, tk: self._pp.prefill_pipeline(cfg, st, tk, plan, topo))
+            cfg, topo = self.cfg, self.topo
+            fn = jax.jit(lambda st, tk: self._pp.prefill_pipeline(
+                cfg, st, tk, plan, topo, return_telemetry=collect))
+            self._fns[key] = (fn, plan)
+        fn, plan = self._fns[key]
         toks = np.stack([np.pad(r.tokens, (0, seq - len(r.tokens)))
                          for r in requests]).astype(np.int32)
         t0 = time.perf_counter()
-        out = self._fns[key](self.staged, toks)
-        out.block_until_ready()
+        with jax.profiler.TraceAnnotation(
+                f"prefill_wave seq{seq} b{len(requests)}"):
+            if collect:
+                out, tel = fn(self.staged, toks)
+            else:
+                out, tel = fn(self.staged, toks), None
+            out.block_until_ready()
         dt = time.perf_counter() - t0
         for r, row in zip(requests, np.asarray(out)):
             r.result = row
+        wave: Dict[str, Any] = {
+            "start": t0 - self._epoch, "dur": dt, "seq": seq,
+            "num_ticks": int(plan.num_ticks), "num_stages": num_stages,
+            "chunks": list(chunks), "rids": [r.rid for r in requests],
+        }
+        if tel is not None:
+            from repro.obs import telemetry as obs_t
+            wave["telemetry"] = {k: np.asarray(v) for k, v in tel.items()}
+            wave["per_event_wire"] = obs_t.per_event_wire_bytes(
+                plan, self.cfg, len(requests))
+        self.waves.append(wave)
         return dt, np.full(num_stages, dt / max(len(chunks), 1))
 
 
@@ -488,3 +519,93 @@ class ContinuousEngine:
 
     def metrics(self) -> Dict[str, float]:
         return self.scheduler.summary()
+
+    # ------------------------------------------------------ observability
+    def merged_trace(self):
+        """ONE Perfetto trace merging every surface of this run:
+
+        - scheduler task intervals + request lifecycle marks (pid = stage,
+          tid = request; the scheduler's virtual clock),
+        - per-stage ``kv_lease_bytes`` counter tracks replayed from the
+          lease manager's admission timeline (virtual clock),
+        - per-stage ``wire_bytes`` counter tracks: sim runs price each
+          spilled chunk (index >= p2) from the bucket plan's KV bytes;
+          jax runs with ``executor.collect_telemetry`` price the device
+          event counts with the analytic per-event wire bytes,
+        - engine wave spans + per-(stage, tick) device spans and
+          ``kv_resident_bytes`` tracks from JaxExecutor telemetry waves
+          (wall clock since executor construction, pid = "engine").
+
+        Pure: builds a fresh recorder each call; safe to export repeatedly.
+        """
+        from repro.obs.trace import TraceRecorder
+        rec = TraceRecorder(enabled=True)
+        rec.tasks = list(self.trace.tasks)
+        rec.marks = list(self.trace.marks)
+        # lease residency per stage (virtual clock)
+        for s, timeline in enumerate(self.lease._timeline):
+            level = 0.0
+            for t, delta in sorted(timeline):
+                level += delta
+                rec.counter("kv_lease_bytes", pid=s, time=t,
+                            values={"bytes": level})
+        # sim wire model: a chunk with index >= p2 was spilled at creation
+        buckets = {sr.rid: sr.bucket for sr in self.scheduler.requests}
+        wire_acc: Dict[int, float] = {}
+        for ev in sorted(self.trace.tasks, key=lambda e: e.finish):
+            plan = self._chunk_plan(buckets.get(ev.rid, max(self.ec.buckets)))
+            if ev.chunk >= plan.p2:
+                lvl = wire_acc.get(ev.stage, 0.0) + float(plan.kvb[ev.chunk])
+                wire_acc[ev.stage] = lvl
+                rec.counter("wire_bytes", pid=ev.stage, time=ev.finish,
+                            values={"bytes": lvl})
+        # engine waves (wall clock) + device telemetry
+        waves = getattr(self.executor, "waves", None) or []
+        if waves:
+            rec.process_name("engine", "engine (wall clock)")
+        for wi, w in enumerate(waves):
+            rec.span(f"wave{wi} seq{w['seq']} b{len(w['rids'])}",
+                     pid="engine", tid=0, start=w["start"],
+                     finish=w["start"] + w["dur"], cat="wave",
+                     args={"rids": w["rids"], "chunks": w["chunks"]})
+            tel = w.get("telemetry")
+            if tel is None:
+                continue
+            pe = w.get("per_event_wire", {})
+            n_st, ticks = tel["own_chunks"].shape
+            tick_dur = w["dur"] / max(ticks, 1)
+            kv, occ = tel["kv_bytes"], tel["own_chunks"] + tel["hosted_chunks"]
+            wire = (tel["spill_events"] * pe.get("spill", 0.0)
+                    + tel["fetch_events"] * pe.get("fetch", 0.0)
+                    + tel["qship_events"] * pe.get("qship", 0.0))
+            for s in range(n_st):
+                for t in range(ticks):
+                    ts = w["start"] + t * tick_dur
+                    phase = t - s
+                    if 0 <= phase < len(w["chunks"]):
+                        rec.span(f"tick{t} c{phase}", pid="engine",
+                                 tid=s + 1, start=ts, finish=ts + tick_dur,
+                                 cat="tick",
+                                 args={"stage": s, "chunk": phase,
+                                       "occupancy": float(occ[s, t])})
+                    rec.counter("kv_resident_bytes", pid=s, time=ts,
+                                values={f"w{wi}": float(kv[s, t])})
+                    rec.counter("device_wire_bytes", pid=s, time=ts,
+                                values={f"w{wi}": float(wire[s, t])})
+        return rec
+
+    def export_obs(self, trace_out: Optional[str] = None,
+                   metrics_out: Optional[str] = None,
+                   extra: Optional[Dict[str, float]] = None
+                   ) -> Dict[str, str]:
+        """Export the merged trace and/or the metrics summary (both atomic);
+        returns {"trace": path, "metrics": path} for whichever was asked."""
+        paths: Dict[str, str] = {}
+        if trace_out:
+            paths["trace"] = self.merged_trace().export(trace_out)
+        if metrics_out:
+            from repro.obs.metrics import export_engine_metrics
+            paths["metrics"] = export_engine_metrics(
+                metrics_out, self.metrics(),
+                records=self.scheduler.metrics.records, extra=extra)
+        return paths

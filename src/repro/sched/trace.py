@@ -1,92 +1,16 @@
-"""JSON trace exporter for the chunk-level scheduler.
+"""Compatibility shim: the trace recorder moved to ``repro.obs.trace``.
 
-Records per-task (request, chunk, stage) execution intervals plus request
-lifecycle instants (arrival, admission, completion, rejection) and exports
-them in the Chrome trace-event format (``chrome://tracing`` / Perfetto):
-one "process" per pipeline stage, one "thread" per request, so the pipeline
-occupancy and cross-request interleaving are directly visible. Plain
-offline-analysis access is available through ``events()``.
+The scheduler-facing surface (``TaskEvent``/``MarkEvent``/``TraceRecorder``)
+is unchanged; the recorder additionally accepts engine spans and counter
+tracks so one file merges scheduler + engine + device telemetry (ISSUE 6).
 """
-from __future__ import annotations
+from repro.obs.trace import (  # noqa: F401
+    CounterEvent,
+    MarkEvent,
+    SpanEvent,
+    TaskEvent,
+    TraceRecorder,
+)
 
-import json
-import os
-from dataclasses import asdict, dataclass
-from typing import Any, Dict, List
-
-
-@dataclass(frozen=True)
-class TaskEvent:
-    rid: int
-    chunk: int
-    stage: int
-    start: float          # seconds (scheduler clock)
-    finish: float
-
-
-@dataclass(frozen=True)
-class MarkEvent:
-    rid: int
-    kind: str             # arrival | admit | finish | reject
-    time: float
-
-
-class TraceRecorder:
-    """Accumulates scheduler events; cheap no-op when disabled."""
-
-    def __init__(self, enabled: bool = True):
-        self.enabled = enabled
-        self.tasks: List[TaskEvent] = []
-        self.marks: List[MarkEvent] = []
-
-    def task(self, rid: int, chunk: int, stage: int,
-             start: float, finish: float) -> None:
-        if self.enabled:
-            self.tasks.append(TaskEvent(rid, chunk, stage, start, finish))
-
-    def mark(self, rid: int, kind: str, time: float) -> None:
-        if self.enabled:
-            self.marks.append(MarkEvent(rid, kind, time))
-
-    # ------------------------------------------------------------- export
-    def events(self) -> Dict[str, List[Dict[str, Any]]]:
-        """Raw event dicts for offline analysis."""
-        return {"tasks": [asdict(t) for t in self.tasks],
-                "marks": [asdict(m) for m in self.marks]}
-
-    def chrome_trace(self) -> Dict[str, Any]:
-        """Chrome trace-event JSON: pid = stage, tid = request, ts in us."""
-        ev: List[Dict[str, Any]] = []
-        for t in self.tasks:
-            ev.append({
-                "name": f"r{t.rid}/c{t.chunk}",
-                "cat": "chunk",
-                "ph": "X",
-                "ts": t.start * 1e6,
-                "dur": (t.finish - t.start) * 1e6,
-                "pid": t.stage,
-                "tid": t.rid,
-                "args": {"rid": t.rid, "chunk": t.chunk, "stage": t.stage},
-            })
-        for m in self.marks:
-            ev.append({
-                "name": m.kind,
-                "cat": "request",
-                "ph": "i",
-                "s": "g",
-                "ts": m.time * 1e6,
-                "pid": 0,
-                "tid": m.rid,
-            })
-        for t in sorted({t.stage for t in self.tasks}):
-            ev.append({"name": "process_name", "ph": "M", "pid": t,
-                       "args": {"name": f"stage {t}"}})
-        return {"traceEvents": ev, "displayTimeUnit": "ms"}
-
-    def export(self, path: str) -> str:
-        """Write the Chrome trace JSON to ``path`` (dirs created)."""
-        d = os.path.dirname(os.path.abspath(path))
-        os.makedirs(d, exist_ok=True)
-        with open(path, "w") as f:
-            json.dump(self.chrome_trace(), f)
-        return path
+__all__ = ["CounterEvent", "MarkEvent", "SpanEvent", "TaskEvent",
+           "TraceRecorder"]
