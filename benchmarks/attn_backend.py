@@ -9,14 +9,21 @@ self block + finish — with the pool scan in all three traversal orders:
                      traced combine per occupied slot — the pre-batching
                      pallas path),
 - ``pool_batched``   the fused slot-grid kernel (``ops.pool_attention``):
-                     ONE launch per pool scan, O(1) in pool depth.
+                     ONE launch per pool scan, O(1) in pool depth,
+- ``pool_paged``     the ragged paged kernel (``ops.pool_attention_paged``):
+                     ONE launch AND zero gather — pages read in place.
 
-``launches_scan`` / ``launches_batched`` count RUNTIME kernel launches of
-the pool part (``ops.count_launches``): O(slots) -> O(1) is the point; the
-wall-time win from amortized launch overhead needs real TPU (off-TPU the
-pallas numbers are INTERPRET-mode — a correctness harness, expected slower
-than jnp on CPU). Alongside wall time we report the analytic TPU-v5e
-roofline time for the same flops/bytes, which is backend-independent.
+``launches_*`` count RUNTIME kernel launches of the pool part
+(``ops.count_launches``): O(slots) -> O(1) is the point; the wall-time win
+from amortized launch overhead needs real TPU (off-TPU the pallas numbers
+are INTERPRET-mode — a correctness harness, expected slower than jnp on
+CPU). Alongside wall time we report the analytic TPU-v5e roofline time for
+the same flops/bytes, which is backend-independent, and the DETERMINISTIC
+HBM cost of the gather copy the paged kernel deletes:
+``hbm_gather_bytes`` (what the gathered slot-grid path writes+reads per
+pool scan) vs ``hbm_gather_bytes_paged`` (pinned 0), plus the roofline
+speedup ``paged_speedup`` that traffic delta buys — the compare.py gate
+pins all three exactly.
 
 Writes artifacts/bench/attn_backend.json. Usage:
   PYTHONPATH=src python -m benchmarks.attn_backend [--iters 3] [--quick]
@@ -64,11 +71,13 @@ def _wire_bytes(b, c, kvh, g, d, npool):
 
 
 def _pool_fns(kpool, vpool, scale):
-    """The three pool-scan traversal orders under test, as (name, fn) with
-    fn: (qg, state) -> state over the SAME stacked pool KV."""
+    """The four pool-scan traversal orders under test, as (name, fn) with
+    fn: (qg, state) -> state over the SAME stacked pool KV (the paged
+    backend views the stack as identity-handle pages — zero copy)."""
     valid = jnp.ones(kpool.shape[0], bool)
     be_jnp = A.get_backend("jnp")
     be_pal = A.get_backend("pallas")
+    be_paged = A.get_backend("paged")
     per_slot = A.PallasBackend()
     per_slot.batched_pool = False  # pool_block honors the flag
     return [
@@ -77,6 +86,8 @@ def _pool_fns(kpool, vpool, scale):
         ("pallas_scan", lambda q, st: per_slot.pool_block(
             q, kpool, vpool, None, None, valid, scale, st)),
         ("pool_batched", lambda q, st: be_pal.pool_block(
+            q, kpool, vpool, None, None, valid, scale, st)),
+        ("pool_paged", lambda q, st: be_paged.pool_block(
             q, kpool, vpool, None, None, valid, scale, st)),
     ]
 
@@ -130,24 +141,47 @@ def run(iters: int = 3, quick: bool = False) -> dict:
         parity = float(np.max(np.abs(outs["jnp"] - outs["pool_batched"])))
         parity_scan = float(np.max(np.abs(outs["pallas_scan"]
                                           - outs["pool_batched"])))
+        parity_paged = float(np.max(np.abs(outs["pool_paged"]
+                                           - outs["pool_batched"])))
         wire_fetch, wire_qship = _wire_bytes(b, c, kvh, g, d, npool)
+        # HBM cost of the dense-slot-stack gather the paged kernel deletes:
+        # the gathered path WRITES the [S, B, C, KVH, D] k/v stack then the
+        # kernel reads it back; the paged kernel DMAs pages in place. Pool-
+        # scan roofline with vs without that traffic = the deterministic
+        # paged >= batched gate (wall clock off-TPU is interpret noise).
+        gather_bytes = 2.0 * npool * b * c * kvh * d * 4.0  # k + v, fp32
+        pool_flops = 4.0 * b * c * (npool * c) * h * d
+        pool_bytes = (b * c * h * d * 4.0        # q read
+                      + gather_bytes             # page reads (both paths)
+                      + 2 * b * c * h * d * 4.0)  # state out
+        roof = lambda extra: max(pool_flops / HW_V5E["peak_flops"],
+                                 (pool_bytes + extra) / HW_V5E["hbm_bw"])
+        paged_speedup = roof(2.0 * gather_bytes) / roof(0.0)
         rows.append({
             "shape": f"b{b} c{c} kv{kvh} g{g} d{d} pool{npool}",
             "jnp_ms": round(times["jnp"] * 1e3, 2),
             "pallas_scan_ms": round(times["pallas_scan"] * 1e3, 2),
             "pool_batched_ms": round(times["pool_batched"] * 1e3, 2),
+            "pool_paged_ms": round(times["pool_paged"] * 1e3, 2),
             "parity_abs": f"{parity:.1e}",
             "launches_scan": launches["pallas_scan"],
             "launches_batched": launches["pool_batched"],
+            "launches_paged": launches["pool_paged"],
+            "hbm_gather_bytes": int(2 * gather_bytes),
+            "hbm_gather_bytes_paged": 0,
+            "paged_speedup": round(paged_speedup, 4),
             "wire_bytes_fetch": int(wire_fetch),
             "wire_bytes_qship": int(wire_qship),
             "tpu_roofline_us": round(tpu_s * 1e6, 1),
         })
         assert parity < 1e-4, f"backend divergence: {parity}"
         assert parity_scan < 1e-4, f"scan/batched divergence: {parity_scan}"
+        assert parity_paged < 1e-4, f"paged/batched divergence: {parity_paged}"
         assert launches["pallas_scan"] == npool, launches
         assert launches["pool_batched"] == 1, launches  # O(1) in pool depth
+        assert launches["pool_paged"] == 1, launches    # O(1) AND zero gather
         assert launches["jnp"] == 0, launches
+        assert paged_speedup >= 1.0, paged_speedup
 
     result = {
         "device": str(jax.devices()[0].platform),
@@ -165,9 +199,11 @@ def run(iters: int = 3, quick: bool = False) -> dict:
     with open(path, "w") as f:
         json.dump(result, f, indent=1)
     print(table(rows, ["shape", "jnp_ms", "pallas_scan_ms", "pool_batched_ms",
-                       "parity_abs", "launches_scan", "launches_batched",
-                       "wire_bytes_fetch", "wire_bytes_qship",
-                       "tpu_roofline_us"]))
+                       "pool_paged_ms", "parity_abs", "launches_scan",
+                       "launches_batched", "launches_paged",
+                       "hbm_gather_bytes", "hbm_gather_bytes_paged",
+                       "paged_speedup", "wire_bytes_fetch",
+                       "wire_bytes_qship", "tpu_roofline_us"]))
     print(f"-> {path}")
     return result
 

@@ -56,6 +56,14 @@ SPECS: Dict[str, Dict[str, Any]] = {
                 "parity_abs": ("high", 9.0, 1e-5),
                 "launches_scan": ("high", 0.0, 0.0),
                 "launches_batched": ("high", 0.0, 0.0),  # O(1) stays O(1)
+                "launches_paged": ("high", 0.0, 0.0),
+                # the paged kernel's whole point: the dense-slot-stack
+                # gather copy stays DELETED (exact 0) and the roofline
+                # speedup that deletion buys never drops — all
+                # deterministic, so exact gates
+                "hbm_gather_bytes": ("high", 0.0, 0.0),
+                "hbm_gather_bytes_paged": ("high", 0.0, 0.0),
+                "paged_speedup": ("low", 0.0, 0.0),
                 # §3.4 remote-traffic pricing of the case: deterministic, so
                 # any upward drift is a real comms regression, not noise
                 "wire_bytes_fetch": ("high", 0.0, 0.0),
@@ -63,6 +71,7 @@ SPECS: Dict[str, Dict[str, Any]] = {
                 "jnp_ms": _TIME_GUARD,
                 "pallas_scan_ms": _TIME_GUARD,
                 "pool_batched_ms": _TIME_GUARD,
+                "pool_paged_ms": _TIME_GUARD,
             }),
         ],
     },

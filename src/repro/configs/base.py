@@ -229,7 +229,10 @@ class RunConfig:
     # different backend than the causal self block — e.g. pallas self-block
     # + jnp remote partials. "auto" follows attn_backend; under "pallas"
     # the pool scan is ONE batched slot-grid kernel launch (O(1) in pool
-    # depth) instead of one chunk_attention launch per occupied slot
+    # depth) instead of one chunk_attention launch per occupied slot;
+    # "paged" keeps the single launch but reads KV pages IN PLACE from the
+    # page store (scalar-prefetched handle rows + double-buffered async
+    # copies — no gather_chunks stack in HBM, DESIGN.md §3.7)
     pool_backend: str = "auto"
     # SSD inner loop for the ssm/hybrid stage programs, same knob pattern:
     # "jnp" = models.ssm.ssd_chunked reference; "pallas" = kernels.ops.ssd

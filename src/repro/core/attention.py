@@ -38,8 +38,12 @@ fetch/qship) separately from the self block. A backend that advertises
 ``pool_block`` call — the pallas slot-grid kernel
 (``kernels.ops.pool_attention``) makes that a SINGLE launch per (layer,
 tick), O(1) in pool depth, vs one ``chunk_attention`` launch per occupied
-slot in the per-slot reference order. Registration is open for follow-ons
-(TPU-native qship kernel — ROADMAP).
+slot in the per-slot reference order. A backend that advertises
+``paged_pool`` (``paged``) goes further: ``pool_scan`` hands it the
+page-handle rows themselves and ``pool_block_paged`` launches the ragged
+paged kernel (``kernels.ops.pool_attention_paged``) straight off the page
+store — no gather, no dense slot stack, HBM traffic O(resident pages).
+Registration is open for follow-ons (TPU-native qship kernel — ROADMAP).
 """
 from __future__ import annotations
 
@@ -262,6 +266,65 @@ class PallasBackend(AttentionBackend):
         return attn_combine(st, self._to_state(m, l, acc, kvh))
 
 
+class PagedPallasBackend(PallasBackend):
+    """Ragged paged pool backend (DESIGN.md §3.7): pool-sourced partials go
+    through ``kernels.ops.pool_attention_paged`` — the kernel reads KV pages
+    in place from the page store via scalar-prefetched handle rows, with
+    double-buffered async copies and dequant on the VMEM landing buffer. No
+    ``gather_chunks`` call, no dense ``[S, B, C, KVH, D]`` stack in HBM:
+    pool HBM traffic is O(resident pages). Self/chunk blocks inherit the
+    pallas flash kernel."""
+
+    name = "paged"
+    paged_pool = True  # pool_scan feeds page tables, not gathered stacks
+
+    def pool_block_paged(self, qg, pool_l, page_rows, valid, scale,
+                         st: State) -> State:
+        """ONE paged launch straight off the layer's page store slice.
+        ``page_rows`` [S, ppc] page-handle rows of the visited slots (static
+        numpy or traced); ``valid`` [S] traced occupancy."""
+        from repro.kernels import ops
+        k_l, v_l, ks_l, vs_l = pool_l
+        b, c, kvh, g, d = qg.shape
+        q = qg.reshape(b, c, kvh * g, d)
+        ppc = page_rows.shape[1]
+        handles = jnp.asarray(page_rows, jnp.int32).reshape(-1)
+        m, l, acc = ops.pool_attention_paged(
+            q, k_l, v_l, handles, valid, ppc=ppc, scale=float(scale),
+            k_scale=ks_l, v_scale=vs_l)
+        return attn_combine(st, self._to_state(m, l, acc, kvh))
+
+    def pool_block(self, qg, kq, vq, ks, vs, valid, scale,
+                   st: State) -> State:
+        """Stacked-interface entry (the batched-fetch landing path): view
+        the landed chunk stack [S, B, C, K, D] as a page store with identity
+        handles — [S*ppc, B, pt, K, D] pages — and reuse the paged kernel.
+        With ppc == 1 (passthrough codec) the view is a free reshape; per-
+        page quantized stacks pay one small staging-buffer transpose (the
+        staging buffer is n_remote chunks, not the pool)."""
+        from repro.kernels import ops
+        s, b_, ck, kvh_, d_ = kq.shape
+        ppc = 1 if ks is None else ks.shape[1]
+        pt = ck // ppc
+
+        def pageize(x):
+            x = x.reshape(s, b_, ppc, pt, kvh_, d_)
+            return x.transpose(0, 2, 1, 3, 4, 5).reshape(
+                s * ppc, b_, pt, kvh_, d_)
+
+        ksc = vsc = None
+        if ks is not None:  # [S, ppc, B, 1, K, 1] -> [S*ppc, B, 1, K, 1]
+            ksc = ks.reshape(s * ppc, *ks.shape[2:])
+            vsc = vs.reshape(s * ppc, *vs.shape[2:])
+        handles = jnp.arange(s * ppc, dtype=jnp.int32)
+        b, c, kvh, g, d = qg.shape
+        q = qg.reshape(b, c, kvh * g, d)
+        m, l, acc = ops.pool_attention_paged(
+            q, pageize(kq), pageize(vq), handles, valid, ppc=ppc,
+            scale=float(scale), k_scale=ksc, v_scale=vsc)
+        return attn_combine(st, self._to_state(m, l, acc, kvh))
+
+
 _BACKENDS: Dict[str, Callable[[], AttentionBackend]] = {}
 
 
@@ -282,6 +345,7 @@ def available_backends() -> Tuple[str, ...]:
 
 register_backend("jnp", JnpBackend)
 register_backend("pallas", PallasBackend)
+register_backend("paged", PagedPallasBackend)
 
 
 # ============================================================ pool traversal
@@ -298,29 +362,41 @@ def pool_scan(backend: AttentionBackend, qg, pool_l, slot_pages, slot_chunk,
     ``slots``: optional static subset of slot indices to visit (the creditor
     scan touches only the few host slots, not the whole pool).
 
-    Two traversal orders, numerically reconciled by tests: a backend with
-    ``batched_pool`` gets every visited slot's pages in ONE gather and ONE
-    ``pool_block`` call (the pallas slot-grid kernel — a single launch);
-    otherwise the per-slot ``lax.scan`` below is the reference order (one
-    chunk-layer resident at a time, one ``chunk_block_q`` per slot)."""
+    Three traversal orders, numerically reconciled by tests: a backend with
+    ``paged_pool`` gets the page-handle rows DIRECTLY (``handle_rows`` ->
+    ``pool_block_paged``) and the kernel reads pages in place — zero gather;
+    a backend with ``batched_pool`` gets every visited slot's pages in ONE
+    gather and ONE ``pool_block`` call (the pallas slot-grid kernel — a
+    single launch over a dense HBM stack); otherwise the per-slot
+    ``lax.scan`` below is the reference order (one chunk-layer resident at a
+    time, one ``chunk_block_q`` per slot)."""
     k_l, v_l, ks_l, vs_l = pool_l
     if slots is not None:
         if len(slots) == 0:
             return st
         idx = jnp.asarray(np.asarray(slots, np.int32))
         chunk_ids = jnp.asarray(slot_chunk)[idx]
-        page_rows = jnp.asarray(slot_pages)[idx]
+        page_rows = kvpages.handle_rows(slot_pages, slots)
     else:
         nslots = slot_pages.shape[0] - 1
         if nslots <= 0:
             return st
         chunk_ids = jnp.asarray(slot_chunk[:nslots])
-        page_rows = jnp.asarray(slot_pages[:nslots])
+        page_rows = kvpages.handle_rows(slot_pages)
+
+    valid = (chunk_ids >= 0) & (chunk_ids < limit)
+    if getattr(backend, "paged_pool", False):
+        # handle rows go straight into the kernel's scalar-prefetch args —
+        # both the full-pool and the creditor ``slots=`` subset paths
+        return backend.pool_block_paged(qg, pool_l, page_rows, valid, scale,
+                                        st)
 
     if backend.batched_pool:
+        # ORACLE FEED, not a perf path: gather_chunks materializes the dense
+        # [S, B, C, KVH, D] stack the paged kernel exists to avoid — kept as
+        # the reference input for the slot-grid kernel
         kq, vq, ks, vs = kvpages.gather_chunks(k_l, v_l, ks_l, vs_l,
                                                page_rows)
-        valid = (chunk_ids >= 0) & (chunk_ids < limit)
         return backend.pool_block(qg, kq, vq, ks, vs, valid, scale, st)
 
     def body(carry, xs):

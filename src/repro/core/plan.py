@@ -50,7 +50,8 @@ class PipelinePlan:
     pool_backend: str = "jnp"    # backend for POOL-sourced partials (own
                                  # pool scan + fetch/qship); resolved from
                                  # RunConfig.pool_backend ("auto" follows
-                                 # attn_backend) — never "auto" here
+                                 # attn_backend; "paged" = gather-free
+                                 # ragged pool kernel) — never "auto" here
     ssm_backend: str = "jnp"     # jnp | pallas (kernels.ops.ssd)
     spill_dtype: str = "bfloat16"  # int8 -> wire-only spill compression
     ship_dtype: str = "bfloat16"   # qship q/acc wire format (= model dtype)

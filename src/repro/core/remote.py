@@ -12,7 +12,11 @@ two ways:
   ``plan.fetch_batch != "off"``) the landed chunk-layers accumulate in a
   staging buffer instead and go through ONE ``pool_block`` launch — same
   wire traffic, O(1) attention launches per (layer, tick) instead of one
-  per remote chunk (``ops.count_launches`` pins it).
+  per remote chunk (``ops.count_launches`` pins it). Under the PAGED pool
+  backend the staging buffer is viewed as a page store with identity
+  handles and the same ragged paged kernel consumes it
+  (``PagedPallasBackend.pool_block`` — no extra copy for passthrough
+  codecs, one small staging transpose for per-page-quantized stacks).
 - ``qship``  (beyond-paper, TPU-native): ship the QUERY to the creditor,
   which computes partial flash attention over the chunks it hosts and ships
   back (acc, lse). Traffic O(q + out): cheaper whenever >= 2 chunks are

@@ -204,7 +204,8 @@ register_transport("jax", JaxCollectiveTransport)
 # ================================================== §3.4 analytic model
 
 def analytic_wire_bytes(plan, cfg, b: int, *,
-                        dtype_bytes: Optional[float] = None) -> Dict[str, float]:
+                        dtype_bytes: Optional[float] = None,
+                        resident_pages=None) -> Dict[str, float]:
     """Closed-form §3.4 traffic totals for one ``prefill_pipeline`` call of a
     TRANSFORMER-family plan — the model the runtime ledger is validated
     against (``tests/test_transport.py``, <1%).
@@ -217,7 +218,14 @@ def analytic_wire_bytes(plan, cfg, b: int, *,
     the model is lowering-independent (auto vs manual TP) except for the
     ``tp`` category, which only the manual lowering puts on the wire (the
     stage programs charge it at the call site; it is not modeled here).
-    """
+
+    ``resident_pages``: optional per-chunk RESIDENT page counts ([M] ints,
+    each <= pages_per_chunk) — the ragged-occupancy variant for the paged
+    pool path (DESIGN.md §3.7), where a chunk's spill/fetch wire carries
+    only its resident pages instead of the padded slot stack. ``None`` (or
+    all-full) reproduces the dense closed form exactly; today's uniform-
+    chunk runtime ships full chunks, so the ledger pins against the dense
+    case, and the ragged model prices what partial chunks will save."""
     n, m, c = plan.num_stages, plan.num_chunks, plan.chunk_len
     lps = plan.layers_per_stage
     kvh, hd, h = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_heads
@@ -225,6 +233,11 @@ def analytic_wire_bytes(plan, cfg, b: int, *,
     codec = plan.codec
     sto = float(codec.bytes_per_el)
     ppc = plan.pages_per_chunk
+    pt = c // ppc
+    if resident_pages is None:
+        resident_pages = [ppc] * m
+    rp = [int(min(max(p, 0), ppc)) for p in resident_pages]
+    assert len(rp) == m, (len(rp), m)
     out = {k: 0.0 for k in LEDGER_KEYS}
 
     # ring: stage s < N-1 forwards its chunk output once per active phase
@@ -237,27 +250,30 @@ def analytic_wire_bytes(plan, cfg, b: int, *,
 
     # --- spill: every stage ships each chunk in [p2, M) once (all lps
     # layers in one end-of-tick permute). Quantized codec: the wire carries
-    # the encoded pages + fp32 scales; passthrough + int8 spill_dtype: int8
-    # payload + one fp32 scale per (tensor, layer, kv head).
-    chunk_payload = 2 * lps * b * c * kvh * hd  # k and v elements
-    if codec.quantized:
-        spill_wire = chunk_payload * sto + 2 * ppc * lps * b * kvh * 4.0
-    elif plan.spill_dtype == "int8":
-        spill_wire = chunk_payload * 1.0 + 2 * lps * b * kvh * 4.0
-    else:
-        spill_wire = chunk_payload * dt
-    out["spill"] = n * (m - plan.p2) * spill_wire
+    # the encoded RESIDENT pages + fp32 scales; passthrough + int8
+    # spill_dtype: int8 payload + one fp32 scale per (tensor, layer, kv
+    # head).
+    def spill_wire(pages: int) -> float:
+        payload = 2 * lps * b * (pages * pt) * kvh * hd  # k and v elements
+        if codec.quantized:
+            return payload * sto + 2 * pages * lps * b * kvh * 4.0
+        if plan.spill_dtype == "int8":
+            return payload * 1.0 + 2 * lps * b * kvh * 4.0
+        return payload * dt
+
+    out["spill"] = n * sum(spill_wire(rp[j]) for j in range(plan.p2, m))
 
     if plan.remote_attn == "fetch":
         # one chunk-layer permute per (stage, layer, phase, remote chunk
-        # consumed): sum over phases p of |{j : p2 <= j < p}|
-        consumed = sum(max(0, min(p, m) - plan.p2) for p in range(m))
-        layer_payload = 2 * b * c * kvh * hd
-        if codec.quantized:
-            wire = layer_payload * sto + 2 * ppc * b * kvh * 4.0
-        else:
-            wire = layer_payload * sto
-        out["fetch"] = n * lps * consumed * wire
+        # consumed): chunk j is consumed at every phase p with j < p
+        def fetch_wire(pages: int) -> float:
+            payload = 2 * b * (pages * pt) * kvh * hd
+            if codec.quantized:
+                return payload * sto + 2 * pages * b * kvh * 4.0
+            return payload * sto
+        out["fetch"] = n * lps * sum(
+            fetch_wire(rp[j])
+            for p in range(m) for j in range(plan.p2, min(p, m)))
     else:
         # qship: one q ship + one (m, l, acc) return per (stage, layer,
         # phase with p > p2)

@@ -15,6 +15,15 @@ diagonal are skipped via ``pl.when`` (no MXU work issued).
 same online softmax with a slot axis in the grid — (B, H, nq, slots, nk) —
 so one launch covers every stored chunk a consumer attends over, instead of
 one launch (and one traced-level combine round-trip) per occupied slot.
+
+``pool_attention_paged_pallas`` is the ragged-paged successor (DESIGN.md
+§3.7): page-handle rows + per-slot occupancy arrive as SCALAR-PREFETCH
+arguments (``pltpu.PrefetchScalarGridSpec``) and the kernel reads KV pages
+straight from the page store ``[P, B, pt, KVH, hd]`` — no ``gather_chunks``
+copy, no dense slot stack in HBM — double-buffering each page HBM→VMEM with
+``pltpu.make_async_copy`` while the MXU runs the previous page, and
+dequantizing int8/fp8 payloads on the landing buffer. Invalid slots issue
+zero copies and zero MXU work.
 """
 from __future__ import annotations
 
@@ -226,6 +235,199 @@ def pool_attention_pallas(
         ],
         interpret=interpret,
     )(*args)
+    return m, l, acc
+
+
+def _paged_kernel(handles_ref, valid_ref, q_ref, k_src, v_src, *refs,
+                  scale: float, kv_len: int, block_q: int, pt: int,
+                  ppc: int, np_eff: int, group: int, quantized: bool,
+                  use_dma: bool):
+    """Ragged paged pool attention: ONE launch straight off the page store.
+
+    Grid = (B, H, nq, S, np_eff) with (slot, page) innermost and sequential.
+    ``handles_ref`` [S*ppc] and ``valid_ref`` [S] are scalar-prefetch SMEM
+    refs — available BEFORE the grid runs, so they can steer data movement:
+
+    - ``use_dma=True`` (the TPU-native path): ``k_src``/``v_src`` are the
+      UNBLOCKED page stores (``pltpu.ANY`` memory space). Each grid step
+      issues a ``make_async_copy`` of the NEXT valid page's ``[pt, hd]``
+      slice into the other half of a double buffer while the MXU consumes
+      the current half — the handle indirection happens in the DMA source
+      index, so no gathered stack ever exists in HBM.
+    - ``use_dma=False`` (portable fallback): ``k_src``/``v_src`` arrive as
+      automatically pipelined VMEM blocks whose index map already applied
+      ``handles_ref[si*ppc+pi]`` — same zero-gather property, buffering
+      delegated to the Pallas pipeline.
+
+    A slot with ``valid == 0`` contributes the exact identity state: its
+    steps issue no copies (the prefetch for step t+1 is validity-gated) and
+    no MXU work. Quantized payloads are dequantized ON THE LANDING BUFFER:
+    the per-page scale rides in SMEM (indexed by the same handle) and the
+    multiply fuses into the fp32 upcast."""
+    if quantized:  # extra inputs: per-page per-(batch, kv-head) fp32 scales
+        ksc_ref, vsc_ref, *refs = refs
+    else:
+        ksc_ref = vsc_ref = None
+    mo_ref, lo_ref, ao_ref, *refs = refs
+    if use_dma:
+        kbuf, vbuf, sem, m_ref, l_ref, acc_ref = refs
+    else:
+        m_ref, l_ref, acc_ref = refs
+
+    bi, hi = pl.program_id(0), pl.program_id(1)
+    si, pi = pl.program_id(3), pl.program_id(4)
+    ns = pl.num_programs(3)
+    hk = hi // group
+    step = si * np_eff + pi          # page step within this (bi, hi, qi)
+    nsteps = ns * np_eff
+    cur_valid = valid_ref[si] != 0
+
+    if use_dma:
+        def page_copies(buf_i, s2, p2):
+            h = handles_ref[s2 * ppc + p2]
+            ck = pltpu.make_async_copy(k_src.at[h, bi, :, hk, :],
+                                       kbuf.at[buf_i], sem.at[buf_i, 0])
+            cv = pltpu.make_async_copy(v_src.at[h, bi, :, hk, :],
+                                       vbuf.at[buf_i], sem.at[buf_i, 1])
+            return ck, cv
+
+        # warm-up: the first page of each (bi, hi, qi) program has no
+        # predecessor to prefetch it — one stall per q-block program
+        @pl.when((step == 0) & cur_valid)
+        def _warm():
+            for c in page_copies(0, 0, 0):
+                c.start()
+
+        # land the NEXT page in the other buffer half while this page's
+        # block update runs; invalid targets issue no copy at all
+        nxt = step + 1
+        n_si = jnp.minimum(nxt // np_eff, ns - 1)  # clamp: last step only
+        n_pi = jax.lax.rem(nxt, np_eff)
+
+        @pl.when((nxt < nsteps) & (valid_ref[n_si] != 0))
+        def _prefetch():
+            for c in page_copies(jax.lax.rem(nxt, 2), n_si, n_pi):
+                c.start()
+
+    @pl.when(step == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    k_pos = pi * pt + jax.lax.broadcasted_iota(jnp.int32, (block_q, pt), 1)
+
+    @pl.when(cur_valid)
+    def _compute():
+        if use_dma:
+            buf_i = jax.lax.rem(step, 2)
+            for c in page_copies(buf_i, si, pi):
+                c.wait()
+            k = kbuf[buf_i].astype(jnp.float32)
+            v = vbuf[buf_i].astype(jnp.float32)
+        else:
+            k = k_src[0, 0, :, 0, :].astype(jnp.float32)
+            v = v_src[0, 0, :, 0, :].astype(jnp.float32)
+        if ksc_ref is not None:  # dequant on the landing buffer
+            k = k * ksc_ref[0, 0]
+            v = v * vsc_ref[0, 0]
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        # stored chunks are fully visible: only the partial last page masks
+        _block_update(q, k, v, k_pos < kv_len, scale, m_ref, l_ref, acc_ref)
+
+    @pl.when(step == nsteps - 1)
+    def _finish():
+        mo_ref[0, 0, :] = m_ref[...]
+        lo_ref[0, 0, :] = l_ref[...]
+        ao_ref[0, :, 0, :] = acc_ref[...]
+
+
+def pool_attention_paged_pallas(
+    q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    handles: jax.Array, valid: jax.Array, *, ppc: int,
+    scale: Optional[float] = None, kv_len: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q, interpret: bool = False,
+    k_scale: Optional[jax.Array] = None, v_scale: Optional[jax.Array] = None,
+    use_dma: bool = True,
+):
+    """Ragged paged pool attention: q [B, C, H, D] vs the PAGE STORE
+    ``k_pages``/``v_pages`` [P, B, pt, KVH, D] (one layer's slice, storage
+    dtype), addressed through ``handles`` [S*ppc] int32 (the flattened
+    page-handle rows of the visited slots) with per-slot occupancy ``valid``
+    [S] int32 — both delivered as scalar-prefetch arguments. Returns the
+    online-softmax state ``(m, l) [B, H, C]`` fp32 + unnormalized ``acc
+    [B, C, H, D]`` fp32, exactly like ``pool_attention_pallas``, but with NO
+    gathered ``[S, B, C, KVH, D]`` intermediate: pages stream HBM→VMEM per
+    grid step (double-buffered ``make_async_copy`` when ``use_dma``).
+
+    ``kv_len``: valid tokens per chunk (< ppc*pt for a partial last page —
+    trailing fully-empty pages are excluded from the grid, the straddling
+    page is masked). ``k_scale``/``v_scale`` [P, B*KVH] fp32: per-page
+    dequant scales, SMEM-indexed by the same handles."""
+    b, c, h, d = q.shape
+    pt, kvh = k_pages.shape[2], k_pages.shape[3]
+    assert k_pages.shape[-1] == d, (k_pages.shape, d)
+    ns = valid.shape[0]
+    assert ns >= 1 and handles.shape == (ns * ppc,), (handles.shape, ns, ppc)
+    g = h // kvh
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kv_len = kv_len if kv_len is not None else ppc * pt
+    np_eff = max(1, min(ppc, -(-kv_len // pt)))  # drop fully-empty pages
+    block_q = min(block_q, c)
+    assert c % block_q == 0, (c, block_q)
+    nq = c // block_q
+    quantized = k_scale is not None
+    assert quantized == (v_scale is not None)
+
+    grid = (b, h, nq, ns, np_eff)
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, kv_len=kv_len, block_q=block_q, pt=pt,
+        ppc=ppc, np_eff=np_eff, group=g, quantized=quantized, use_dma=use_dma)
+    # index maps take the grid indices PLUS the scalar-prefetch refs
+    q_spec = pl.BlockSpec((1, block_q, 1, d),
+                          lambda bi, hi, qi, si, pi, hr, vr: (bi, qi, hi, 0))
+    if use_dma:  # unblocked page stores; the kernel DMAs page slices itself
+        kv_spec = pl.BlockSpec(memory_space=pltpu.ANY)
+    else:        # handle indirection inside the automatic pipeline
+        kv_spec = pl.BlockSpec(
+            (1, 1, pt, 1, d),
+            lambda bi, hi, qi, si, pi, hr, vr:
+                (hr[si * ppc + pi], bi, 0, hi // g, 0))
+    in_specs = [q_spec, kv_spec, kv_spec]
+    args = [q, k_pages, v_pages]
+    if quantized:
+        sc_spec = pl.BlockSpec(
+            (1, 1),
+            lambda bi, hi, qi, si, pi, hr, vr:
+                (hr[si * ppc + pi], bi * kvh + hi // g),
+            memory_space=pltpu.SMEM)
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
+    ml_spec = pl.BlockSpec((1, 1, block_q),
+                           lambda bi, hi, qi, si, pi, hr, vr: (bi, hi, qi))
+    acc_spec = pl.BlockSpec((1, block_q, 1, d),
+                            lambda bi, hi, qi, si, pi, hr, vr: (bi, qi, hi, 0))
+    out_shapes = [jax.ShapeDtypeStruct((b, h, c), jnp.float32)] * 2 \
+        + [jax.ShapeDtypeStruct((b, c, h, d), jnp.float32)]
+    scratch = []
+    if use_dma:
+        scratch += [
+            pltpu.VMEM((2, pt, d), k_pages.dtype),   # k landing buffers
+            pltpu.VMEM((2, pt, d), v_pages.dtype),   # v landing buffers
+            pltpu.SemaphoreType.DMA((2, 2)),         # [buffer, k|v]
+        ]
+    scratch += [
+        pltpu.VMEM((block_q,), jnp.float32),      # running max
+        pltpu.VMEM((block_q,), jnp.float32),      # running denom
+        pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2, grid=grid, in_specs=in_specs,
+        out_specs=[ml_spec, ml_spec, acc_spec], scratch_shapes=scratch)
+    m, l, acc = pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shapes,
+        interpret=interpret,
+    )(handles.astype(jnp.int32), valid.astype(jnp.int32), *args)
     return m, l, acc
 
 

@@ -60,13 +60,15 @@ def count_launches():
         assert launches["pool_attention"] == ...   # per-kernel attribution
 
     The yielded dict holds the all-kernel ``"count"`` plus one key per
-    kernel tag (``chunk_attention`` / ``pool_attention`` / ``ssd`` /
-    ``decode_attention``) that launched at least once. Contexts nest: every
+    kernel tag (``chunk_attention`` / ``pool_attention`` /
+    ``pool_attention_paged`` / ``ssd`` / ``decode_attention``) that
+    launched at least once. Contexts nest: every
     active frame counts every launch in its window.
 
     The stack is read at trace time, so the wrappers' jit caches are
     cleared on entry/exit — callers pay a retrace, tests only."""
-    jitted = (chunk_attention, pool_attention, ssd, decode_attention)
+    jitted = (chunk_attention, pool_attention, pool_attention_paged, ssd,
+              decode_attention)
     frame = {"count": 0}
     for f in jitted:
         f.clear_cache()
@@ -170,6 +172,63 @@ def pool_attention(q, k, v, valid, *, scale: Optional[float] = None,
         qp, kp, vp, valid.astype(jnp.int32).reshape(-1, 1),
         scale=scale, kv_len=t, block_q=bq, block_k=bk,
         interpret=not _on_tpu(), k_scale=k_scale, v_scale=v_scale)
+    return m, l, acc[..., :d]
+
+
+def _paged_use_dma() -> bool:
+    """The paged kernel's buffering scheme: manual double-buffered
+    ``make_async_copy`` by default (the TPU-native path, also exercised in
+    interpret mode so both CI legs validate it); ``REPRO_PAGED_DMA=0`` falls
+    back to automatically pipelined handle-indexed BlockSpecs — same
+    zero-gather property, for environments whose interpret mode lacks DMA
+    support."""
+    import os
+    return os.environ.get("REPRO_PAGED_DMA", "1") != "0"
+
+
+@partial(jax.jit, static_argnames=("ppc", "scale", "kv_len", "block_q",
+                                   "use_dma"))
+def pool_attention_paged(q, k_pages, v_pages, handles, valid, *, ppc: int,
+                         scale: Optional[float] = None,
+                         kv_len: Optional[int] = None,
+                         block_q: int = _ca.DEFAULT_BLOCK_Q,
+                         k_scale=None, v_scale=None,
+                         use_dma: Optional[bool] = None):
+    """Ragged paged pool attention (MOCAP pool scan, single launch, ZERO
+    gather). See ``chunk_attn.pool_attention_paged_pallas``.
+
+    q [B, C, H, D]; ``k_pages``/``v_pages`` [P, B, pt, KVH, D] — the page
+    store's layer slice in STORAGE dtype, read in place (``pltpu.ANY``);
+    ``handles`` [S*ppc] int32 flattened page-handle rows; ``valid`` [S]
+    bool/int per-slot occupancy (both scalar-prefetched into SMEM).
+    ``k_scale``/``v_scale`` [P, B, 1, KVH, 1] fp32: the pool's per-page
+    scales, dequantized on the VMEM landing buffer. ``kv_len`` < ppc*pt
+    handles a partial last page. Returns the fp32 online-softmax state like
+    ``pool_attention`` — one launch per (layer, tick), O(1) in pool depth,
+    and HBM traffic O(resident pages), not O(padded pool)."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    c = q.shape[1]
+    bq = min(_ca.DEFAULT_BLOCK_Q if block_q is None else block_q, c)
+    while c % bq:
+        bq //= 2
+    qp = _pad_to(q, 3, LANE)
+    # lane-pad the PAGE STORE only when head_dim is off-lane (a one-off
+    # [P, ...] copy — real configs keep hd a multiple of 128 and pass
+    # through untouched; there is never an [S, B, C, KVH, D] gather)
+    kp = _pad_to(k_pages, 4, LANE)
+    vp = _pad_to(v_pages, 4, LANE)
+    kvh = k_pages.shape[3]
+    if k_scale is not None:
+        k_scale = k_scale.reshape(k_scale.shape[0], -1)  # [P, B*KVH]
+        v_scale = v_scale.reshape(v_scale.shape[0], -1)
+        assert k_scale.shape[1] == q.shape[0] * kvh, k_scale.shape
+    use_dma = _paged_use_dma() if use_dma is None else use_dma
+    _note_launch("pool_attention_paged")
+    m, l, acc = _ca.pool_attention_paged_pallas(
+        qp, kp, vp, handles, valid, ppc=ppc, scale=scale, kv_len=kv_len,
+        block_q=bq, interpret=not _on_tpu(), k_scale=k_scale,
+        v_scale=v_scale, use_dma=use_dma)
     return m, l, acc[..., :d]
 
 

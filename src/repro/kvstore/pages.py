@@ -73,6 +73,21 @@ def build_slot_pages(geom: PageGeometry) -> np.ndarray:
     return tbl
 
 
+def handle_rows(slot_pages, slots=None):
+    """Export the page-handle rows the PAGED pool kernel consumes as its
+    scalar-prefetch argument (``kernels.ops.pool_attention_paged``): the
+    [S, ppc] rows of the visited slots — all non-scratch slots, or the
+    ``slots`` subset (creditor scan). Static numpy in, static numpy out (the
+    handles lower to an HLO constant and land in SMEM before the grid
+    runs); traced tables pass through as jnp."""
+    if isinstance(slot_pages, np.ndarray):
+        rows = (slot_pages[:-1] if slots is None
+                else slot_pages[np.asarray(slots, np.int32)])
+        return rows.astype(np.int32)
+    tbl = jnp.asarray(slot_pages, jnp.int32)
+    return tbl[:-1] if slots is None else tbl[jnp.asarray(slots)]
+
+
 def verify_page_plan(slot_pages: np.ndarray, geom: PageGeometry) -> None:
     """Page handles must be a bijection onto [0, num_pages): distinct slots
     own disjoint page sets, so slot-level collision-freedom (``mbkr.
@@ -174,7 +189,10 @@ def gather_chunk(k_l: jax.Array, v_l: jax.Array,
                  pages: jax.Array
                  ) -> Tuple[jax.Array, jax.Array,
                             Optional[jax.Array], Optional[jax.Array]]:
-    """Gather one slot's chunk from LAYER-SLICED pool arrays.
+    """Gather one slot's chunk from LAYER-SLICED pool arrays — the
+    jnp-REFERENCE feed (per-slot scan order and the streamed fetch wire),
+    not a perf path: the paged kernel (``ops.pool_attention_paged``) reads
+    pages in place and never materializes this copy.
 
     k_l/v_l [P, B, page_tokens, kvh, hd]; ks_l/vs_l [P, B, 1, kvh, 1];
     pages [ppc] (traced). Returns the ENCODED chunk ([B, C, kvh, hd] payload
@@ -200,9 +218,13 @@ def gather_chunks(k_l: jax.Array, v_l: jax.Array,
                              Optional[jax.Array], Optional[jax.Array]]:
     """``gather_chunk`` over a STACK of slots in one shot: ``page_rows``
     [S, ppc] (traced) -> payloads [S, B, C, kvh, hd] + per-page scales
-    [S, ppc, B, 1, kvh, 1]. One batched take per tensor — the feed for the
-    batched pool kernel (``kernels.ops.pool_attention``), where the slot
-    axis becomes a grid dimension instead of a scan carry."""
+    [S, ppc, B, 1, kvh, 1]. One batched take per tensor.
+
+    ORACLE FEED ONLY: this materializes the dense slot stack in HBM — the
+    input of the gathered slot-grid kernel (``kernels.ops.pool_attention``),
+    kept as the reference the paged path is reconciled against. The perf
+    path (``pool_backend="paged"``) skips it entirely: the paged kernel
+    takes ``handle_rows`` and reads pages in place."""
     s, ppc = page_rows.shape
     flat = page_rows.reshape(-1)
     kq = jnp.take(k_l, flat, axis=0)           # [S*ppc, B, pt, kvh, hd]

@@ -139,9 +139,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="attention backend for pipeline modes "
                          "(core.attention registry)")
     ap.add_argument("--pool-backend", default="auto",
-                    choices=("auto", "jnp", "pallas"),
+                    choices=("auto", "jnp", "pallas", "paged"),
                     help="backend for pool-sourced partials (own-pool scan "
-                         "+ fetch/qship); auto follows --attn-backend")
+                         "+ fetch/qship); auto follows --attn-backend; "
+                         "paged = gather-free ragged pool kernel")
     ap.add_argument("--tp-lowering", default="auto",
                     choices=("auto", "manual"),
                     help="TP lowering for pipeline modes (core.transport): "

@@ -12,7 +12,9 @@ itself), or --executor sim for the analytic executor at production scale.
 ``kernels.ops.chunk_attention`` (interpret mode off-TPU, Mosaic on TPU).
 --pool-backend overrides the backend for POOL-sourced partials only (the
 own-pool scan + fetch/qship) — backend-per-source mixing; under pallas the
-pool scan is a single batched slot-grid kernel launch per (layer, tick).
+pool scan is a single batched slot-grid kernel launch per (layer, tick);
+under paged it is a single RAGGED launch reading pages in place from the
+page store (no gather_chunks copy — DESIGN.md §3.7).
 
 Continuous chunk-level scheduling (cross-request pipelining, repro.sched):
 
@@ -98,12 +100,15 @@ def main(argv=None) -> int:
                          "jnp = pure-jnp reference, pallas = the flash "
                          "kernel (interpret mode off-TPU)")
     ap.add_argument("--pool-backend", default="auto",
-                    choices=("auto", "jnp", "pallas"),
+                    choices=("auto", "jnp", "pallas", "paged"),
                     help="backend for POOL-sourced partials (own-pool scan "
                          "+ fetch/qship) — mixable with --attn-backend, "
                          "e.g. pallas self-block + jnp remote partials; "
                          "auto follows --attn-backend. pallas = ONE batched "
-                         "slot-grid kernel launch per pool scan")
+                         "slot-grid kernel launch per pool scan; paged = "
+                         "one RAGGED launch straight off the page store "
+                         "(scalar-prefetched handles, double-buffered DMA, "
+                         "no gather — DESIGN.md §3.7)")
     ap.add_argument("--ssm-backend", default="jnp",
                     choices=("jnp", "pallas"),
                     help="SSD inner loop for ssm/hybrid archs "

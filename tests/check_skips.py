@@ -14,7 +14,11 @@ exact expected skip counts per reason class:
 - hypothesis skips: exactly 0 when hypothesis is importable (CI installs
   it), exactly 4 otherwise (3 importorskip modules + the guarded
   ragged-occupancy property test).
-- anything else: unknown skip reason -> fail.
+- anything else: unknown skip reason -> fail. Notably the paged pool
+  kernel (DESIGN.md §3.7) introduces NO TPU-only skip class: its manual-
+  DMA path runs under interpret mode on every supported jaxlib, and the
+  deterministic ragged cases in test_pool_batched.py run unconditionally
+  (no hypothesis needed).
 
 It also asserts the resolved TP lowering matches ``REPRO_EXPECT_TP_LOWERING``
 when the CI matrix sets it (the old-jaxlib leg pins "manual"), so a compat

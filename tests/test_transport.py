@@ -78,7 +78,7 @@ def test_analytic_model_shapes():
     assert wf["spill"] == wq["spill"] > 0
     # int8 codec compresses the spill/fetch wire, not the activation ring
     run_i8 = RunConfig(num_chunks=8, num_stages=8, remote_attn="fetch",
-                       kv_dtype="int8")
+                       kv_dtype="int8", kv_page_tokens=8)
     wi = tx.analytic_wire_bytes(pp.build_plan(cfg, 8, 128, run_i8), cfg, 2)
     assert wi["fetch"] < wf["fetch"] and wi["spill"] < wf["spill"]
     assert wi["ring"] == wf["ring"]
@@ -86,6 +86,28 @@ def test_analytic_model_shapes():
     wt = tx.analytic_wire_bytes(
         pp.build_plan(cfg, 8, 128, run_f, mode="terapipe"), cfg, 2)
     assert wt["spill"] == wt["fetch"] == wt["qship_q"] == 0
+    # ragged-occupancy variant (paged pool path): all-resident == the dense
+    # closed form EXACTLY; partially-resident chunks shed wire on the paged
+    # categories (spill/fetch) and nothing else
+    plan_i8 = pp.build_plan(cfg, 8, 128, run_i8)
+    ppc = plan_i8.pages_per_chunk
+    assert ppc > 1  # the ragged model needs sub-chunk granularity to price
+    wfull = tx.analytic_wire_bytes(plan_i8, cfg, 2,
+                                   resident_pages=[ppc] * plan_i8.num_chunks)
+    assert wfull == wi
+    wrag = tx.analytic_wire_bytes(plan_i8, cfg, 2,
+                                  resident_pages=[1] * plan_i8.num_chunks)
+    assert 0 < wrag["fetch"] < wi["fetch"]
+    assert 0 < wrag["spill"] < wi["spill"]
+    assert wrag["ring"] == wi["ring"] and wrag["collect"] == wi["collect"]
+    # per-chunk pricing: only the spilled chunks' residency matters, and a
+    # single full chunk among them sits strictly between the extremes
+    mixed = [1] * (plan_i8.num_chunks - 1) + [ppc]
+    wmix = tx.analytic_wire_bytes(plan_i8, cfg, 2, resident_pages=mixed)
+    assert wrag["spill"] < wmix["spill"] < wi["spill"]
+    only_early = [ppc] * plan_i8.p2 + [1] * (plan_i8.num_chunks - plan_i8.p2)
+    wearly = tx.analytic_wire_bytes(plan_i8, cfg, 2, resident_pages=only_early)
+    assert wearly["spill"] == wrag["spill"]  # chunks < p2 never spill
 
 
 # ---------------------------------------- runtime ledger vs the §3.4 model
@@ -306,3 +328,83 @@ def test_manual_tp_lowering_forced():
     exercised even on jaxlibs where "auto" resolves to GSPMD) and pin the
     oracle numerics plus the ledger's manual-TP accounting."""
     _run(SNIPPET_MANUAL_TP)
+
+
+# -------------------------------------------------- paged pool backend
+
+SNIPPET_PAGED_LEDGER = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro import compat
+from repro.compat import AxisType
+from repro.configs.base import RunConfig, get_smoke_config, replace
+from repro.core import pipeline as pp
+from repro.core import transport as tx
+from repro.kernels import ops
+from repro.models.api import build_model
+from repro.models.topology import Topology
+
+# deep geometry (p2 = 6 < M-1) so the paged kernel runs on BOTH pool paths:
+# the own-pool scan and the batched-fetch landing buffer
+cfg = replace(get_smoke_config("qwen3-8b"), dtype="float32")
+n, m, s, b = 8, 8, 128, 2
+mesh = compat.make_mesh((n, 1), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+topo = Topology(mesh=mesh)
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+toks = jax.random.randint(jax.random.key(1), (b, s), 0, cfg.vocab_size)
+
+outs, launches = {}, {}
+for pool in ("pallas", "paged"):
+    run = RunConfig(num_chunks=m, num_stages=n, remote_attn="fetch",
+                    attn_backend="pallas", pool_backend=pool,
+                    kv_dtype="int8", kv_page_tokens=8)
+    plan = pp.build_plan(cfg, n, s, run)
+    assert plan.pool_backend == pool
+    staged = pp.stage_params(cfg, params, plan)
+    with compat.set_mesh(mesh):
+        fn = jax.jit(lambda st, tk: pp.prefill_pipeline(
+            cfg, st, tk, plan, topo, return_ledger=True))
+        with ops.count_launches() as lc:
+            out, led = fn(staged, toks)
+            out.block_until_ready()
+        launches[pool] = dict(lc)
+    outs[pool] = np.asarray(out)
+    if pool == "paged":
+        # wire traffic is IDENTICAL under the paged kernel: it changes the
+        # consumer-side HBM layout, not what crosses the interconnect — the
+        # ledger still pins against the ragged model at full occupancy,
+        # which equals the dense closed form
+        led = tx.ledger_to_dict(led)
+        model_bytes = tx.analytic_wire_bytes(
+            plan, cfg, b, resident_pages=[plan.pages_per_chunk] * m)
+        for key in ("fetch", "spill", "ring"):
+            expect = model_bytes[key]
+            rel = abs(led[key] - expect) / expect
+            assert rel < 0.01, (key, led[key], expect)
+
+# paged == gathered numerics (identical int8 pages, fp32-rounding bound)
+diff = float(np.max(np.abs(outs["paged"] - outs["pallas"])))
+assert diff < 1e-6, diff
+
+# launch accounting: the paged run routes EVERY pool-sourced partial (own
+# pool + batched fetch) through pool_attention_paged and never launches the
+# gathered kernel; totals stay O(1) per (layer, tick)
+ticks, lps = m + n - 1, pp.build_plan(
+    cfg, n, s, RunConfig(num_chunks=m, num_stages=n)).layers_per_stage
+for pool in ("pallas", "paged"):
+    assert launches[pool]["count"] == ticks * lps * 3, launches
+    assert launches[pool]["chunk_attention"] == ticks * lps, launches
+assert launches["pallas"]["pool_attention"] == ticks * lps * 2, launches
+assert "pool_attention_paged" not in launches["pallas"], launches
+assert launches["paged"]["pool_attention_paged"] == ticks * lps * 2, launches
+assert "pool_attention" not in launches["paged"], launches
+print("PASS paged ledger", diff, launches["paged"])
+"""
+
+
+def test_paged_pool_ledger_parity_and_launches():
+    """End-to-end paged pool backend: logits match the gathered pallas pool
+    at 1e-6 on identical int8 pages, the CollectiveLedger pins against the
+    ragged analytic model at full occupancy, and every pool launch carries
+    the ``pool_attention_paged`` tag with zero gathered-kernel launches."""
+    _run(SNIPPET_PAGED_LEDGER)
