@@ -1,0 +1,194 @@
+"""Closed-loop calibration benchmark: predicted vs MEASURED chunk latency
+MAPE before/after fitting the HardwareProfile effective rates
+(repro.obs.calibrate), plus the health-sentinel overhead ratio.
+
+Deterministic sim-backed leg — runs off-TPU. The "measured" spans are
+synthesized from a GROUND-TRUTH profile the fit never sees (the nominal
+WSC_PAPER with its effective rates perturbed: gemm_eff x0.8, attn_eff x1.1,
+hbm_bw x0.9, link_bw x0.95) plus seeded ~1% multiplicative noise — i.e. a
+machine whose real rates differ from the datasheet, observed through a
+slightly jittery clock. Calibration must recover most of that gap:
+
+- ``mape_nominal``      datasheet prediction vs the measured spans (~10-20%
+                        at this perturbation),
+- ``mape_calibrated``   post-fit prediction vs the same spans (~ the noise
+                        floor, <1%),
+- ``mape_ratio``        calibrated / nominal — gated well below 1.0 by
+                        benchmarks/compare.py,
+- ``calibrated_improves``  1 iff strictly better (the acceptance criterion).
+
+``health_overhead`` is the wall-clock ratio of a continuous run PLUS the
+host-side health sentinels (SLO burn + ledger drift + exports) over the
+bare run, timed directly like sched_throughput.telem_overhead (no
+noisy-minus-noisy subtraction); gated <= 1.05x.
+
+The row set and every fit input are identical under --quick and full mode
+(--quick only shrinks the SA budget inside the overhead leg's engine), so
+the committed BENCH_calibration.json baseline stays valid for both.
+
+Artifacts: artifacts/bench/calibration.json (compare-gated) and
+artifacts/bench/calibrated_profile.json — a real calibrated-profile JSON
+(obs.calibrate.save_profile) that ``--calibrated-profile`` flags accept.
+
+  PYTHONPATH=src python -m benchmarks.calibration [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+from dataclasses import replace as dc_replace
+
+import numpy as np
+
+from benchmarks.common import OUT_DIR, emit, table
+from repro.configs.base import get_config
+from repro.core import costmodel as cm
+from repro.core import mbkr
+from repro.obs import calibrate as cal
+
+ARCHS = ("llama3-70b", "qwen3-235b")
+SEQS = (32768, 65536)
+NUM_STAGES = 16
+NUM_CHUNKS = 16
+
+# the machine the "measurements" come from: datasheet rates are off by
+# -20% gemm, +10% attention, -10% HBM, -5% interconnect
+TRUE_HW = dc_replace(cm.WSC_PAPER, name="wsc-ground-truth",
+                     gemm_eff=cm.WSC_PAPER.gemm_eff * 0.8,
+                     attn_eff=cm.WSC_PAPER.attn_eff * 1.1,
+                     hbm_bw=cm.WSC_PAPER.hbm_bw * 0.9,
+                     link_bw=cm.WSC_PAPER.link_bw * 0.95)
+NOISE_FRAC = 0.01
+
+
+def synth_measured(sm: cm.StageModel, chunks, mplan,
+                   seed: int) -> np.ndarray:
+    """A ``[N, T]`` measured-span array as MeasuredProfile lays it out:
+    chunk ``ph``'s true cost lands at every valid (stage, tick = stage+ph),
+    times seeded multiplicative clock noise; fill/drain cells stay 0."""
+    feats = cm.chunk_cost_features(sm, chunks, cm.WSC_PAPER,
+                                   mbkr_plan=mplan)
+    cost_true = feats @ cm.profile_theta(TRUE_HW, sm.tp)
+    n, m = NUM_STAGES, len(chunks)
+    rng = np.random.default_rng(seed)
+    tick_s = np.zeros((n, m + n - 1))
+    for s in range(n):
+        for ph in range(m):
+            tick_s[s, s + ph] = cost_true[ph] * (
+                1.0 + NOISE_FRAC * rng.standard_normal())
+    return tick_s
+
+
+def fit_row(arch: str, seq: int, seed: int):
+    cfg = get_config(arch)
+    sm = cm.StageModel.build(cfg, NUM_STAGES, 1)
+    chunks = [seq // NUM_CHUNKS] * NUM_CHUNKS
+    mplan = mbkr.plan(NUM_CHUNKS, NUM_STAGES) if not cfg.attn_free else None
+    measured = synth_measured(sm, chunks, mplan, seed)
+    fit = cal.fit_profile(sm, chunks, measured, cm.WSC_PAPER,
+                          mbkr_plan=mplan)
+    row = {
+        "arch": arch,
+        "seq": seq,
+        "mape_nominal": round(fit.mape_nominal, 6),
+        "mape_calibrated": round(fit.mape_calibrated, 6),
+        "mape_ratio": round(fit.mape_calibrated
+                            / max(fit.mape_nominal, 1e-12), 6),
+        "calibrated_improves": int(fit.mape_calibrated < fit.mape_nominal),
+    }
+    return row, fit
+
+
+def health_overhead(arch: str = "llama3-70b", bucket: int = 32768, *,
+                    sa_iters: int = 8, reps: int = 5) -> float:
+    """Wall-clock ratio of a continuous run + the host-side health
+    sentinels over the bare run. Like sched_throughput.telem_overhead, the
+    sentinel cost is timed DIRECTLY (replaying the exact per-run checks:
+    TTFT histogram -> check_slo, per-request ledger-vs-model drift, the
+    summary + metrics export) and divided by the bare run's floor —
+    no noisy-minus-noisy subtraction. Gated <= 1.05x by compare.py."""
+    from repro.obs.health import HealthMonitor
+    from repro.obs.metrics import Histogram, MetricsRegistry
+    from repro.runtime.engine import (ContinuousEngine, EngineConfig,
+                                      Request, SimExecutor)
+    cfg = get_config(arch)
+    ec = EngineConfig(model=cfg, hw=cm.WSC_PAPER, num_stages=NUM_STAGES,
+                      tp=1, num_chunks=NUM_CHUNKS, max_batch=8,
+                      buckets=(bucket,), partition="lbcp",
+                      sa_iters=sa_iters)
+
+    def run():
+        eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw), policy="fcfs")
+        for i in range(8):
+            eng.submit(Request(rid=i, arrival=0.0, seq_len=bucket))
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        return time.perf_counter() - t0, eng
+
+    run()  # warm caches off-clock
+    t_run = min(run()[0] for _ in range(reps))
+    _, eng = run()
+    records = eng.scheduler.metrics.records
+    ledger = {"ring": 1.0e9, "fetch": 2.5e8, "qship": 1.2e8, "tp": 4.0e8}
+
+    def sentinels() -> float:
+        mon = HealthMonitor()
+        t0 = time.perf_counter()
+        h = Histogram("ttft")
+        for r in records:
+            if math.isfinite(r.finish):
+                h.observe(r.finish - r.arrival)
+        mon.check_slo(h, slo_s=5.0)
+        for _ in records:       # one ledger-drift check per completed wave
+            mon.check_ledger(ledger, ledger)
+        mon.summary()
+        mon.to_metrics(MetricsRegistry())
+        return time.perf_counter() - t0
+
+    t_health = min(sentinels() for _ in range(reps))
+    return 1.0 + t_health / max(t_run, 1e-9)
+
+
+def run(quick: bool = False) -> None:
+    overhead = round(health_overhead(sa_iters=8 if quick else 24), 3)
+    rows, last_fit = [], None
+    for i, arch in enumerate(ARCHS):
+        for j, seq in enumerate(SEQS):
+            row, fit = fit_row(arch, seq, seed=1000 + 10 * i + j)
+            row["health_overhead"] = overhead
+            rows.append(row)
+            last_fit = fit
+    print(table(rows, ["arch", "seq", "mape_nominal", "mape_calibrated",
+                       "mape_ratio", "calibrated_improves",
+                       "health_overhead"]))
+    path = emit("calibration", rows)
+    print(f"csv -> {path}")
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    ppath = cal.save_profile(
+        os.path.join(OUT_DIR, "calibrated_profile.json"),
+        last_fit.profile, fit=last_fit,
+        meta={"arch": ARCHS[-1], "seq": SEQS[-1],
+              "source": "benchmarks.calibration"})
+    print(f"calibrated profile -> {ppath}")
+
+    jpath = os.path.join(OUT_DIR, "calibration.json")
+    with open(jpath, "w") as f:
+        json.dump({"quick": quick, "rows": rows}, f, indent=1)
+    print(f"-> {jpath}")
+    worst = max(r["mape_ratio"] for r in rows)
+    ok = all(r["calibrated_improves"] for r in rows)
+    print(f"worst calibrated/nominal MAPE ratio: {worst:.4f} "
+          f"({'PASS' if ok and worst < 1.0 else 'FAIL'}: calibration must "
+          "strictly improve every row)")
+    print(f"health-sentinel overhead: {overhead:.3f}x "
+          f"({'PASS' if overhead <= 1.05 else 'ABOVE'} the 1.05x ceiling)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    run(quick=ap.parse_args().quick)

@@ -112,6 +112,25 @@ SPECS: Dict[str, Dict[str, Any]] = {
             }),
         ],
     },
+    "calibration": {
+        "baseline": "BENCH_calibration.json",
+        "fresh": "calibration.json",
+        "tables": [
+            ("rows", lambda b: b["rows"], ("arch", "seq"), {
+                # the closed-loop contract: post-fit MAPE stays strictly
+                # below nominal (ratio < 1, improves == 1 exactly) and the
+                # fit keeps recovering the synthetic rate perturbation down
+                # to the seeded noise floor — all deterministic inputs, so
+                # tight gates
+                "mape_ratio": ("high", 0.05, 0.01),
+                "mape_calibrated": ("high", 0.25, 0.005),
+                "calibrated_improves": ("low", 0.0, 0.0),
+                # host-side sentinel cost vs the bare engine loop: same
+                # 1.05x contract as telem_overhead
+                "health_overhead": ("high", 0.0, 0.05),
+            }),
+        ],
+    },
 }
 
 

@@ -4,15 +4,21 @@ Runs the continuous engine (sim executor, WSC_PAPER profile) with tracing
 on and exports everything ``repro.obs`` produces for one serve run:
 
 - ``obs_trace.json``   — the merged Perfetto timeline (scheduler task spans
-  + kv_lease_bytes / wire_bytes counter tracks),
-- ``obs_metrics.json`` — the serving metrics as JSON lines,
+  + kv_lease_bytes / wire_bytes counter tracks + the health-sentinel alert
+  row),
+- ``obs_metrics.json`` — the serving metrics as JSON lines (including the
+  ``repro_health_*`` alert counters + burn-rate gauge),
 - ``obs_metrics.prom`` — the same registry as a Prometheus textfile,
+- ``obs_calibrated_profile.json`` — a calibrated-profile sample
+  (obs.calibrate.save_profile) that round-trips through
+  ``costmodel.resolve_profile`` — what serve/dryrun
+  ``--calibrated-profile`` consumes,
 
 so every PR carries a timeline a reviewer can drop into
 https://ui.perfetto.dev without rerunning anything. The job FAILS (raises)
 if the trace is missing any of the surfaces the merge is supposed to
 contain — that is the "one file has everything" contract of DESIGN.md
-§Observability.
+§Observability (now §8-§9).
 
   PYTHONPATH=src python -m benchmarks.obs_export [--quick]
 """
@@ -27,6 +33,7 @@ import numpy as np
 from benchmarks.common import OUT_DIR
 from repro.configs.base import get_config
 from repro.core import costmodel as cm
+from repro.obs import HealthMonitor, MetricsRegistry
 from repro.runtime.engine import (ContinuousEngine, EngineConfig, Request,
                                   SimExecutor)
 
@@ -38,14 +45,26 @@ def run(quick: bool = False) -> None:
     ec = EngineConfig(model=cfg, hw=cm.WSC_PAPER, num_stages=16, tp=1,
                       num_chunks=16, max_batch=4, buckets=(8192, 32768),
                       partition="lbcp", sa_iters=8 if quick else 24)
-    eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw), policy="edf",
-                           slo=5.0, trace=True)
+    executor = SimExecutor(cfg, ec.hw)
+    monitor = HealthMonitor()
+    executor.health = monitor   # merged_trace/export_obs pick it up
+    eng = ContinuousEngine(ec, executor, policy="edf", slo=5.0, trace=True)
     rng = np.random.default_rng(0)
     n_req = 6 if quick else 12
     for i in range(n_req):
         eng.submit(Request(rid=i, arrival=float(rng.exponential(0.2) * i),
                            seq_len=int(rng.choice(ec.buckets))))
     eng.run_until_drained()
+
+    # drive the host-side sentinels so the bundle shows a NON-empty alert
+    # surface: an impossible SLO trips slo_burn, a drifted ledger trips
+    # ledger_drift (both deterministic for the seeded arrivals)
+    ttft = MetricsRegistry().histogram("ttft")
+    for r in eng.scheduler.metrics.records:
+        if np.isfinite(r.finish):
+            ttft.observe(r.finish - r.arrival)
+    monitor.check_slo(ttft, slo_s=1e-6)
+    monitor.check_ledger({"ring": 1.10e9}, {"ring": 1.00e9})
 
     os.makedirs(OUT_DIR, exist_ok=True)
     paths = eng.export_obs(
@@ -66,11 +85,38 @@ def run(quick: bool = False) -> None:
         missing.append("wire_bytes counter track")
     if not any(e["ph"] == "M" for e in evs):
         missing.append("process_name metadata")
+    if not any(e["ph"] == "X" and e.get("cat") == "alert" for e in evs):
+        missing.append("health-sentinel alert row")
+    metric_names = {json.loads(line)["name"]
+                    for line in open(paths["metrics"]) if line.strip()}
+    if "repro_health_alerts_total" not in metric_names:
+        missing.append("repro_health_* metrics")
     if missing:
-        raise RuntimeError(f"merged trace is missing: {missing}")
+        raise RuntimeError(f"merged bundle is missing: {missing}")
+
+    # calibrated-profile sample: a synthetic fit against spans generated
+    # under a perturbed ground truth (the calibration benchmark's setup),
+    # persisted and round-tripped through resolve_profile — the exact
+    # artifact serve/dryrun --calibrated-profile accept
+    from benchmarks.calibration import NUM_CHUNKS, NUM_STAGES, synth_measured
+    from repro.core import mbkr
+    from repro.obs import calibrate as cal
+    sm = cm.StageModel.build(cfg, NUM_STAGES, 1)
+    chunks = [ec.buckets[0] // NUM_CHUNKS] * NUM_CHUNKS
+    mplan = mbkr.plan(NUM_CHUNKS, NUM_STAGES)
+    fit = cal.fit_profile(sm, chunks, synth_measured(sm, chunks, mplan, 7),
+                          cm.WSC_PAPER, mbkr_plan=mplan)
+    ppath = cal.save_profile(
+        os.path.join(OUT_DIR, "obs_calibrated_profile.json"), fit.profile,
+        fit=fit, meta={"arch": ARCH, "source": "benchmarks.obs_export"})
+    if cm.resolve_profile(ppath) != fit.profile:
+        raise RuntimeError("calibrated-profile JSON did not round-trip "
+                           "bit-identically through resolve_profile")
+    paths["calibrated_profile"] = ppath
+
     m = eng.metrics()
     print(f"[obs] {m['completed']} requests | {len(evs)} trace events | "
-          f"counters {sorted(counters)}")
+          f"{len(monitor.alerts)} health alerts | counters {sorted(counters)}")
     for kind, path in paths.items():
         print(f"{kind} -> {path}")
 

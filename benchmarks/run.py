@@ -46,10 +46,13 @@ JOBS = {
     "obs": ("obs_export", "run",
             "Merged Perfetto trace + metrics exporter sample artifacts",
             None),
+    "calibration": ("calibration", "run",
+                    "Cost-model calibration MAPE + health-sentinel overhead "
+                    "(sim-backed, deterministic)", None),
 }
 
 _QUICK_AWARE = {"sched", "attn_backend", "kvstore", "kvstore_pipeline",
-                "obs"}
+                "obs", "calibration"}
 
 
 def _gate(predicate: str) -> bool:

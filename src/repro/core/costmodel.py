@@ -6,8 +6,9 @@ HGX-class GPU system (NVLink-limited; Fig. 1(c)), and the TPU v5e target.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+import json
+from dataclasses import asdict, dataclass, replace as dc_replace
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -39,6 +40,39 @@ GPU_HGX = HardwareProfile("hgx-b200", 4.5e15, 7.7e12, 180e9, 0.9e12, (4, 4))
 TPU_V5E = HardwareProfile("tpu-v5e", 197e12, 819e9, 16e9, 50e9, (16, 16))
 
 PROFILES = {p.name: p for p in (WSC_PAPER, GPU_HGX, TPU_V5E)}
+
+ProfileSpec = Union[HardwareProfile, str]
+
+
+def profile_to_dict(hw: HardwareProfile) -> Dict:
+    """JSON-serializable profile dict. Floats survive a json round-trip
+    BIT-IDENTICALLY (json uses repr = shortest round-trip), so a calibrated
+    profile written to disk reproduces the exact dp_partition output of the
+    in-memory one."""
+    d = asdict(hw)
+    d["mesh"] = list(hw.mesh)
+    return d
+
+
+def profile_from_dict(d: Dict) -> HardwareProfile:
+    d = dict(d)
+    d["mesh"] = tuple(int(v) for v in d["mesh"])
+    return HardwareProfile(**d)
+
+
+def resolve_profile(spec: ProfileSpec) -> HardwareProfile:
+    """Accept a profile everywhere one is taken: a ``HardwareProfile``
+    instance, a registered name (``PROFILES``), or a path to a (calibrated)
+    profile JSON written by ``repro.obs.calibrate.save_profile`` — so LBCP,
+    ``chunk_cost_arrays`` and the scheduler's admission costs all run off a
+    measured fit with no call-site changes."""
+    if isinstance(spec, HardwareProfile):
+        return spec
+    if spec in PROFILES:
+        return PROFILES[spec]
+    with open(spec) as f:
+        blob = json.load(f)
+    return profile_from_dict(blob.get("profile", blob))
 
 
 # ----------------------------------------------------------- model analytics
@@ -105,7 +139,7 @@ class StageModel:
         al = ls if not cfg.attn_free else 0
         if cfg.family == "hybrid":
             al = ls  # one shared-attn application per group
-        return StageModel(cfg, ls, al)
+        return StageModel(cfg, ls, al, tp)
 
 
 def chunk_compute_time(sm: StageModel, c: int, p: int, hw: HardwareProfile) -> float:
@@ -139,7 +173,7 @@ def spill_time(sm: StageModel, c: int, hw: HardwareProfile, hops: int = 1,
 def chunk_cost_arrays(
     sm: StageModel,
     chunks: Sequence[int],
-    hw: HardwareProfile,
+    hw: ProfileSpec,
     *,
     mbkr_plan: Optional["object"] = None,  # core.mbkr.MBKRPlan
     compress: float = 1.0,
@@ -154,6 +188,7 @@ def chunk_cost_arrays(
       spill_t MBKR debtor spill seconds (chunks with index >= p2)
       fetch_t MBKR remote-KV re-read seconds (prefix chunks hosted at the pair)
     """
+    hw = resolve_profile(hw)
     m = len(chunks)
     dur = np.zeros(m)
     comm = np.zeros(m)
@@ -174,6 +209,92 @@ def chunk_cost_arrays(
         if i > p2:
             fetch_t[i] = kvb[p2:i].sum() * compress / link
     return dur, comm, kvb, spill_t, fetch_t
+
+
+# --------------------------------------------- calibration feature extraction
+#
+# Every term above is LINEAR in four effective hardware rates (the attention
+# max() picks a regime, but WITHIN a regime the time is linear):
+#
+#   t_chunk = G / (peak*gemm_eff) + A / (peak*attn_eff)   [compute-bound]
+#                                 | B / bw                [bandwidth-bound]
+#           + W / (link_bw*link_eff)
+#
+# so a per-chunk feature matrix X [M, 4] of pure WORK quantities (flops,
+# bytes) and a rate vector theta = profile_theta(hw) satisfy
+# X @ theta == dur + comm + spill_t + fetch_t exactly — the identity
+# ``repro.obs.calibrate`` inverts by least squares to fit an effective
+# profile from measured spans (DESIGN.md §9).
+
+FEATURE_TERMS = ("gemm_flops", "attn_flops", "attn_bytes", "link_bytes")
+
+
+def profile_theta(hw: HardwareProfile, tp: int = 1) -> np.ndarray:
+    """The 4 effective inverse rates the cost model is linear in:
+    seconds-per-unit of each FEATURE_TERMS column at stage width ``tp``."""
+    peak = tp * hw.flops
+    bw = tp * hw.hbm_bw
+    return np.array([1.0 / (peak * hw.gemm_eff), 1.0 / (peak * hw.attn_eff),
+                     1.0 / bw, 1.0 / (hw.link_bw * hw.link_eff)])
+
+
+def profile_from_theta(hw: HardwareProfile, theta: np.ndarray,
+                       tp: int = 1, name: Optional[str] = None
+                       ) -> HardwareProfile:
+    """Fold fitted inverse rates back into a ``HardwareProfile``: peak
+    flops/mesh stay nominal, the EFFECTIVE terms (gemm_eff / attn_eff /
+    hbm_bw / link_bw) absorb the fit — so the profile drops into every
+    existing cost-model call site unchanged."""
+    peak = tp * hw.flops
+    return dc_replace(
+        hw,
+        name=name if name is not None else hw.name + "+cal",
+        gemm_eff=1.0 / (float(theta[0]) * peak),
+        attn_eff=1.0 / (float(theta[1]) * peak),
+        hbm_bw=1.0 / (float(theta[2]) * tp),
+        link_bw=1.0 / (float(theta[3]) * hw.link_eff),
+    )
+
+
+def chunk_cost_features(
+    sm: StageModel,
+    chunks: Sequence[int],
+    hw: ProfileSpec,
+    *,
+    mbkr_plan: Optional["object"] = None,
+    compress: float = 1.0,
+) -> np.ndarray:
+    """Per-chunk work-quantity matrix ``X [M, 4]`` (FEATURE_TERMS columns)
+    such that ``X @ profile_theta(hw, sm.tp)`` equals the analytic per-chunk
+    total ``dur + comm + spill_t + fetch_t`` from ``chunk_cost_arrays``.
+
+    The attention regime (compute- vs bandwidth-bound) is chosen under the
+    GIVEN profile: the inactive branch's column is zero for that chunk, so
+    the fit stays linear. A calibration that flips a chunk's regime shows up
+    as residual, not as a fit failure."""
+    hw = resolve_profile(hw)
+    cfg = sm.cfg
+    m = len(chunks)
+    x = np.zeros((m, 4))
+    theta = profile_theta(hw, sm.tp)
+    p2 = m if mbkr_plan is None else mbkr_plan.p2
+    kvb = np.array([kv_chunk_bytes(sm, c) for c in chunks])
+    prefix = 0
+    for i, c in enumerate(chunks):
+        x[i, 0] = sm.layers * c * layer_linear_flops_per_token(cfg)
+        afl = sm.attn_layers * attn_flops(cfg, c, prefix)
+        abytes = sm.attn_layers * (prefix + c) * kv_bytes_per_token_layer(cfg)
+        if afl * theta[1] >= abytes * theta[2]:
+            x[i, 1] = afl
+        else:
+            x[i, 2] = abytes
+        x[i, 3] = c * cfg.d_model * 2    # boundary activation hop
+        if i >= p2:
+            x[i, 3] += kvb[i] * compress            # MBKR spill
+        if i > p2:
+            x[i, 3] += kvb[p2:i].sum() * compress   # MBKR remote re-read
+        prefix += c
+    return x
 
 
 # ------------------------------------------------- analytic pipeline schedule

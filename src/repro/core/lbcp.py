@@ -133,7 +133,7 @@ def plan_partition(
     seq_len: int,
     num_chunks: int,
     num_stages: int,
-    hw: cm.HardwareProfile = cm.WSC_PAPER,
+    hw: cm.ProfileSpec = cm.WSC_PAPER,
     *,
     tp: int = 1,
     quantum: Optional[int] = None,
@@ -146,7 +146,12 @@ def plan_partition(
     batch_cap: int = 8,
     seed: int = 0,
 ) -> PartitionPlan:
-    """Full LBCP: DP init + SA refinement. Returns token-level chunk sizes."""
+    """Full LBCP: DP init + SA refinement. Returns token-level chunk sizes.
+
+    ``hw`` takes a ``HardwareProfile``, a registered profile name, or a path
+    to a calibrated-profile JSON (``obs.calibrate.save_profile``) — the DP
+    and SA then partition against MEASURED effective rates."""
+    hw = cm.resolve_profile(hw)
     if quantum is None:
         quantum = max(seq_len // max(num_chunks * 16, 1), 1)
         quantum = min(quantum, max(seq_len // num_chunks, 1))

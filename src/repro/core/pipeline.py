@@ -64,7 +64,8 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
                      plan: PipelinePlan, topo: Topology, *,
                      embeds: Optional[jax.Array] = None,
                      return_ledger: bool = False,
-                     return_telemetry: bool = False) -> jax.Array:
+                     return_telemetry: bool = False,
+                     tick_hook=None, health=None) -> jax.Array:
     """Chunked-pipeline prefill of ``tokens`` [B, S]; returns next-token
     logits [B, Vpad] (prefill-only: ONE output token, KV is discarded).
 
@@ -83,9 +84,31 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     is traced at all: the carry threads ``None`` and every charge
     short-circuits, so the compiled program is identical. Return order is
     ``logits[, ledger][, telemetry]``.
+
+    ``tick_hook``: ZERO-ARG host callback fired (via ``jax.debug.callback``)
+    at the END of every tick on every shard — the measured-span beacon
+    (``obs.profile.TickSpanCollector.note``). It takes no operands because
+    this jaxlib's SPMD partitioner rejects operand-carrying callbacks inside
+    the manual shard_map region; tick identity is recovered host-side from
+    arrival order (the scan runs ticks in order).
+
+    ``health``: an ``obs.health.HealthMonitor``; arms the non-finite
+    activation sentinel. Per-(stage, tick) finite-counts of the stage
+    output (gated to ACTIVE phases so bubble garbage never pages anyone)
+    ride the scan ys out of the manual region as an ``[N, T]`` int32
+    profile, delivered by ONE host callback after the shard_map. The tick
+    loop itself adds no collectives; the only armed comms cost is that
+    end-of-run delivery gather of one tiny int32 array — O(1), not
+    O(ticks).
+
+    Both default to None, in which case NOTHING extra is traced — the
+    compiled program is bit-identical (proven in tests/test_calibration.py,
+    same style as the telemetry-off proof).
     """
     if plan.mode == "gpipe":
         assert not return_ledger, "gpipe has no MBKR transport ledger"
+        assert tick_hook is None and health is None, \
+            "tick_hook/health probe only the chunked-pipeline driver"
         return gpipe_prefill(cfg, staged, tokens, plan, topo,
                              return_telemetry=return_telemetry)
     n, m, c = plan.num_stages, plan.num_chunks, plan.chunk_len
@@ -225,21 +248,37 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             ring_active = (phase >= 0) & (phase < m) & (stage < n - 1)
             x_next, led = transport.ring_shift(x_out, st_ax, ring_perm, led,
                                                active=ring_active)
-            return (x_next, pool, state, x_last, led, tel), tel_ys
+            # ---- sentinels / probes: traced ONLY when armed (None = the
+            # compiled program is bit-identical, zero extra collectives).
+            # Non-finite counts ride the scan ys OUT of the manual region —
+            # operand-carrying debug callbacks inside manual shard_map are
+            # unsupported by this jaxlib's SPMD partitioner, so the only
+            # in-region callback is the zero-arg tick beacon.
+            bad = None
+            if health is not None:
+                nbad = jnp.sum(~jnp.isfinite(x_out.astype(jnp.float32)))
+                bad = jnp.where(ctx.active, nbad, 0).astype(jnp.int32)
+            if tick_hook is not None:
+                jax.debug.callback(tick_hook)
+            return (x_next, pool, state, x_last, led, tel), (tel_ys, bad)
 
         tel0 = obs_t.telemetry_init() if return_telemetry else None
         carry0 = (x0, pool, state0, x_last0, tx.ledger_init(), tel0)
-        (xf, _, _, x_last, led, _), tel_ys = jax.lax.scan(
+        (xf, _, _, x_last, led, _), (tel_ys, bad_ys) = jax.lax.scan(
             tick, carry0, jnp.arange(plan.num_ticks))
         # replicate the final hidden state across stages
         x_last, led = transport.stage_psum(x_last, st_ax, led)
         led = tx.ledger_collect(led, led_axes)
-        if not return_telemetry:
-            return x_last, led
-        tel_ys = obs_t.telemetry_collect(
-            tel_ys, mtp.axes if mtp is not None else None)
-        tel_out = {k: v[None, :] for k, v in tel_ys.items()}  # [1, T] local
-        return x_last, led, tel_out
+        outs = [x_last, led]
+        if return_telemetry:
+            tel_ys = obs_t.telemetry_collect(
+                tel_ys, mtp.axes if mtp is not None else None)
+            outs.append({k: v[None, :] for k, v in tel_ys.items()})  # [1, T]
+        if health is not None:
+            # residual is replicated across manual TP, so the count already
+            # agrees on every TP shard — no psum, no extra collective
+            outs.append(bad_ys[None, :])  # [1, T] local stage row
+        return tuple(outs)
 
     extra: Params = {}
     if is_hybrid:
@@ -262,8 +301,12 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     out_spec = P(pod_axes if pod_axes else None, None)
     led_specs = {k: P() for k in tx.LEDGER_KEYS}
     tel_specs = {k: P(st_ax, None) for k in obs_t.TELEM_KEYS}
-    out_specs = (out_spec, led_specs, tel_specs) if return_telemetry \
-        else (out_spec, led_specs)
+    out_specs_l: list = [out_spec, led_specs]
+    if return_telemetry:
+        out_specs_l.append(tel_specs)
+    if health is not None:
+        out_specs_l.append(P(st_ax, None))
+    out_specs = tuple(out_specs_l)
 
     outs = compat.shard_map(
         body, mesh=topo.mesh,
@@ -273,10 +316,13 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         out_specs=out_specs, axis_names=manual, check_vma=False,
     )(staged["stage_layers"], staged["embed"], staged["final_norm"],
       extra, tokens)
-    if return_telemetry:
-        x_last, ledger, telem = outs
-    else:
-        (x_last, ledger), telem = outs, None
+    outs = list(outs)
+    x_last, ledger = outs[0], outs[1]
+    telem = outs[2] if return_telemetry else None
+    if health is not None:
+        # operand callbacks are legal HERE (outside the manual region):
+        # one host delivery of the full [N, T] non-finite profile
+        jax.debug.callback(health.note_nonfinite_profile, outs[-1])
 
     # final norm + unembed of the single output token (prefill-only)
     from jax.sharding import NamedSharding

@@ -151,7 +151,8 @@ def attend_chunk(ctx: StageCtx, l_idx: jax.Array, q: jax.Array,
     # 3. self block (causal)
     st = backend.self_block(qg, k_new, v_new, ctx.scale, st)
     tel = obs_t.charge(tel, "launches", 1.0, None, _rep(ctx))
-    return attn_finish(st, q.dtype), led, tel
+    att = attn_finish(st, q.dtype)
+    return att, led, tel
 
 
 # --------------------------------------------------------- transformer step

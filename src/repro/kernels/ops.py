@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import contextlib
 import math
+import time
 from functools import partial
 from typing import Optional
 
@@ -43,15 +44,19 @@ def _note_launch(tag: str) -> None:
         return
 
     def _bump():
+        now = time.perf_counter()
         for frame in _LAUNCH_FRAMES:
             frame["count"] += 1
             frame[tag] = frame.get(tag, 0) + 1
+            ev = frame.get("events")
+            if ev is not None:
+                ev.append((tag, now))
 
     jax.debug.callback(_bump)
 
 
 @contextlib.contextmanager
-def count_launches():
+def count_launches(timed: bool = False):
     """Context manager: count Pallas kernel launches executed inside.
 
         with ops.count_launches() as launches:
@@ -65,11 +70,20 @@ def count_launches():
     launched at least once. Contexts nest: every
     active frame counts every launch in its window.
 
+    ``timed=True`` additionally records ``frame["events"]`` — the ordered
+    ``(tag, perf_counter)`` stream — and ``frame["t0"]`` at entry, the raw
+    material for per-kernel-tag span attribution
+    (``obs.profile.kernel_tag_times``). Callers may rebase ``frame["t0"]``
+    right before dispatch to exclude compile time from the first span.
+
     The stack is read at trace time, so the wrappers' jit caches are
     cleared on entry/exit — callers pay a retrace, tests only."""
     jitted = (chunk_attention, pool_attention, pool_attention_paged, ssd,
               decode_attention)
     frame = {"count": 0}
+    if timed:
+        frame["events"] = []
+        frame["t0"] = time.perf_counter()
     for f in jitted:
         f.clear_cache()
     _LAUNCH_FRAMES.append(frame)

@@ -33,7 +33,8 @@ SHAPE_NAMES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
 def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
              out_dir: str, attn_backend: str = "jnp",
              kv_dtype: str = "auto", kv_page_tokens: int = 0,
-             pool_backend: str = "auto", tp_lowering: str = "auto") -> dict:
+             pool_backend: str = "auto", tp_lowering: str = "auto",
+             calibrated_profile: Optional[str] = None) -> dict:
     from repro import compat
     from repro.configs.base import SHAPES, get_config
     from repro.launch.cells import SkipCell, build_cell
@@ -80,6 +81,20 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, mode: str,
         # by tests/test_obs.py
         from repro.obs.telemetry import occupancy_model
         rec["occupancy_model"] = occupancy_model(cell.meta["plan"])
+        if calibrated_profile:
+            # per-(chunk, stage) calibration residuals + how far the
+            # measured profile moved this cell's predicted chunk costs —
+            # recorded NEXT TO wire_model / occupancy_model (obs.calibrate)
+            from repro.core import costmodel as _cm
+            from repro.core import mbkr as _mb
+            from repro.obs import calibrate as _cal
+            plan = cell.meta["plan"]
+            sm = _cm.StageModel.build(get_config(arch), plan.num_stages, 1)
+            mplan = (_mb.plan(plan.num_chunks, plan.num_stages)
+                     if plan.mode == "mocap" else None)
+            rec["calibration"] = _cal.calibration_record(
+                sm, [plan.chunk_len] * plan.num_chunks, _cm.WSC_PAPER,
+                calibrated_profile, mbkr_plan=mplan)
     try:
         with compat.set_mesh(cell.meta.get("mesh", topo.mesh)):
             lowered = cell.lower()
@@ -154,6 +169,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "(repro.kvstore; changes lowered pool bytes)")
     ap.add_argument("--kv-page-tokens", type=int, default=0,
                     help="tokens per KV page (0 = one page per chunk)")
+    ap.add_argument("--calibrated-profile", default=None,
+                    help="calibrated-profile JSON (obs.calibrate / serve "
+                         "--calibrate): records per-(chunk, stage) fit "
+                         "residuals and the nominal-vs-calibrated predicted "
+                         "chunk costs next to wire_model/occupancy_model")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args(argv)
 
@@ -171,13 +191,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.jobs > 1:
         return _run_parallel(cells, args.out, args.jobs, args.attn_backend,
                              args.kv_dtype, args.kv_page_tokens,
-                             args.pool_backend, args.tp_lowering)
+                             args.pool_backend, args.tp_lowering,
+                             args.calibrated_profile)
 
     failures = 0
     for arch, shape, mesh, mode in cells:
         rec = run_cell(arch, shape, mesh, mode, args.out, args.attn_backend,
                        args.kv_dtype, args.kv_page_tokens, args.pool_backend,
-                       args.tp_lowering)
+                       args.tp_lowering, args.calibrated_profile)
         path = save(rec, args.out)
         status = ("SKIP" if rec.get("skipped") else
                   "OK" if rec["ok"] else "FAIL")
@@ -191,7 +212,8 @@ def main(argv: Optional[List[str]] = None) -> int:
 def _run_parallel(cells, out_dir: str, jobs: int,
                   attn_backend: str = "jnp", kv_dtype: str = "auto",
                   kv_page_tokens: int = 0, pool_backend: str = "auto",
-                  tp_lowering: str = "auto") -> int:
+                  tp_lowering: str = "auto",
+                  calibrated_profile: Optional[str] = None) -> int:
     procs: List[Tuple[subprocess.Popen, tuple]] = []
     pending = list(cells)
     failures = 0
@@ -203,6 +225,8 @@ def _run_parallel(cells, out_dir: str, jobs: int,
                "--attn-backend", attn_backend, "--pool-backend", pool_backend,
                "--kv-dtype", kv_dtype, "--tp-lowering", tp_lowering,
                "--kv-page-tokens", str(kv_page_tokens), "--out", out_dir]
+        if calibrated_profile:
+            cmd += ["--calibrated-profile", calibrated_profile]
         return subprocess.Popen(cmd, stdout=subprocess.PIPE,
                                 stderr=subprocess.STDOUT, text=True)
 

@@ -29,6 +29,7 @@ edf); --slo-ms stamps deadlines so EDF and the SLO-attainment metric bite.
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import numpy as np
@@ -164,16 +165,39 @@ def main(argv=None) -> int:
                     help="wrap the run in jax.profiler.trace(dir) — a real "
                          "XLA profile next to the repro.obs timeline "
                          "(jax executor only)")
+    ap.add_argument("--calibrated-profile", default=None,
+                    help="HardwareProfile for planning/admission costs: a "
+                         "registered name (wsc-gr24 | hgx-b200 | tpu-v5e) "
+                         "or a calibrated-profile JSON written by "
+                         "--calibrate (obs.calibrate) — LBCP and SJF/EDF "
+                         "then run on MEASURED effective rates")
+    ap.add_argument("--calibrate", default=None, metavar="OUT",
+                    help="measure per-(stage, tick) wall-clock spans (jax "
+                         "executor only), least-squares fit the effective "
+                         "HardwareProfile rates (obs.calibrate) and write "
+                         "the calibrated-profile JSON to OUT; feed it back "
+                         "with --calibrated-profile")
+    ap.add_argument("--health", action="store_true",
+                    help="arm the runtime health sentinels (obs.health): "
+                         "non-finite activations per stage, telemetry-vs-"
+                         "analytic occupancy drift, SLO burn-rate; alerts "
+                         "land in the metrics export and the merged trace")
     args = ap.parse_args(argv)
+
+    hw = cm.TPU_V5E
+    if args.calibrated_profile:
+        hw = cm.resolve_profile(args.calibrated_profile)
+        print(f"[profile] {args.calibrated_profile} -> {hw.name} "
+              f"(gemm_eff={hw.gemm_eff:.3f} attn_eff={hw.attn_eff:.3f})")
 
     if args.executor == "sim":
         cfg = get_config(args.arch)
-        ec = EngineConfig(model=cfg, hw=cm.TPU_V5E, num_stages=16, tp=16,
+        ec = EngineConfig(model=cfg, hw=hw, num_stages=16, tp=16,
                           num_chunks=16, max_batch=args.max_batch,
                           buckets=(8192, 32768, 131072), partition="lbcp",
                           kv_dtype=args.kv_dtype,
                           kv_page_tokens=args.kv_page_tokens)
-        executor = SimExecutor(cfg, cm.TPU_V5E)
+        executor = SimExecutor(cfg, hw)
     else:
         from repro import compat
         compat.ensure_host_devices()
@@ -206,7 +230,7 @@ def main(argv=None) -> int:
         model = build_model(cfg)
         params = model.init(jax.random.key(args.seed))
         staged = pp.stage_params(cfg, params, plan)
-        ec = EngineConfig(model=cfg, hw=cm.TPU_V5E, num_stages=stages, tp=tp,
+        ec = EngineConfig(model=cfg, hw=hw, num_stages=stages, tp=tp,
                           num_chunks=args.num_chunks, max_batch=args.max_batch,
                           buckets=(args.seq,), partition="uniform",
                           kv_dtype=args.kv_dtype,
@@ -226,6 +250,21 @@ def main(argv=None) -> int:
         # the merged timeline wants the device-side (stage, tick) profile:
         # switch the jit cache to the return_telemetry=True pipeline
         executor.collect_telemetry = True
+    monitor = None
+    if args.health:
+        from repro.obs.health import HealthMonitor
+        monitor = HealthMonitor()
+        # jax: arms the non-finite sentinels at trace time; sim: carried
+        # for the host-side drift/SLO checks + exports
+        executor.health = monitor
+    if args.calibrate:
+        if isinstance(executor, JaxExecutor):
+            executor.collect_measured = True
+        else:
+            print("note: --calibrate measures the jax executor; the sim "
+                  "path IS the analytic model — skipping (the sim-backed "
+                  "calibration leg lives in benchmarks/calibration.py)")
+            args.calibrate = None
 
     from repro.sched import poisson_arrivals
     if args.scheduler == "batch" and args.arrival_rate > 0:
@@ -253,6 +292,39 @@ def main(argv=None) -> int:
             print("note: --profile-dir needs --executor jax; skipping")
         eng.run_until_drained()
     wall = time.time() - t0
+
+    if args.calibrate:
+        meas = [w for w in executor.waves if w.get("measured") is not None]
+        if not meas:
+            print("note: no measured waves; nothing to calibrate")
+        else:
+            from repro.core import mbkr
+            from repro.obs import calibrate as cal
+            w = meas[-1]            # later waves are warm (compile is paid)
+            sm = cm.StageModel.build(cfg, w["num_stages"], ec.tp)
+            mplan = (mbkr.plan(len(w["chunks"]), w["num_stages"])
+                     if not cfg.attn_free else None)
+            fit = cal.fit_profile(sm, w["chunks"], w["measured"], ec.hw,
+                                  mbkr_plan=mplan)
+            cal.save_profile(args.calibrate, fit.profile, fit=fit,
+                             meta={"arch": args.arch, "seq": args.seq,
+                                   "source": "serve"})
+            print(f"[calibrate] {ec.hw.name} -> {fit.profile.name}: span "
+                  f"MAPE {fit.mape_nominal:.3f} -> {fit.mape_calibrated:.3f}"
+                  f" over {len(fit.rows)} spans -> {args.calibrate}")
+    if monitor is not None:
+        if slo is not None and args.scheduler == "continuous":
+            from repro.obs.metrics import Histogram
+            h = Histogram("ttft")
+            for rec in eng.scheduler.metrics.records:
+                if math.isfinite(rec.finish):
+                    h.observe(rec.finish - rec.arrival)
+            monitor.check_slo(h, slo)
+        s = monitor.summary()
+        burn = (f" | burn {s['burn_rate']:.2f}x"
+                if s["burn_rate"] is not None else "")
+        print(f"[health] alerts {s['alerts_total']} {s['by_kind']}{burn}")
+
     m = eng.metrics()
     if args.scheduler == "continuous":
         slo_txt = (f" | SLO {m['slo_met']}/{m['slo_total']}"
@@ -280,7 +352,8 @@ def main(argv=None) -> int:
         if args.metrics_out:
             from repro.obs.metrics import export_engine_metrics
             path = export_engine_metrics(args.metrics_out, m,
-                                         extra={"wall_seconds": wall})
+                                         extra={"wall_seconds": wall},
+                                         health=monitor)
             print(f"metrics -> {path}")
     if args.executor == "jax":
         done = sorted(eng.done, key=lambda r: r.rid)[:3]

@@ -167,11 +167,14 @@ _SUMMARY_COUNTERS = {
 
 def export_engine_metrics(path: str, summary: Mapping[str, Any],
                           records: Optional[Sequence[Any]] = None,
-                          extra: Optional[Mapping[str, float]] = None) -> str:
+                          extra: Optional[Mapping[str, float]] = None,
+                          health=None) -> str:
     """Export an engine metrics summary (``engine.metrics()``) to ``path``.
 
     ``records`` (``sched.metrics.RequestRecord``) feed the TTFT/queue-wait
-    histograms; ``extra`` adds ad-hoc gauges (e.g. wall-clock, wave count).
+    histograms; ``extra`` adds ad-hoc gauges (e.g. wall-clock, wave count);
+    ``health`` (an ``obs.health.HealthMonitor``) adds per-kind alert
+    counters + the SLO burn-rate gauge.
     Format picked from the extension (``.prom`` vs JSON-lines).
     """
     reg = MetricsRegistry()
@@ -196,4 +199,6 @@ def export_engine_metrics(path: str, summary: Mapping[str, Any],
     if extra:
         for key, value in extra.items():
             reg.gauge(_PREFIX + key, f"run stat {key}").set(float(value))
+    if health is not None:
+        health.to_metrics(reg)
     return reg.export(path)

@@ -1,0 +1,192 @@
+"""Measured span attribution: wall-clock per-(stage, tick) spans for the
+pipeline scan, aligned index-for-index with the device ``TelemetryProfile``
+(DESIGN.md §9).
+
+The pipeline's tick body accepts a ``tick_hook`` (``core.pipeline``): a
+ZERO-ARG host callback fired via ``jax.debug.callback(hook)`` at the end of
+every tick. It carries no operands because this jaxlib's SPMD partitioner
+rejects operand-carrying callbacks inside the manual shard_map region — so
+tick identity is recovered host-side from ARRIVAL ORDER (``jax.lax.scan``
+runs ticks strictly in order, and debug-callback delivery preserves program
+order per dispatch). ``TickSpanCollector`` timestamps the firings;
+``finalize`` turns the stream into a ``MeasuredProfile`` whose ``tick_s``
+``[N, T]`` array uses the SAME stage-major / ``T = M + N - 1`` layout and
+``0 <= phase < M`` validity convention as the telemetry profiles — so a
+measured span, its analytic twin, and the device counters all index the
+same way, and the calibration design matrix (``obs.calibrate``) is a zip.
+
+Measurement semantics, stated honestly:
+
+- Ticks are SPMD-lockstep, so the measurable quantity is the per-tick
+  wall-clock span, SHARED by every stage active that tick. ``finalize``
+  broadcasts each tick's span into the valid (stage, tick) cells; it does
+  NOT partition a tick's time between its stages (that attribution lives in
+  the per-kernel-tag stream below and the analytic split of the fit).
+- A tick span is the delta between consecutive tick arrivals; tick 0
+  additionally carries dispatch overhead from the collector's epoch (reset
+  right before launch). Callers warm up first so compile time is out.
+- Debug callbacks flush asynchronously under real (TPU) dispatch —
+  ``jax.effects_barrier()`` orders them before ``finalize`` reads.
+- A tick may fire the beacon more than once (one per participating
+  dispatch); ``finalize`` order-groups the sorted timestamps into
+  ``num_ticks`` groups and keeps each group's LAST arrival — the straggler
+  defines the span, as it defines the pipeline's critical path.
+
+Per-kernel-tag attribution rides the existing ``ops.count_launches`` frame
+stack: ``count_launches(timed=True)`` records the ordered
+``(tag, perf_counter)`` event stream, and ``kernel_tag_times`` charges each
+inter-event delta to the tag of the LATER event — the kernel whose
+completion the callback marks.
+
+Import-light: stdlib + numpy at import; jax only inside ``measure_prefill``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class MeasuredProfile:
+    """Wall-clock twin of ``TelemetryProfile``: ``tick_s [N, T]`` seconds
+    per (stage, tick), plus optional per-kernel-tag totals."""
+    tick_s: np.ndarray
+    kernel_s: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def stages(self) -> int:
+        return self.tick_s.shape[0]
+
+    @property
+    def ticks(self) -> int:
+        return self.tick_s.shape[1]
+
+    def valid(self, num_chunks: int) -> np.ndarray:
+        """Boolean [N, T]: True where ``0 <= tick - stage < M`` — the spans
+        that carry a real chunk (the telemetry validity convention); the
+        rest is fill/drain bubble."""
+        n, t_all = self.tick_s.shape
+        ph = np.arange(t_all)[None, :] - np.arange(n)[:, None]
+        return (ph >= 0) & (ph < num_chunks)
+
+    def total(self) -> float:
+        """End-to-end measured scan seconds (ticks are lockstep: the
+        per-tick maximum over stages, summed)."""
+        return float(self.tick_s.max(axis=0).sum())
+
+    def to_dict(self) -> Dict:
+        return {"tick_s": [[float(v) for v in row] for row in self.tick_s],
+                "kernel_s": {k: float(v) for k, v in self.kernel_s.items()}}
+
+
+class TickSpanCollector:
+    """Host-side sink for the pipeline's ``tick_hook``. Pass ``col.note``
+    as the hook; ``reset`` right before the timed dispatch; ``finalize``
+    after ``jax.effects_barrier()``."""
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self.epoch = time.perf_counter()
+        self.events: List[float] = []
+
+    def note(self) -> None:
+        self.events.append(time.perf_counter())
+
+    def finalize(self, num_stages: int, num_ticks: int, *,
+                 kernel_s: Optional[Dict[str, float]] = None
+                 ) -> MeasuredProfile:
+        """Collapse the timestamp stream into ``tick_s [N, T]``: order-group
+        the sorted arrivals into ``num_ticks`` groups (a tick may beacon
+        once per participating dispatch), keep each group's LAST arrival,
+        difference consecutive group arrivals (tick 0 against the epoch),
+        and broadcast each tick's span into its VALID (stage, tick) cells
+        (``0 <= tick - stage < M``). A tick that never fired gets a zero
+        span; bubble cells stay zero."""
+        ts = sorted(self.events)
+        arrive = np.full(num_ticks, np.nan)
+        if ts:
+            k = max(1, int(round(len(ts) / num_ticks)))
+            for t in range(num_ticks):
+                lo = t * k
+                if lo >= len(ts):
+                    break
+                hi = len(ts) if t == num_ticks - 1 else min((t + 1) * k,
+                                                            len(ts))
+                arrive[t] = ts[hi - 1]
+        m = num_ticks - num_stages + 1  # num_chunks under T = M + N - 1
+        tick_s = np.zeros((num_stages, num_ticks))
+        prev = self.epoch
+        for t in range(num_ticks):
+            cur = arrive[t]
+            if np.isnan(cur):
+                cur = prev
+            span = max(cur - prev, 0.0)
+            prev = cur
+            s_lo = max(0, t - m + 1)
+            s_hi = min(num_stages - 1, t)
+            tick_s[s_lo:s_hi + 1, t] = span
+        return MeasuredProfile(tick_s=tick_s, kernel_s=dict(kernel_s or {}))
+
+
+def kernel_tag_times(frame: Dict) -> Dict[str, float]:
+    """Per-kernel-tag wall-clock totals from a ``count_launches(timed=True)``
+    frame: each inter-event delta is charged to the tag of the LATER event
+    (the kernel whose completion the callback marks); the first event's
+    delta runs from ``frame["t0"]``."""
+    events = frame.get("events") or []
+    out: Dict[str, float] = {}
+    prev = float(frame.get("t0", events[0][1] if events else 0.0))
+    for tag, ts in events:
+        out[tag] = out.get(tag, 0.0) + max(ts - prev, 0.0)
+        prev = ts
+    return out
+
+
+def measure_prefill(cfg, staged, tokens, plan, topo, *, embeds=None,
+                    warmup: int = 1, timed_kernels: bool = False):
+    """Timed replay of the tick loop: run ``prefill_pipeline`` with a
+    ``tick_hook`` and return ``(logits, MeasuredProfile)``.
+
+    ``warmup`` un-timed runs absorb compile; ``timed_kernels=True`` nests
+    the run in ``ops.count_launches(timed=True)`` (tests-only cost: the
+    kernel wrappers retrace) and attaches per-tag totals.
+    """
+    import jax
+
+    from repro.core import pipeline as pl
+
+    col = TickSpanCollector()
+
+    def run():
+        return pl.prefill_pipeline(cfg, staged, tokens, plan, topo,
+                                   embeds=embeds, tick_hook=col.note)
+
+    fn = jax.jit(run)
+    for _ in range(max(int(warmup), 0)):
+        jax.block_until_ready(fn())
+        jax.effects_barrier()
+
+    kernel_s: Dict[str, float] = {}
+    if timed_kernels:
+        from repro.kernels import ops
+        with ops.count_launches(timed=True) as frame:
+            # a FRESH function object: jit caches by identity, so reusing
+            # ``run`` would replay the warmup trace and skip the (cleared)
+            # kernel wrappers' launch-note retrace inside the frame
+            compiled = jax.jit(lambda: run()).lower().compile()
+            col.reset()
+            frame["t0"] = time.perf_counter()
+            logits = jax.block_until_ready(compiled())
+            jax.effects_barrier()
+        kernel_s = kernel_tag_times(frame)
+    else:
+        col.reset()
+        logits = jax.block_until_ready(fn())
+        jax.effects_barrier()
+    return logits, col.finalize(plan.num_stages, plan.num_ticks,
+                                kernel_s=kernel_s)

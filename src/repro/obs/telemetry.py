@@ -137,6 +137,12 @@ def charge_tick_residency(tel: StageTelemetry, ctx,
 
 # ===================================================== host-side analytics
 
+def safe_ratio(num: float, den: float) -> float:
+    """``num / den`` with an all-empty guard: 0.0 when the denominator is 0
+    (an empty profile is perfectly balanced / has zero drift, not NaN).
+    Shared by ``TelemetryProfile.skew`` and the health drift sentinels."""
+    return 0.0 if den == 0.0 else float(num) / float(den)
+
 def analytic_occupancy(m: int, n: int, p2: int, *, mode: str = "mocap",
                        ticks: Optional[int] = None):
     """Closed-form LIVE occupancy twin of the device telemetry: ``(own,
@@ -233,10 +239,13 @@ class TelemetryProfile:
         return float(self.per_stage_peak(key).max())
 
     def skew(self, key: str = "kv_bytes") -> float:
-        """Max per-stage peak minus min per-stage peak — the cross-stage
-        imbalance MBKR narrows (0 = perfectly balanced peaks)."""
+        """Normalized cross-stage peak imbalance ``(max - min) / max`` — the
+        spread MBKR narrows (0 = perfectly balanced peaks). An ALL-EMPTY key
+        (every per-stage peak 0, e.g. kv_bytes on an attention-free run)
+        returns 0.0 instead of dividing by zero: no residency means no
+        imbalance."""
         pk = self.per_stage_peak(key)
-        return float(pk.max() - pk.min())
+        return safe_ratio(float(pk.max() - pk.min()), float(pk.max()))
 
     def totals(self) -> Dict[str, float]:
         """Final cumulative value per key, summed over stages (counters like

@@ -154,16 +154,30 @@ class JaxExecutor:
     executor construction, the [N, T] StageTelemetry profile, and the
     per-event wire prices — ``ContinuousEngine.merged_trace`` turns these
     into engine wave spans, per-stage tick spans and KV/wire counter
-    tracks. Off by default: the compiled program is the plain pipeline."""
+    tracks. Off by default: the compiled program is the plain pipeline.
+
+    ``collect_measured`` additionally arms the pipeline's ``tick_hook``
+    (``obs.profile.TickSpanCollector``) and lands a measured per-(stage,
+    tick) wall-clock span array in ``wave["measured"]`` — the calibration
+    input (``obs.calibrate.fit_profile``). The first wave at a given key
+    includes compile in tick 0; calibrate against a repeat wave.
+
+    ``health`` (an ``obs.health.HealthMonitor``) arms the non-finite
+    sentinels in the pipeline and, when telemetry is also on, runs the
+    occupancy-drift check against each wave. Attach BEFORE the first run
+    at a given shape — the monitor is captured at trace time."""
 
     def __init__(self, cfg: ModelConfig, staged_params, topo, run: RunConfig):
         import time
         from repro.core import pipeline as pp
         self.cfg, self.topo, self.run_cfg = cfg, topo, run
         self.staged = staged_params
-        self._fns: Dict[Tuple[int, int, bool], Tuple[Callable, Any]] = {}
+        self._fns: Dict[Tuple, Tuple[Callable, Any]] = {}
         self._pp = pp
         self.collect_telemetry = False
+        self.collect_measured = False
+        self.health = None
+        self._span_col = None
         self.waves: List[Dict[str, Any]] = []
         self._epoch = time.perf_counter()
 
@@ -173,18 +187,29 @@ class JaxExecutor:
         import jax
         seq = int(sum(chunks))
         collect = bool(self.collect_telemetry)
-        key = (seq, len(chunks), collect)
+        measured = bool(self.collect_measured)
+        health = self.health
+        key = (seq, len(chunks), collect, measured, health is not None)
         if key not in self._fns:
             plan = self._pp.build_plan(
                 self.cfg, num_stages, seq,
                 dc_replace(self.run_cfg, num_chunks=len(chunks)))
             cfg, topo = self.cfg, self.topo
+            hook = None
+            if measured:
+                if self._span_col is None:
+                    from repro.obs.profile import TickSpanCollector
+                    self._span_col = TickSpanCollector()
+                hook = self._span_col.note
             fn = jax.jit(lambda st, tk: self._pp.prefill_pipeline(
-                cfg, st, tk, plan, topo, return_telemetry=collect))
+                cfg, st, tk, plan, topo, return_telemetry=collect,
+                tick_hook=hook, health=health))
             self._fns[key] = (fn, plan)
         fn, plan = self._fns[key]
         toks = np.stack([np.pad(r.tokens, (0, seq - len(r.tokens)))
                          for r in requests]).astype(np.int32)
+        if measured and self._span_col is not None:
+            self._span_col.reset()
         t0 = time.perf_counter()
         with jax.profiler.TraceAnnotation(
                 f"prefill_wave seq{seq} b{len(requests)}"):
@@ -194,6 +219,8 @@ class JaxExecutor:
                 out, tel = fn(self.staged, toks), None
             out.block_until_ready()
         dt = time.perf_counter() - t0
+        if measured or health is not None:
+            jax.effects_barrier()    # order debug callbacks before the reads
         for r, row in zip(requests, np.asarray(out)):
             r.result = row
         wave: Dict[str, Any] = {
@@ -201,11 +228,16 @@ class JaxExecutor:
             "num_ticks": int(plan.num_ticks), "num_stages": num_stages,
             "chunks": list(chunks), "rids": [r.rid for r in requests],
         }
+        if measured and self._span_col is not None:
+            wave["measured"] = self._span_col.finalize(
+                num_stages, int(plan.num_ticks)).tick_s
         if tel is not None:
             from repro.obs import telemetry as obs_t
             wave["telemetry"] = {k: np.asarray(v) for k, v in tel.items()}
             wave["per_event_wire"] = obs_t.per_event_wire_bytes(
                 plan, self.cfg, len(requests))
+            if health is not None:
+                health.check_occupancy(wave["telemetry"], plan)
         self.waves.append(wave)
         return dt, np.full(num_stages, dt / max(len(chunks), 1))
 
@@ -512,6 +544,25 @@ class ContinuousEngine:
             self.executor.run([sr.payload for sr in wave], chunks,
                               self.ec.num_stages, self.ec.tp)
 
+    # -------------------------------------------------------- calibration
+    def recalibrate(self, hw: cm.ProfileSpec) -> cm.HardwareProfile:
+        """Swap the engine onto a CALIBRATED profile (a ``HardwareProfile``,
+        a registered name, or a path written by
+        ``obs.calibrate.save_profile``): replaces ``EngineConfig.hw``, drops
+        the cached bucket plans, and rebases the scheduler's admission costs
+        via ``ChunkScheduler.rebase_costs`` — already-admitted requests keep
+        their schedule; only future candidates see measured rates. A
+        ``SimExecutor`` also re-prices execution."""
+        hw = cm.resolve_profile(hw)
+        self.ec = dc_replace(self.ec, hw=hw)
+        self._sm = cm.StageModel.build(self.ec.model, self.ec.num_stages,
+                                       self.ec.tp)
+        self._plans.clear()
+        self.scheduler.rebase_costs(self._chunk_plan)
+        if isinstance(self.executor, SimExecutor):
+            self.executor.hw = hw
+        return hw
+
     # ----------------------------------------------------------- metrics
     @property
     def clock(self) -> float:
@@ -534,7 +585,12 @@ class ContinuousEngine:
           event counts with the analytic per-event wire bytes,
         - engine wave spans + per-(stage, tick) device spans and
           ``kv_resident_bytes`` tracks from JaxExecutor telemetry waves
-          (wall clock since executor construction, pid = "engine").
+          (wall clock since executor construction, pid = "engine"),
+        - MEASURED per-(stage, tick) wall-clock spans (``wave["measured"]``
+          from ``collect_measured``) on their own ``measured`` process row
+          next to the analytic tracks,
+        - health-sentinel alerts (``executor.health``) on a ``health``
+          process row.
 
         Pure: builds a fresh recorder each call; safe to export repeatedly.
         """
@@ -592,20 +648,48 @@ class ContinuousEngine:
                                 values={f"w{wi}": float(kv[s, t])})
                     rec.counter("device_wire_bytes", pid=s, time=ts,
                                 values={f"w{wi}": float(wire[s, t])})
+        # measured wall-clock spans: one process row, one thread per stage;
+        # per-stage span starts are the cumulative measured tick durations
+        if any(w.get("measured") is not None for w in waves):
+            rec.process_name("measured", "measured spans (wall clock)")
+        for wi, w in enumerate(waves):
+            ms = w.get("measured")
+            if ms is None:
+                continue
+            for s in range(ms.shape[0]):
+                cursor = w["start"]
+                for t in range(ms.shape[1]):
+                    d = float(ms[s, t])
+                    phase = t - s
+                    if 0 <= phase < len(w["chunks"]) and d > 0:
+                        rec.span(f"tick{t} c{phase}", pid="measured", tid=s,
+                                 start=cursor, finish=cursor + d,
+                                 cat="measured",
+                                 args={"stage": s, "chunk": phase,
+                                       "wave": wi})
+                    cursor += d
+        health = getattr(self.executor, "health", None)
+        if health is not None:
+            health.to_trace(rec)
         return rec
 
     def export_obs(self, trace_out: Optional[str] = None,
                    metrics_out: Optional[str] = None,
-                   extra: Optional[Dict[str, float]] = None
-                   ) -> Dict[str, str]:
+                   extra: Optional[Dict[str, float]] = None,
+                   health=None) -> Dict[str, str]:
         """Export the merged trace and/or the metrics summary (both atomic);
-        returns {"trace": path, "metrics": path} for whichever was asked."""
+        returns {"trace": path, "metrics": path} for whichever was asked.
+        ``health`` (default: the executor's attached monitor) adds the
+        per-kind alert counters and burn-rate gauge to the metrics."""
         paths: Dict[str, str] = {}
+        if health is None:
+            health = getattr(self.executor, "health", None)
         if trace_out:
             paths["trace"] = self.merged_trace().export(trace_out)
         if metrics_out:
             from repro.obs.metrics import export_engine_metrics
             paths["metrics"] = export_engine_metrics(
                 metrics_out, self.metrics(),
-                records=self.scheduler.metrics.records, extra=extra)
+                records=self.scheduler.metrics.records, extra=extra,
+                health=health)
         return paths

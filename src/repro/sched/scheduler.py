@@ -67,7 +67,7 @@ class ChunkPlan:
 
     @staticmethod
     def build(bucket: int, chunks: Sequence[int], sm: cm.StageModel,
-              hw: cm.HardwareProfile, *, mbkr_plan: Optional[mb.MBKRPlan] = None,
+              hw: cm.ProfileSpec, *, mbkr_plan: Optional[mb.MBKRPlan] = None,
               compress: float = 1.0) -> "ChunkPlan":
         dur, comm, kvb, spill_t, fetch_t = cm.chunk_cost_arrays(
             sm, chunks, hw, mbkr_plan=mbkr_plan, compress=compress)
@@ -178,6 +178,15 @@ class ChunkScheduler:
     def submit(self, req: SchedRequest) -> None:
         self.requests.append(req)
         self.trace.mark(req.rid, "arrival", req.arrival)
+
+    def rebase_costs(self, plan_for: Callable[[int], ChunkPlan]) -> None:
+        """Swap the admission cost source — e.g. nominal -> CALIBRATED
+        profile once ``obs.calibrate`` lands a fit. Already-admitted
+        requests, the per-stage busy frontier, and live KV leases are
+        untouched; only FUTURE candidates are policy-keyed and scheduled
+        with the new cost vectors, so a mid-stream recalibration never
+        reorders history (asserted in tests/test_calibration.py)."""
+        self.plan_for = plan_for
 
     # ------------------------------------------------------------ running
     def _try_admit(self, r: SchedRequest, release: float) -> bool:

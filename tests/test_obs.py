@@ -87,6 +87,30 @@ def test_chunk_stored_bytes_matches_kvlease_accounting():
         assert np.isclose(dev, sched, rtol=1e-9), (kv_dtype, dev, sched)
 
 
+def test_skew_all_empty_key_is_zero():
+    """Regression (ISSUE 8 satellite): ``skew`` on an all-empty key — every
+    per-stage peak 0, e.g. ``kv_bytes`` on an attention-free run — must
+    return 0.0, not divide by zero (it previously returned nan and poisoned
+    downstream comparisons)."""
+    from repro.obs.telemetry import TelemetryProfile, safe_ratio
+    zeros = np.zeros((4, 7))
+    prof = TelemetryProfile({"own_chunks": zeros, "hosted_chunks": zeros,
+                             "kv_bytes": zeros})
+    assert prof.skew("kv_bytes") == 0.0
+    assert prof.skew() == 0.0
+    # nonzero keys keep the (max - min) / max definition
+    kv = np.zeros((4, 7))
+    kv[0, :] = 4.0
+    kv[1:, :] = 1.0
+    prof2 = TelemetryProfile({"own_chunks": zeros, "hosted_chunks": zeros,
+                              "kv_bytes": kv})
+    assert prof2.skew("kv_bytes") == pytest.approx((4.0 - 1.0) / 4.0)
+    # the underlying helper: 0/0 -> 0.0, x/0 -> 0.0, normal division intact
+    assert safe_ratio(0.0, 0.0) == 0.0
+    assert safe_ratio(3.0, 0.0) == 0.0
+    assert safe_ratio(3.0, 4.0) == pytest.approx(0.75)
+
+
 # ------------------------------------------------ device telemetry (8 chips)
 
 SNIPPET_TELEMETRY = """
