@@ -121,7 +121,7 @@ def health_overhead(arch: str = "llama3-70b", bucket: int = 32768, *,
                       sa_iters=sa_iters)
 
     def run():
-        eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw), policy="fcfs")
+        eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw))
         for i in range(8):
             eng.submit(Request(rid=i, arrival=0.0, seq_len=bucket))
         t0 = time.perf_counter()

@@ -110,6 +110,18 @@ SPECS: Dict[str, Dict[str, Any]] = {
                 # bare engine — the repro.obs "near-free" contract
                 "telem_overhead": ("high", 0.0, 0.05),
             }),
+            # fleet router vs round-robin over a heterogeneous 2-cell pair:
+            # everything is seeded Poisson + analytic cost model, so the
+            # acceptance bit (jsf strictly beats rr on p99 TTFT at equal
+            # offered load) gates EXACTLY, and the deterministic p99s get
+            # tight relative guards
+            ("fleet", lambda b: b.get("fleet", []), ("arch", "seq", "rate"), {
+                "router_beats_rr": ("low", 0.0, 0.0),
+                "p99_advantage": ("low", 0.05, 0.0),
+                "jsf_p99_ttft": ("high", 0.05, 1e-4),
+                "jsf_slo_attainment": ("low", 0.0, 0.0),
+                "jsf_completed": ("low", 0.0, 0.0),
+            }),
         ],
     },
     "calibration": {

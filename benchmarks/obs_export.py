@@ -44,11 +44,12 @@ def run(quick: bool = False) -> None:
     cfg = get_config(ARCH)
     ec = EngineConfig(model=cfg, hw=cm.WSC_PAPER, num_stages=16, tp=1,
                       num_chunks=16, max_batch=4, buckets=(8192, 32768),
-                      partition="lbcp", sa_iters=8 if quick else 24)
+                      partition="lbcp", sa_iters=8 if quick else 24,
+                      policy="edf", slo=5.0, trace=True)
     executor = SimExecutor(cfg, ec.hw)
     monitor = HealthMonitor()
-    executor.health = monitor   # merged_trace/export_obs pick it up
-    eng = ContinuousEngine(ec, executor, policy="edf", slo=5.0, trace=True)
+    eng = ContinuousEngine(ec, executor)
+    eng.configure_obs(health=monitor)   # merged_trace/export_obs pick it up
     rng = np.random.default_rng(0)
     n_req = 6 if quick else 12
     for i in range(n_req):
@@ -60,7 +61,7 @@ def run(quick: bool = False) -> None:
     # surface: an impossible SLO trips slo_burn, a drifted ledger trips
     # ledger_drift (both deterministic for the seeded arrivals)
     ttft = MetricsRegistry().histogram("ttft")
-    for r in eng.scheduler.metrics.records:
+    for r in eng.records():
         if np.isfinite(r.finish):
             ttft.observe(r.finish - r.arrival)
     monitor.check_slo(ttft, slo_s=1e-6)

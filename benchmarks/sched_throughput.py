@@ -14,6 +14,7 @@ import argparse
 import json
 import os
 import time
+from dataclasses import replace as dc_replace
 
 from benchmarks.common import OUT_DIR, emit, table
 from repro.configs.base import get_config
@@ -41,7 +42,8 @@ def run_pair(arch: str, bucket: int, *, sa_iters: int = 24,
     batch.run_until_drained()
     mb = batch.metrics()
 
-    cont = ContinuousEngine(ec, SimExecutor(cfg, ec.hw), policy=policy)
+    cont = ContinuousEngine(dc_replace(ec, policy=policy),
+                            SimExecutor(cfg, ec.hw))
     for i in range(NUM_REQUESTS):
         cont.submit(Request(rid=i, arrival=0.0, seq_len=bucket))
     cont.run_until_drained()
@@ -78,8 +80,8 @@ def telem_overhead(arch: str = "llama3-70b", bucket: int = 32768, *,
                       buckets=(bucket,), partition="lbcp", sa_iters=sa_iters)
 
     def run(obs: bool):
-        eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw), policy="fcfs",
-                               trace=obs)
+        eng = ContinuousEngine(dc_replace(ec, trace=obs),
+                               SimExecutor(cfg, ec.hw))
         for i in range(NUM_REQUESTS):
             eng.submit(Request(rid=i, arrival=0.0, seq_len=bucket))
         t0 = time.perf_counter()
@@ -110,6 +112,67 @@ def telem_overhead(arch: str = "llama3-70b", bucket: int = 32768, *,
     return 1.0 + (t_record + t_merge) / max(t_run, 1e-9)
 
 
+def fleet_pair(arch: str, bucket: int, rate: float, *, n_req: int = 24,
+               slo_s: float = 0.6, sa_iters: int = 8, seed: int = 0):
+    """Lease/cost-aware routing (jsf) vs round-robin over a heterogeneous
+    2-cell fleet at EQUAL offered load — the ISSUE 9 acceptance row.
+
+    Two sim cells: a FAST cell on the paper profile and a DEGRADED cell at
+    ~0.55x gemm/attn efficiency (a straggling or thermally-capped block).
+    Both routers see the IDENTICAL seeded Poisson stream; everything
+    downstream is the analytic cost model on a virtual clock, so the p99
+    advantage is deterministic and gets an exact >=-0 gate
+    (``router_beats_rr``) in benchmarks/compare.py."""
+    from repro.fleet import FleetFabric, FleetRouter
+    from repro.sched import poisson_arrivals
+    cfg = get_config(arch)
+    slow_hw = dc_replace(cm.WSC_PAPER, name="wsc-degraded",
+                         gemm_eff=cm.WSC_PAPER.gemm_eff * 0.55,
+                         attn_eff=cm.WSC_PAPER.attn_eff * 0.55)
+
+    def build_cells():
+        cells = {}
+        for name, hw in (("fast", cm.WSC_PAPER), ("degraded", slow_hw)):
+            ec = EngineConfig(model=cfg, hw=hw, num_stages=NUM_STAGES, tp=1,
+                              num_chunks=NUM_CHUNKS, max_batch=NUM_REQUESTS,
+                              buckets=(bucket,), partition="lbcp",
+                              sa_iters=sa_iters, slo=slo_s)
+            cells[name] = ContinuousEngine(ec, SimExecutor(cfg, hw))
+        return cells
+
+    arrivals = poisson_arrivals(rate, n_req, seed=seed)
+    out = {}
+    for policy in ("jsf", "rr"):
+        fab = FleetFabric(build_cells(), FleetRouter(policy))
+        for i, t in enumerate(arrivals):
+            fab.submit(Request(rid=i, arrival=float(t), seq_len=bucket))
+        fab.pump()
+        out[policy] = fab.metrics()
+    return out
+
+
+def run_fleet_rows(quick: bool = False):
+    rows = []
+    sa = 8 if quick else 24
+    for arch, bucket, rate in (("llama3-70b", 32768, 4.0),
+                               ("llama3-70b", 32768, 6.0)):
+        m = fleet_pair(arch, bucket, rate, sa_iters=sa)
+        jsf, rr = m["jsf"], m["rr"]
+        rows.append({
+            "arch": arch,
+            "seq": bucket,
+            "rate": rate,
+            "jsf_p99_ttft": jsf["p99_ttft"],
+            "rr_p99_ttft": rr["p99_ttft"],
+            "p99_advantage": rr["p99_ttft"] / max(jsf["p99_ttft"], 1e-12),
+            "router_beats_rr": int(jsf["p99_ttft"] < rr["p99_ttft"]),
+            "jsf_slo_attainment": jsf["slo_attainment"],
+            "rr_slo_attainment": rr["slo_attainment"],
+            "jsf_completed": jsf["completed"],
+        })
+    return rows
+
+
 def main(quick: bool = False) -> None:
     overhead = round(telem_overhead(sa_iters=8 if quick else 24), 3)
     rows = []
@@ -133,18 +196,26 @@ def main(quick: bool = False) -> None:
                        "lease_refusals", "telem_overhead"]))
     path = emit("sched_throughput", rows)
     print(f"csv -> {path}")
+    fleet_rows = run_fleet_rows(quick)
+    print(table(fleet_rows, ["arch", "seq", "rate", "jsf_p99_ttft",
+                             "rr_p99_ttft", "p99_advantage",
+                             "router_beats_rr", "jsf_slo_attainment",
+                             "rr_slo_attainment"]))
     worst = min(r["speedup"] for r in rows)
     # JSON twin of the CSV so the bench-regression gate (benchmarks.compare)
     # can diff it against the committed BENCH_sched.json baseline
     jpath = os.path.join(OUT_DIR, "sched_throughput.json")
     with open(jpath, "w") as f:
         json.dump({"quick": quick, "min_speedup": round(worst, 3),
-                   "rows": rows}, f, indent=1)
+                   "rows": rows, "fleet": fleet_rows}, f, indent=1)
     print(f"-> {jpath}")
     print(f"min speedup across sweep: {worst:.2f}x "
           f"({'PASS' if worst >= 1.5 else 'BELOW'} the 1.5x floor)")
     print(f"obs overhead (trace on / off): {overhead:.3f}x "
           f"({'PASS' if overhead <= 1.05 else 'ABOVE'} the 1.05x ceiling)")
+    adv = min(r["p99_advantage"] for r in fleet_rows)
+    print(f"fleet router p99-TTFT advantage over round-robin: {adv:.2f}x "
+          f"({'PASS' if adv > 1.0 else 'BELOW'} the >1x floor)")
 
 
 if __name__ == "__main__":

@@ -29,9 +29,9 @@ def build(policy: str, slo: float, trace: bool = False):
     cfg = get_config("llama3-70b")
     ec = EngineConfig(model=cfg, hw=cm.WSC_PAPER, num_stages=16, tp=1,
                       num_chunks=16, max_batch=4, partition="uniform",
-                      buckets=(16384, 65536, 131072))
-    return ec, ContinuousEngine(ec, SimExecutor(cfg, ec.hw), policy=policy,
-                                slo=slo, trace=trace)
+                      buckets=(16384, 65536, 131072),
+                      policy=policy, slo=slo, trace=trace)
+    return ec, ContinuousEngine(ec, SimExecutor(cfg, ec.hw))
 
 
 def main():

@@ -1,0 +1,78 @@
+"""Placement signals and scoring for the fleet router.
+
+Every policy reduces to: read one ``CellSignals`` snapshot per candidate
+cell (through the ``CellHandle`` protocol only), score the candidates,
+pick the minimum. Scores are (primary, tiebreak...) tuples so policies
+stay deterministic under ties — ties always break toward the lower cell
+index, which is what makes ``rr`` vs ``jsf`` comparisons reproducible.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class CellSignals:
+    """One router-visible snapshot of a cell, taken at placement time.
+
+    ``eta`` is the cell's own quote for the candidate request
+    (``CellHandle.estimate_admission``): predicted finish time on ITS cost
+    vectors, with a lease-wait penalty already folded in when the KV lease
+    does not fit now. ``lease_fits`` says whether the quote required
+    deferring behind an existing lease. ``free_lease_bytes`` is the
+    tightest per-stage KV headroom; ``queue_depth`` the live request count.
+    """
+    name: str
+    index: int
+    eta: float
+    lease_fits: bool
+    free_lease_bytes: float
+    queue_depth: int
+    draining: bool = False
+
+
+def snapshot(name: str, index: int, cell: Any, seq_len: int,
+             arrival: float = 0.0) -> CellSignals:
+    """Read a cell's placement signals through the CellHandle protocol."""
+    eta, fits = cell.estimate_admission(seq_len, arrival=arrival)
+    return CellSignals(
+        name=name, index=index, eta=float(eta), lease_fits=bool(fits),
+        free_lease_bytes=float(cell.free_lease_bytes()),
+        queue_depth=int(cell.queue_depth()),
+        draining=bool(cell.draining))
+
+
+# ------------------------------------------------------------------ scoring
+
+def _score_jsf(s: CellSignals) -> Tuple:
+    # earliest predicted finish; prefer a cell whose lease fits NOW over an
+    # equal-ETA cell that had to defer; then headroom, then index
+    return (s.eta, 0 if s.lease_fits else 1,
+            -s.free_lease_bytes, s.index)
+
+
+def _score_least_loaded(s: CellSignals) -> Tuple:
+    return (s.queue_depth, -s.free_lease_bytes, s.index)
+
+
+ROUTER_POLICIES: Tuple[str, ...] = ("jsf", "rr", "least-loaded")
+
+_SCORERS = {"jsf": _score_jsf, "least-loaded": _score_least_loaded}
+
+
+def score_cells(policy: str, signals: Sequence[CellSignals]
+                ) -> List[Tuple[Tuple, CellSignals]]:
+    """(score, signals) per non-draining candidate, best (lowest) first.
+
+    ``rr`` has no score — the router owns its rotation counter — so asking
+    for it here is a programming error, as is an unknown policy.
+    """
+    if policy not in _SCORERS:
+        raise ValueError(
+            f"unknown scoring policy {policy!r}; expected one of "
+            f"{sorted(_SCORERS)} (rr is handled by the router's rotation)")
+    fn = _SCORERS[policy]
+    live = [s for s in signals if not s.draining]
+    return sorted(((fn(s), s) for s in live), key=lambda p: p[0])

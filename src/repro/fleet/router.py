@@ -1,0 +1,61 @@
+"""Fleet router: pick the serving cell for each arriving request.
+
+The router is PURE POLICY — it never mutates a cell. It reads one
+``CellSignals`` snapshot per candidate (through the ``CellHandle``
+protocol) and returns a ``PlacementDecision``; the fabric does the actual
+``submit`` and pumps the chosen cell so the next placement sees fresh
+frontiers. Draining cells are never candidates under any policy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+from repro.fleet.placement import (CellSignals, ROUTER_POLICIES, score_cells,
+                                   snapshot)
+
+
+@dataclass(frozen=True)
+class PlacementDecision:
+    rid: int
+    cell: str
+    policy: str
+    eta: float                      # chosen cell's quoted finish (jsf) / nan
+    signals: Tuple[CellSignals, ...]   # every candidate consulted
+
+
+class FleetRouter:
+    """Stateless scoring + one rotation counter (for ``rr``).
+
+    ``place`` raises ``RuntimeError`` when every cell is draining — the
+    fleet has stopped admitting; callers surface that as a rejection.
+    """
+
+    def __init__(self, policy: str = "jsf"):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(f"unknown router policy {policy!r}; expected "
+                             f"one of {list(ROUTER_POLICIES)}")
+        self.policy = policy
+        self.decisions: List[PlacementDecision] = []
+        self._rr = 0
+
+    def place(self, cells: Mapping[str, Any], rid: int, seq_len: int,
+              arrival: float = 0.0) -> PlacementDecision:
+        """Choose the cell for one request. ``cells`` maps name -> CellHandle
+        in a stable order (insertion order drives rr rotation and
+        tie-breaks)."""
+        sigs = tuple(snapshot(name, i, cell, seq_len, arrival)
+                     for i, (name, cell) in enumerate(cells.items()))
+        live = [s for s in sigs if not s.draining]
+        if not live:
+            raise RuntimeError(
+                "all fleet cells are draining: admission is closed")
+        if self.policy == "rr":
+            chosen = live[self._rr % len(live)]
+            self._rr += 1
+        else:
+            chosen = score_cells(self.policy, sigs)[0][1]
+        dec = PlacementDecision(rid=rid, cell=chosen.name, policy=self.policy,
+                                eta=chosen.eta, signals=sigs)
+        self.decisions.append(dec)
+        return dec

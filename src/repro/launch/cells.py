@@ -33,6 +33,35 @@ from repro.train.step import make_train_step, train_state_specs
 PREFILL_MODES = ("mocap", "terapipe", "gpipe", "baseline_tp")
 
 
+def enumerate_cell_meshes(n_cells: int, num_stages: int, tp: int,
+                          devices=None) -> Tuple[Topology, ...]:
+    """Per-cell (stages x tp) meshes for the multi-cell serving fleet
+    (``repro.fleet``): partition the device pool into ``n_cells`` disjoint
+    blocks, one ``Topology`` each. When the pool is too small for disjoint
+    blocks, later cells WRAP onto the same devices (replicated-cell mode:
+    correct but serialized — fine for tests on fake host devices, called
+    out by the serve driver). Device order is preserved so cell i is stable
+    across calls with the same pool."""
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.compat import axis_types_kw as _axis_kw
+    devs = list(devices) if devices is not None else list(jax.devices())
+    per = num_stages * tp
+    if per > len(devs):
+        raise ValueError(
+            f"cell shape {num_stages}x{tp} needs {per} devices; "
+            f"pool has {len(devs)}")
+    topos = []
+    for i in range(n_cells):
+        lo = i * per
+        block = (devs[lo:lo + per] if lo + per <= len(devs)
+                 else devs[:per])          # wrap: share the first block
+        mesh = Mesh(np.asarray(block, dtype=object).reshape(num_stages, tp),
+                    ("data", "model"), **_axis_kw(2))
+        topos.append(Topology(mesh=mesh))
+    return tuple(topos)
+
+
 @dataclass
 class Cell:
     arch: str

@@ -7,14 +7,12 @@ itself), or --executor sim for the analytic executor at production scale.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --requests 12 \
       --executor jax --attn-backend pallas
 
---attn-backend picks the attention inner loop (core.attention registry):
-"jnp" is the pure-jnp online-softmax reference, "pallas" the flash kernel
-``kernels.ops.chunk_attention`` (interpret mode off-TPU, Mosaic on TPU).
---pool-backend overrides the backend for POOL-sourced partials only (the
-own-pool scan + fetch/qship) — backend-per-source mixing; under pallas the
-pool scan is a single batched slot-grid kernel launch per (layer, tick);
-under paged it is a single RAGGED launch reading pages in place from the
-page store (no gather_chunks copy — DESIGN.md §3.7).
+Every flag maps to a ``launch.options.ServeOptions`` field: ``--options-out``
+writes the resolved options JSON, ``--options-in`` replays one, and flags
+the user actually types act as overrides on top (argparse.SUPPRESS — see
+launch/options.py). The engine is driven ONLY through the ``CellHandle``
+protocol (runtime.engine) — no scheduler/executor internals; that seam is
+what lets the same driver run one cell or a fleet.
 
 Continuous chunk-level scheduling (cross-request pipelining, repro.sched):
 
@@ -22,13 +20,17 @@ Continuous chunk-level scheduling (cross-request pipelining, repro.sched):
       --scheduler continuous --policy edf --arrival-rate 4 --slo-ms 2000 \
       --trace-out artifacts/sched_trace.json
 
---arrival-rate R > 0 draws open-loop Poisson arrivals at R req/s (0 =
-closed-loop burst at t=0); --policy picks the admission order (fcfs | sjf |
-edf); --slo-ms stamps deadlines so EDF and the SLO-attainment metric bite.
+Multi-cell fleet (repro.fleet): one shared arrival stream routed over N
+cells — ``--cells N`` replicates the base options; ``--fleet-spec spec.json``
+lists per-cell overrides (heterogeneous kv_dtype / buckets / calibrated
+profiles); ``--router`` picks jsf | rr | least-loaded:
+
+  PYTHONPATH=src python -m repro.launch.serve --executor sim \
+      --scheduler continuous --cells 2 --router jsf --arrival-rate 6 \
+      --requests 24 --seq 30000 --trace-out artifacts/fleet_trace.json
 """
 from __future__ import annotations
 
-import argparse
 import math
 import time
 
@@ -36,13 +38,14 @@ import numpy as np
 
 from repro.configs.base import RunConfig, get_config, get_smoke_config, replace
 from repro.core import costmodel as cm
-from repro.core import pipeline as pp
-from repro.models.api import build_model
+from repro.launch.options import (ServeOptions, add_serve_args,
+                                  options_from_args, resolve_fleet)
 from repro.runtime.engine import (ContinuousEngine, EngineConfig, JaxExecutor,
                                   PrefillEngine, Request, SimExecutor)
 
-
 H2D_BW = 16e9  # host<->device staging bandwidth for the cold tier (B/s)
+
+SIM_BUCKETS = (8192, 32768, 131072)
 
 
 def _print_tier_summary(cfg, ec, kv_dtype: str, kv_page_tokens: int) -> None:
@@ -85,216 +88,221 @@ def _print_tier_summary(cfg, ec, kv_dtype: str, kv_page_tokens: int) -> None:
           f"{'FEASIBLE' if s['feasible'] else 'INFEASIBLE'}")
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--preset", default="smoke", choices=("smoke", "full"))
-    ap.add_argument("--executor", default="jax", choices=("jax", "sim"))
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--num-chunks", type=int, default=8)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--attn-backend", default="jnp",
-                    choices=("jnp", "pallas"),
-                    help="attention inner-loop backend (core.attention): "
-                         "jnp = pure-jnp reference, pallas = the flash "
-                         "kernel (interpret mode off-TPU)")
-    ap.add_argument("--pool-backend", default="auto",
-                    choices=("auto", "jnp", "pallas", "paged"),
-                    help="backend for POOL-sourced partials (own-pool scan "
-                         "+ fetch/qship) — mixable with --attn-backend, "
-                         "e.g. pallas self-block + jnp remote partials; "
-                         "auto follows --attn-backend. pallas = ONE batched "
-                         "slot-grid kernel launch per pool scan; paged = "
-                         "one RAGGED launch straight off the page store "
-                         "(scalar-prefetched handles, double-buffered DMA, "
-                         "no gather — DESIGN.md §3.7)")
-    ap.add_argument("--ssm-backend", default="jnp",
-                    choices=("jnp", "pallas"),
-                    help="SSD inner loop for ssm/hybrid archs "
-                         "(kernels.ops.ssd behind the same knob pattern)")
-    ap.add_argument("--tp-lowering", default="auto",
-                    choices=("auto", "manual"),
-                    help="TP lowering (core.transport, DESIGN.md §3.6): "
-                         "auto = GSPMD partial-auto shard_map (falls back "
-                         "to manual on old jaxlib); manual = all mesh axes "
-                         "manual with explicit transport psums — restores "
-                         "TP>1 on old jaxlib")
-    ap.add_argument("--transport", default="jax",
-                    help="transport registry entry for cross-stage/"
-                         "cross-rank collectives (core.transport)")
-    ap.add_argument("--fetch-batch", default="auto",
-                    choices=("auto", "on", "off"),
-                    help="batched fetch: land remote chunk-layers in a "
-                         "staging buffer + ONE pool_attention launch "
-                         "(auto follows the pool backend's batched_pool)")
-    ap.add_argument("--kv-dtype", default="auto",
-                    choices=("auto", "bfloat16", "int8", "fp8"),
-                    help="KV page-store codec (repro.kvstore): auto = model "
-                         "dtype; int8/fp8 store+ship quantized pages and "
-                         "leases count quantized bytes (~2x admission "
-                         "capacity)")
-    ap.add_argument("--kv-page-tokens", type=int, default=0,
-                    help="tokens per KV page (0 = one page per chunk)")
-    ap.add_argument("--kv-offload", action="store_true",
-                    help="plan the cold KV tier: host-offload placement + "
-                         "analytic prefetch off the chunk plan "
-                         "(kvstore.tiers); prints the tier summary")
-    ap.add_argument("--scheduler", default="batch",
-                    choices=("batch", "continuous"),
-                    help="batch = batch-synchronous PrefillEngine; "
-                         "continuous = cross-request chunk pipelining")
-    ap.add_argument("--policy", default="fcfs", choices=("fcfs", "sjf", "edf"),
-                    help="continuous-mode admission policy")
-    ap.add_argument("--arrival-rate", type=float, default=0.0,
-                    help="open-loop Poisson arrivals (req/s); 0 = closed loop")
-    ap.add_argument("--slo-ms", type=float, default=None,
-                    help="per-request SLO (deadline = arrival + slo)")
-    ap.add_argument("--trace-out", default=None,
-                    help="write ONE merged Chrome/Perfetto trace here "
-                         "(scheduler task spans + engine wave/tick spans + "
-                         "KV/wire counter tracks; repro.obs). With the jax "
-                         "executor this also turns on per-(stage, tick) "
-                         "device telemetry")
-    ap.add_argument("--metrics-out", default=None,
-                    help="export serving metrics here (repro.obs.metrics): "
-                         ".prom extension = Prometheus textfile, anything "
-                         "else = JSON lines")
-    ap.add_argument("--profile-dir", default=None,
-                    help="wrap the run in jax.profiler.trace(dir) — a real "
-                         "XLA profile next to the repro.obs timeline "
-                         "(jax executor only)")
-    ap.add_argument("--calibrated-profile", default=None,
-                    help="HardwareProfile for planning/admission costs: a "
-                         "registered name (wsc-gr24 | hgx-b200 | tpu-v5e) "
-                         "or a calibrated-profile JSON written by "
-                         "--calibrate (obs.calibrate) — LBCP and SJF/EDF "
-                         "then run on MEASURED effective rates")
-    ap.add_argument("--calibrate", default=None, metavar="OUT",
-                    help="measure per-(stage, tick) wall-clock spans (jax "
-                         "executor only), least-squares fit the effective "
-                         "HardwareProfile rates (obs.calibrate) and write "
-                         "the calibrated-profile JSON to OUT; feed it back "
-                         "with --calibrated-profile")
-    ap.add_argument("--health", action="store_true",
-                    help="arm the runtime health sentinels (obs.health): "
-                         "non-finite activations per stage, telemetry-vs-"
-                         "analytic occupancy drift, SLO burn-rate; alerts "
-                         "land in the metrics export and the merged trace")
-    args = ap.parse_args(argv)
-
-    hw = cm.TPU_V5E
-    if args.calibrated_profile:
-        hw = cm.resolve_profile(args.calibrated_profile)
-        print(f"[profile] {args.calibrated_profile} -> {hw.name} "
+def _resolve_hw(opts: ServeOptions):
+    if opts.calibrated_profile:
+        hw = cm.resolve_profile(opts.calibrated_profile)
+        print(f"[profile] {opts.calibrated_profile} -> {hw.name} "
               f"(gemm_eff={hw.gemm_eff:.3f} attn_eff={hw.attn_eff:.3f})")
+        return hw
+    return cm.TPU_V5E
 
-    if args.executor == "sim":
-        cfg = get_config(args.arch)
+
+def _build_engine(opts: ServeOptions, *, topo=None, jax_ctx=None):
+    """One serving cell from ONE declarative ServeOptions: (cfg, ec, engine).
+
+    ``jax_ctx`` (a dict) carries the device-dependent pieces shared across
+    fleet cells: {"stages": N, "tp": T}. ``topo`` pins the cell to a
+    specific mesh block (``launch.cells.enumerate_cell_meshes``); None =
+    one mesh over all devices. Engines come out config-constructed — all
+    policy/slo/trace knobs ride on EngineConfig, none on kwargs."""
+    hw = _resolve_hw(opts)
+    slo = opts.slo_ms / 1e3 if opts.slo_ms else None
+    want_trace = opts.trace_out is not None
+    if opts.executor == "sim":
+        cfg = get_config(opts.arch)
         ec = EngineConfig(model=cfg, hw=hw, num_stages=16, tp=16,
-                          num_chunks=16, max_batch=args.max_batch,
-                          buckets=(8192, 32768, 131072), partition="lbcp",
-                          kv_dtype=args.kv_dtype,
-                          kv_page_tokens=args.kv_page_tokens)
+                          num_chunks=16, max_batch=opts.max_batch,
+                          buckets=opts.buckets or SIM_BUCKETS,
+                          partition="lbcp", kv_dtype=opts.kv_dtype,
+                          kv_page_tokens=opts.kv_page_tokens,
+                          policy=opts.policy, slo=slo, trace=want_trace)
         executor = SimExecutor(cfg, hw)
     else:
         from repro import compat
         compat.ensure_host_devices()
         import jax
-        cfg = replace(get_smoke_config(args.arch)
-                      if args.preset == "smoke" else get_config(args.arch),
-                      dtype="float32")
-        n_dev = jax.device_count()
-        # tp=2 when the device count affords it; old jaxlib takes the
-        # MANUAL TP lowering (build_plan resolves tp_lowering="auto" via
-        # compat.resolve_tp_lowering — no more tp=1 fallback)
-        tp = 2 if n_dev >= 4 else 1
-        stages = max(n_dev // tp, 2)
+        from repro.core import pipeline as pp
         from repro.launch.mesh import make_test_topology
-        topo = make_test_topology(stages, tp)
-        run = RunConfig(num_chunks=args.num_chunks, num_stages=stages,
-                        attn_backend=args.attn_backend,
-                        pool_backend=args.pool_backend,
-                        ssm_backend=args.ssm_backend,
-                        tp_lowering=args.tp_lowering,
-                        transport=args.transport,
-                        fetch_batch=args.fetch_batch,
-                        kv_dtype=args.kv_dtype,
-                        kv_page_tokens=args.kv_page_tokens,
-                        kv_offload=args.kv_offload)
-        plan = pp.build_plan(cfg, stages, args.seq, run)
+        from repro.models.api import build_model
+        cfg = replace(get_smoke_config(opts.arch)
+                      if opts.preset == "smoke" else get_config(opts.arch),
+                      dtype="float32")
+        if jax_ctx is None:
+            n_dev = jax.device_count()
+            # tp=2 when the device count affords it; old jaxlib takes the
+            # MANUAL TP lowering (build_plan resolves tp_lowering="auto" via
+            # compat.resolve_tp_lowering — no more tp=1 fallback)
+            tp = 2 if n_dev >= 4 else 1
+            jax_ctx = {"stages": max(n_dev // tp, 2), "tp": tp}
+        stages, tp = jax_ctx["stages"], jax_ctx["tp"]
+        if topo is None:
+            topo = make_test_topology(stages, tp)
+        run = RunConfig(num_chunks=opts.num_chunks, num_stages=stages,
+                        attn_backend=opts.attn_backend,
+                        pool_backend=opts.pool_backend,
+                        ssm_backend=opts.ssm_backend,
+                        tp_lowering=opts.tp_lowering,
+                        transport=opts.transport,
+                        fetch_batch=opts.fetch_batch,
+                        kv_dtype=opts.kv_dtype,
+                        kv_page_tokens=opts.kv_page_tokens,
+                        kv_offload=opts.kv_offload)
+        plan = pp.build_plan(cfg, stages, opts.seq, run)
         if plan.tp_lowering == "manual" and tp > 1:
             print(f"[transport] manual TP lowering (tp={tp}, "
                   f"transport={plan.transport})")
         model = build_model(cfg)
-        params = model.init(jax.random.key(args.seed))
+        params = model.init(jax.random.key(opts.seed))
         staged = pp.stage_params(cfg, params, plan)
         ec = EngineConfig(model=cfg, hw=hw, num_stages=stages, tp=tp,
-                          num_chunks=args.num_chunks, max_batch=args.max_batch,
-                          buckets=(args.seq,), partition="uniform",
-                          kv_dtype=args.kv_dtype,
-                          kv_page_tokens=args.kv_page_tokens)
+                          num_chunks=opts.num_chunks,
+                          max_batch=opts.max_batch,
+                          buckets=opts.buckets or (opts.seq,),
+                          partition="uniform", kv_dtype=opts.kv_dtype,
+                          kv_page_tokens=opts.kv_page_tokens,
+                          policy=opts.policy, slo=slo, trace=want_trace)
         executor = JaxExecutor(cfg, staged, topo, run)
-
-    if args.kv_offload:
-        _print_tier_summary(cfg, ec, args.kv_dtype, args.kv_page_tokens)
-
-    slo = args.slo_ms / 1e3 if args.slo_ms else None
-    if args.scheduler == "continuous":
-        eng = ContinuousEngine(ec, executor, policy=args.policy, slo=slo,
-                               trace=args.trace_out is not None)
+    if opts.scheduler == "continuous":
+        eng = ContinuousEngine(ec, executor)
     else:
         eng = PrefillEngine(ec, executor)
-    if args.trace_out and isinstance(executor, JaxExecutor):
-        # the merged timeline wants the device-side (stage, tick) profile:
-        # switch the jit cache to the return_telemetry=True pipeline
-        executor.collect_telemetry = True
+    return cfg, ec, eng
+
+
+def _make_requests(opts: ServeOptions, vocab_size: int):
+    from repro.sched import poisson_arrivals
+    arrivals = poisson_arrivals(opts.arrival_rate, opts.requests,
+                                seed=opts.seed)
+    rng = np.random.default_rng(opts.seed)
+    out = []
+    for i in range(opts.requests):
+        toks = (rng.integers(0, vocab_size, size=opts.seq).astype(np.int32)
+                if opts.executor == "jax" else None)
+        out.append(Request(rid=i, arrival=float(arrivals[i]),
+                           seq_len=opts.seq, tokens=toks))
+    return out
+
+
+# ------------------------------------------------------------------- fleet
+
+def _run_fleet(opts: ServeOptions) -> int:
+    """N cells behind the fleet router: one shared arrival stream, per-cell
+    EngineConfigs from the fleet spec, roll-up metrics + ONE merged trace
+    with per-cell process rows."""
+    from repro.fleet import FleetFabric, FleetRouter
+    router_policy, cell_opts = resolve_fleet(opts)
+    if any(co.scheduler != "continuous" for co in cell_opts):
+        print("note: fleet cells require --scheduler continuous; overriding")
+        cell_opts = [co.override(scheduler="continuous") for co in cell_opts]
+    topos = [None] * len(cell_opts)
+    jax_ctx = None
+    if opts.executor == "jax":
+        from repro import compat
+        compat.ensure_host_devices()
+        import jax
+        from repro.launch.cells import enumerate_cell_meshes
+        n_dev = jax.device_count()
+        tp = 2 if n_dev >= 4 else 1
+        stages = max(n_dev // tp, 2)
+        jax_ctx = {"stages": stages, "tp": tp}
+        topos = list(enumerate_cell_meshes(len(cell_opts), stages, tp))
+        if len(cell_opts) * stages * tp > n_dev:
+            print(f"note: {len(cell_opts)} cells x {stages}x{tp} exceeds "
+                  f"{n_dev} devices; cells share device blocks "
+                  f"(replicated-cell mode, serialized execution)")
+    cells = {}
+    vocab = 0
+    for i, (co, topo) in enumerate(zip(cell_opts, topos)):
+        cfg, ec, eng = _build_engine(co, topo=topo, jax_ctx=jax_ctx)
+        cells[f"cell{i}"] = eng
+        vocab = cfg.vocab_size
+    fab = FleetFabric(cells, FleetRouter(router_policy))
     monitor = None
-    if args.health:
+    if opts.health:
         from repro.obs.health import HealthMonitor
         monitor = HealthMonitor()
-        # jax: arms the non-finite sentinels at trace time; sim: carried
-        # for the host-side drift/SLO checks + exports
-        executor.health = monitor
-    if args.calibrate:
-        if isinstance(executor, JaxExecutor):
-            executor.collect_measured = True
+        fab.configure_obs(health=monitor)
+    if opts.trace_out:
+        fab.configure_obs(telemetry=True)
+
+    t0 = time.time()
+    for req in _make_requests(opts, vocab):
+        fab.submit(req)
+    fab.pump()
+    wall = time.time() - t0
+
+    m = fab.metrics()
+    slo_txt = (f" | SLO {m['slo_met']}/{m['slo_total']}"
+               if m["slo_total"] else "")
+    print(f"[fleet {router_policy} x{m['cells']}] completed {m['completed']} "
+          f"(rejected {m['rejected']}) in {wall:.2f}s wall | "
+          f"makespan {m['makespan']:.3f}s | "
+          f"avg TTFT {m['avg_ttft']:.3f}s | p99 {m['p99_ttft']:.3f}s | "
+          f"{m['throughput']:.3f} req/s{slo_txt}")
+    for name, pc in m["per_cell"].items():
+        print(f"  {name}: {pc['completed']} done "
+              f"(rejected {pc['rejected']}) | p99 {pc['p99_ttft']:.3f}s")
+    if opts.trace_out or opts.metrics_out:
+        paths = fab.export_obs(trace_out=opts.trace_out,
+                               metrics_out=opts.metrics_out)
+        for kind, path in paths.items():
+            print(f"{kind} -> {path}")
+    return 0
+
+
+# ------------------------------------------------------------- single cell
+
+def _run_single(opts: ServeOptions) -> int:
+    cfg, ec, eng = _build_engine(opts)
+    if opts.kv_offload:
+        _print_tier_summary(cfg, ec, opts.kv_dtype, opts.kv_page_tokens)
+    slo = opts.slo_ms / 1e3 if opts.slo_ms else None
+
+    if opts.trace_out:
+        # the merged timeline wants the device-side (stage, tick) profile:
+        # switch the jit cache to the return_telemetry=True pipeline (the
+        # sim executor has no telemetry switch — configure_obs skips it)
+        eng.configure_obs(telemetry=True)
+    monitor = None
+    if opts.health:
+        from repro.obs.health import HealthMonitor
+        monitor = HealthMonitor()
+        eng.configure_obs(health=monitor)
+    calibrate_out = opts.calibrate
+    if calibrate_out:
+        if opts.executor == "jax":
+            eng.configure_obs(measured=True)
         else:
             print("note: --calibrate measures the jax executor; the sim "
                   "path IS the analytic model — skipping (the sim-backed "
                   "calibration leg lives in benchmarks/calibration.py)")
-            args.calibrate = None
+            calibrate_out = None
 
-    from repro.sched import poisson_arrivals
-    if args.scheduler == "batch" and args.arrival_rate > 0:
+    arrival_rate = opts.arrival_rate
+    if opts.scheduler == "batch" and arrival_rate > 0:
         # the batch-synchronous engine admits everything at clock 0 and its
         # E2E metric is finish - arrival: staggered arrivals would produce
         # negative latencies there, so open-loop arrivals are continuous-only
         print("note: --arrival-rate requires --scheduler continuous; "
               "running the batch engine as a closed loop (arrivals at t=0)")
-        args.arrival_rate = 0.0
-    arrivals = poisson_arrivals(args.arrival_rate, args.requests,
-                                seed=args.seed)
-    rng = np.random.default_rng(args.seed)
-    for i in range(args.requests):
-        toks = rng.integers(0, ec.model.vocab_size, size=args.seq).astype(np.int32)
-        eng.submit(Request(rid=i, arrival=float(arrivals[i]), seq_len=args.seq,
-                           tokens=toks if args.executor == "jax" else None))
+        opts = opts.override(arrival_rate=0.0)
+    for req in _make_requests(opts, cfg.vocab_size):
+        eng.submit(req)
     t0 = time.time()
-    if args.profile_dir and args.executor == "jax":
+    if opts.profile_dir and opts.executor == "jax":
         import jax
-        with jax.profiler.trace(args.profile_dir):
+        with jax.profiler.trace(opts.profile_dir):
             eng.run_until_drained()
-        print(f"xla profile -> {args.profile_dir}")
+        print(f"xla profile -> {opts.profile_dir}")
     else:
-        if args.profile_dir:
+        if opts.profile_dir:
             print("note: --profile-dir needs --executor jax; skipping")
         eng.run_until_drained()
     wall = time.time() - t0
+    finished = eng.poll()
 
-    if args.calibrate:
-        meas = [w for w in executor.waves if w.get("measured") is not None]
+    if calibrate_out:
+        meas = eng.measured_waves()
         if not meas:
             print("note: no measured waves; nothing to calibrate")
         else:
@@ -306,17 +314,17 @@ def main(argv=None) -> int:
                      if not cfg.attn_free else None)
             fit = cal.fit_profile(sm, w["chunks"], w["measured"], ec.hw,
                                   mbkr_plan=mplan)
-            cal.save_profile(args.calibrate, fit.profile, fit=fit,
-                             meta={"arch": args.arch, "seq": args.seq,
+            cal.save_profile(calibrate_out, fit.profile, fit=fit,
+                             meta={"arch": opts.arch, "seq": opts.seq,
                                    "source": "serve"})
             print(f"[calibrate] {ec.hw.name} -> {fit.profile.name}: span "
                   f"MAPE {fit.mape_nominal:.3f} -> {fit.mape_calibrated:.3f}"
-                  f" over {len(fit.rows)} spans -> {args.calibrate}")
+                  f" over {len(fit.rows)} spans -> {calibrate_out}")
     if monitor is not None:
-        if slo is not None and args.scheduler == "continuous":
+        if slo is not None and opts.scheduler == "continuous":
             from repro.obs.metrics import Histogram
             h = Histogram("ttft")
-            for rec in eng.scheduler.metrics.records:
+            for rec in eng.records():
                 if math.isfinite(rec.finish):
                     h.observe(rec.finish - rec.arrival)
             monitor.check_slo(h, slo)
@@ -326,19 +334,19 @@ def main(argv=None) -> int:
         print(f"[health] alerts {s['alerts_total']} {s['by_kind']}{burn}")
 
     m = eng.metrics()
-    if args.scheduler == "continuous":
+    if opts.scheduler == "continuous":
         slo_txt = (f" | SLO {m['slo_met']}/{m['slo_total']}"
                    if m["slo_total"] else "")
-        print(f"[{args.policy}] completed {m['completed']} "
+        print(f"[{opts.policy}] completed {m['completed']} "
               f"(rejected {m['rejected']}) in {wall:.2f}s wall | "
               f"sched clock {m['makespan']:.3f}s | "
               f"avg TTFT {m['avg_ttft']:.3f}s | p99 {m['p99_ttft']:.3f}s | "
               f"avg queue {m['avg_queue_wait']:.3f}s | "
               f"{m['throughput']:.3f} req/s | "
               f"bubble {m['bubble_frac']*100:.1f}%{slo_txt}")
-        if args.trace_out or args.metrics_out:
-            paths = eng.export_obs(trace_out=args.trace_out,
-                                   metrics_out=args.metrics_out,
+        if opts.trace_out or opts.metrics_out:
+            paths = eng.export_obs(trace_out=opts.trace_out,
+                                   metrics_out=opts.metrics_out,
                                    extra={"wall_seconds": wall})
             for kind, path in paths.items():
                 print(f"{kind} -> {path}")
@@ -347,20 +355,44 @@ def main(argv=None) -> int:
               f"engine clock {eng.clock:.3f}s | avg E2E {m['avg_e2e']:.3f}s | "
               f"p99 {m['p99_e2e']:.3f}s | {m['throughput']:.3f} req/s | "
               f"stages {m['num_stages']}")
-        if args.trace_out:
+        if opts.trace_out:
             print("note: --trace-out needs --scheduler continuous; skipping")
-        if args.metrics_out:
+        if opts.metrics_out:
             from repro.obs.metrics import export_engine_metrics
-            path = export_engine_metrics(args.metrics_out, m,
+            path = export_engine_metrics(opts.metrics_out, m,
                                          extra={"wall_seconds": wall},
                                          health=monitor)
             print(f"metrics -> {path}")
-    if args.executor == "jax":
-        done = sorted(eng.done, key=lambda r: r.rid)[:3]
-        for r in done:
+    if opts.executor == "jax":
+        for r in sorted(finished, key=lambda r: r.rid)[:3]:
             top = int(np.argmax(r.result))
             print(f"  request {r.rid}: next-token argmax = {top}")
     return 0
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    add_serve_args(ap)
+    ap.add_argument("--options-in", default=None,
+                    help="load a ServeOptions JSON (written by "
+                         "--options-out); explicit flags override it")
+    ap.add_argument("--options-out", default=None,
+                    help="write the RESOLVED options JSON here (replayable "
+                         "via --options-in), then run")
+    ns = ap.parse_args(argv)
+    base = ServeOptions()
+    if ns.options_in:
+        with open(ns.options_in) as f:
+            base = ServeOptions.from_json(f.read())
+    opts = options_from_args(ns, base)
+    if ns.options_out:
+        from repro.obs._io import atomic_write_text
+        path = atomic_write_text(ns.options_out, opts.to_json())
+        print(f"options -> {path}")
+    if opts.cells > 1 or opts.fleet_spec:
+        return _run_fleet(opts)
+    return _run_single(opts)
 
 
 if __name__ == "__main__":

@@ -99,6 +99,50 @@ class TraceRecorder:
         if self.enabled:
             self._pid_names[pid] = name
 
+    # -------------------------------------------------------------- merging
+    def absorb(self, other: "TraceRecorder", *, pid_prefix: str = "") -> None:
+        """Fold another recorder's events into this one under a per-source
+        process namespace — the multi-cell fleet timeline (``repro.fleet``):
+        ONE file where every cell keeps its own process rows
+        (``cell0/stage 3``, ``cell1/engine``, ...). All of ``other``'s pids
+        (task stages, span/counter pids, registered process names) are
+        re-keyed to ``f"{pid_prefix}{pid}"``; task intervals become chunk
+        spans (tid = request) and lifecycle marks become zero-duration
+        request instants, so absorbed cells never collide with this
+        recorder's own integer stage pids. With an empty prefix events copy
+        through verbatim."""
+        if not self.enabled:
+            return
+
+        def _pid(p: Any) -> Any:
+            if not pid_prefix:
+                return p
+            base = f"stage {p}" if isinstance(p, int) else str(p)
+            return f"{pid_prefix}{base}"
+
+        if not pid_prefix:
+            self.tasks.extend(other.tasks)
+            self.marks.extend(other.marks)
+        else:
+            for t in other.tasks:
+                self.span(f"r{t.rid}/c{t.chunk}", pid=_pid(t.stage),
+                          tid=t.rid, start=t.start, finish=t.finish,
+                          cat="chunk", args={"rid": t.rid, "chunk": t.chunk,
+                                             "stage": t.stage})
+            for m in other.marks:
+                self.span(f"{m.kind} r{m.rid}", pid=f"{pid_prefix}requests",
+                          tid=m.rid, start=m.time, finish=m.time,
+                          cat="request")
+        for s in other.spans:
+            self.spans.append(SpanEvent(s.name, _pid(s.pid), s.tid, s.start,
+                                        s.finish, s.cat, s.args))
+        for c in other.counters:
+            self.counters.append(CounterEvent(c.name, _pid(c.pid), c.time,
+                                              dict(c.values)))
+        for p, name in other._pid_names.items():
+            self._pid_names[_pid(p)] = (f"{pid_prefix}{name}" if pid_prefix
+                                        else name)
+
     # ------------------------------------------------------------- export
     def events(self) -> Dict[str, List[Dict[str, Any]]]:
         """Raw event dicts for offline analysis."""

@@ -1,3 +1,4 @@
 from repro.runtime.checkpoint import save_checkpoint, restore_checkpoint, latest_step
-from repro.runtime.engine import (EngineConfig, PrefillEngine, Request,
-                                  SimExecutor, JaxExecutor)
+from repro.runtime.engine import (CellHandle, ContinuousEngine, EngineConfig,
+                                  PrefillEngine, Request, SimExecutor,
+                                  JaxExecutor)

@@ -30,8 +30,10 @@ Two engines share the executors:
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, replace as dc_replace
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
 
 import numpy as np
 
@@ -81,12 +83,68 @@ class EngineConfig:
     straggler_threshold: float = 1.3   # max/median EWMA tick latency
     evict_threshold: float = 3.0
     ewma_alpha: float = 0.3
+    # Continuous-serving policy knobs (formerly ContinuousEngine kwargs):
+    # engines are constructible from config alone, so a fleet cell is fully
+    # described by ONE declarative EngineConfig (repro.fleet / fleet specs)
+    policy: str = "fcfs"               # fcfs | sjf | edf admission order
+    slo: Optional[float] = None        # seconds; deadline = arrival + slo
+    inflight: int = 2                  # MBKR slot pools provisioned
+    trace: bool = False                # record the scheduler trace
 
 
 class StageFailure(RuntimeError):
     def __init__(self, stage: int):
         super().__init__(f"stage {stage} failed")
         self.stage = stage
+
+
+# ----------------------------------------------------------- cell protocol
+
+@runtime_checkable
+class CellHandle(Protocol):
+    """The NARROW seam between one serving cell and everything above it.
+
+    A cell is one pipeline (scheduler + lease manager + executor) behind a
+    handful of methods; the fleet router (``repro.fleet``) and the serve
+    driver (``launch.serve``) consume ONLY this protocol — no reaching into
+    ``.scheduler`` / ``.lease`` / ``.executor`` internals (source-scan
+    enforced by ``tests/test_fleet.py``, the same idiom as the PR 5
+    transport grep). ``ContinuousEngine`` is the canonical implementation.
+
+    Lifecycle: ``submit`` -> ``run_until_drained`` (re-entrant pump) ->
+    ``poll`` (completed requests since the last poll). ``drain`` stops
+    admission permanently and completes in-flight work. Router signals:
+    ``queue_depth``, ``free_lease_bytes``, ``estimate_admission`` — the
+    load-, lease- and cost-aware placement inputs.
+    """
+
+    draining: bool
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, req: "Request") -> None: ...
+    def run_until_drained(self) -> None: ...
+    def poll(self) -> List["Request"]: ...
+    def drain(self) -> List["Request"]: ...
+
+    # -------------------------------------------------------------- signals
+    def queue_depth(self) -> int: ...
+    def free_lease_bytes(self) -> float: ...
+    def estimate_admission(self, seq_len: int,
+                           arrival: float = 0.0) -> Tuple[float, bool]: ...
+
+    # ----------------------------------------------------- metrics / obs
+    def metrics(self) -> Dict[str, Any]: ...
+    def records(self) -> List[Any]: ...
+    def recalibrate(self, hw: Any) -> Any: ...
+    def merged_trace(self) -> Any: ...
+    def export_obs(self, trace_out: Optional[str] = None,
+                   metrics_out: Optional[str] = None,
+                   extra: Optional[Dict[str, float]] = None,
+                   health: Any = None) -> Dict[str, str]: ...
+    def configure_obs(self, *, telemetry: Optional[bool] = None,
+                      measured: Optional[bool] = None,
+                      health: Any = None) -> None: ...
+    def measured_waves(self) -> List[Dict[str, Any]]: ...
 
 
 # ---------------------------------------------------------------- executors
@@ -250,6 +308,7 @@ class PrefillEngine:
         self.executor = executor
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        self._polled = 0
         self.clock = 0.0
         self.num_stages = ec.num_stages
         self.failed_stages: List[int] = []
@@ -317,6 +376,30 @@ class PrefillEngine:
         for _ in range(max_steps):
             if not self.step():
                 return
+
+    def poll(self) -> List[Request]:
+        """Requests completed since the last ``poll`` (completion order) —
+        the same cell-handle surface ``ContinuousEngine`` exposes."""
+        new = self.done[self._polled:]
+        self._polled = len(self.done)
+        return list(new)
+
+    def configure_obs(self, *, telemetry: Optional[bool] = None,
+                      measured: Optional[bool] = None,
+                      health: Any = None) -> None:
+        """See ``ContinuousEngine.configure_obs`` — shared executor seam."""
+        ex = self.executor
+        if telemetry is not None and hasattr(ex, "collect_telemetry"):
+            ex.collect_telemetry = bool(telemetry)
+        if measured is not None and hasattr(ex, "collect_measured"):
+            ex.collect_measured = bool(measured)
+        if health is not None:
+            ex.health = health
+
+    def measured_waves(self) -> List[Dict[str, Any]]:
+        """See ``ContinuousEngine.measured_waves`` — the calibration input."""
+        return [w for w in getattr(self.executor, "waves", [])
+                if w.get("measured") is not None]
 
     # ------------------------------------------------------ fault handling
     def _handle_failure(self, stage: int, batch: Sequence[Request]) -> None:
@@ -425,23 +508,43 @@ class ContinuousEngine:
       from each request in the wave, and a newly arrived request joins the
       next wave instead of waiting for the whole queue to drain.
 
-    Admission is policy-ordered (fcfs | sjf | edf) and gated by the
-    ``KVLeaseManager``, whose per-stage budget is the MBKR slot pool
-    provisioned for ``inflight`` concurrent requests (clamped to physical KV
-    capacity). ``slo`` (seconds), when set, stamps each submitted request's
-    deadline = arrival + slo; EDF orders by it and metrics report attainment.
+    Admission is policy-ordered (``EngineConfig.policy``: fcfs | sjf | edf)
+    and gated by the ``KVLeaseManager``, whose per-stage budget is the MBKR
+    slot pool provisioned for ``EngineConfig.inflight`` concurrent requests
+    (clamped to physical KV capacity). ``EngineConfig.slo`` (seconds), when
+    set, stamps each submitted request's deadline = arrival + slo; EDF
+    orders by it and metrics report attainment.
+
+    The engine IS a ``CellHandle``: the fleet router and serve driver talk
+    to it only through that protocol. The legacy ``policy``/``slo``/
+    ``inflight``/``trace`` constructor kwargs are DEPRECATED — set the
+    same-named ``EngineConfig`` fields instead (cells need declarative,
+    config-only construction); passing one still works but warns.
     """
 
-    def __init__(self, ec: EngineConfig, executor, *, policy: str = "fcfs",
-                 slo: Optional[float] = None, inflight: int = 2,
-                 trace: bool = False):
+    def __init__(self, ec: EngineConfig, executor, *,
+                 policy: Optional[str] = None, slo: Optional[float] = None,
+                 inflight: Optional[int] = None,
+                 trace: Optional[bool] = None):
         from repro.sched import (ChunkPlan, ChunkScheduler, KVLeaseManager,
                                  TraceRecorder, slot_budget_bytes)
+        legacy = {k: v for k, v in dict(policy=policy, slo=slo,
+                                        inflight=inflight,
+                                        trace=trace).items() if v is not None}
+        if legacy:
+            warnings.warn(
+                f"ContinuousEngine({', '.join(sorted(legacy))}=...) kwargs "
+                "are deprecated; set the same-named EngineConfig fields "
+                "instead (engines are constructible from config alone)",
+                DeprecationWarning, stacklevel=2)
+            ec = dc_replace(ec, **legacy)
         self.ec = ec
         self.executor = executor
-        self.slo = slo
+        self.slo = ec.slo
+        self.draining = False
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        self._polled = 0          # self.done prefix already handed to poll()
         self._consumed = 0        # scheduler.admitted prefix already drained
         self._plan_cls = ChunkPlan
         self._plans: Dict[int, Any] = {}
@@ -453,11 +556,11 @@ class ContinuousEngine:
         weights = ec.model.param_count() * 2 / (ec.num_stages * max(ec.tp, 1))
         capacity = max(ec.hw.hbm_cap - weights, 0.0) * max(ec.tp, 1)
         budget = slot_budget_bytes(
-            max(inflight, 1) * mplan.num_slots,
+            max(ec.inflight, 1) * mplan.num_slots,
             max(cm.kv_chunk_bytes(self._sm, cmax), 1.0),
             ec.num_stages, capacity=capacity if capacity > 0 else None)
         self.lease = KVLeaseManager(ec.num_stages, budget)
-        self.trace = TraceRecorder(enabled=trace)
+        self.trace = TraceRecorder(enabled=ec.trace)
         scale = (executor.stage_scale(ec.num_stages)
                  if hasattr(executor, "stage_scale") else None)
         # leases count the page store's STORED bytes (quantized kv_dtype
@@ -470,12 +573,16 @@ class ContinuousEngine:
             page_tokens=ec.kv_page_tokens or cmax,
             head_dim=ec.model.resolved_head_dim)
         self.scheduler = ChunkScheduler(
-            ec.num_stages, self._chunk_plan, policy=policy, lease=self.lease,
+            ec.num_stages, self._chunk_plan, policy=ec.policy, lease=self.lease,
             trace=self.trace, compress=ec.compress, kv_compress=kv_compress,
             stage_scale=scale, page_tokens=ec.kv_page_tokens)
 
     # ---------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
+        if self.draining:
+            raise RuntimeError(
+                "cell is draining: admission is closed (route the request "
+                "to another cell — the fleet router skips draining cells)")
         req.bucket = bucket_of(self.ec.buckets, req.seq_len)
         if self.slo is not None and not math.isfinite(req.deadline):
             req.deadline = req.arrival + self.slo
@@ -527,6 +634,73 @@ class ContinuousEngine:
                 self.queue.remove(sr.payload)
         if not isinstance(self.executor, SimExecutor):
             self._execute_real(order)
+
+    # ------------------------------------------------- cell-handle surface
+    def poll(self) -> List[Request]:
+        """Requests completed since the last ``poll`` (admission order)."""
+        new = self.done[self._polled:]
+        self._polled = len(self.done)
+        return list(new)
+
+    def drain(self) -> List[Request]:
+        """Stop admission PERMANENTLY and complete all in-flight work: the
+        queue runs dry through the scheduler, committed KV leases expire as
+        their requests finish, and any ``submit`` after this raises. Returns
+        the requests completed by the drain (the un-polled suffix)."""
+        self.draining = True
+        self.run_until_drained()
+        return self.poll()
+
+    def queue_depth(self) -> int:
+        """Requests submitted or admitted but not yet finished at the cell's
+        current head-of-pipeline time — the least-loaded router signal."""
+        now = float(self.scheduler.stage_free[0])
+        live = sum(1 for sr in self.scheduler.admitted
+                   if sr.finish_time > now)
+        return live + sum(1 for r in self.queue if r.state == "queued")
+
+    def free_lease_bytes(self) -> float:
+        """Tightest per-stage KV-lease headroom (``KVLeaseManager.headroom``)
+        from the cell's current head time on — bytes a new request's lease
+        could still claim on the most-contended stage."""
+        now = float(self.scheduler.stage_free[0])
+        return float(self.lease.headroom(after=now).min())
+
+    def estimate_admission(self, seq_len: int,
+                           arrival: float = 0.0) -> Tuple[float, bool]:
+        """(predicted finish time, lease-fits-now) for a hypothetical
+        request — ``ChunkScheduler.preview`` against the live frontier with
+        this cell's OWN chunk-cost vectors (per-cell calibrated profiles and
+        kv_dtype lease pricing both fold in automatically). Pure."""
+        bucket = bucket_of(self.ec.buckets, seq_len)
+        return self.scheduler.preview(bucket, seq_len, release=arrival)
+
+    def records(self) -> List[Any]:
+        """Per-request ``RequestRecord`` rows (sched.metrics) — the fleet
+        summary / SLO attainment input."""
+        return list(self.scheduler.metrics.records)
+
+    def configure_obs(self, *, telemetry: Optional[bool] = None,
+                      measured: Optional[bool] = None,
+                      health: Any = None) -> None:
+        """Arm executor-side observability WITHOUT poking the executor from
+        outside (the protocol seam): device telemetry (``return_telemetry``),
+        measured tick spans (``collect_measured``) and a health monitor.
+        Flags an executor does not support are ignored (SimExecutor IS the
+        analytic model — there is nothing to measure)."""
+        ex = self.executor
+        if telemetry is not None and hasattr(ex, "collect_telemetry"):
+            ex.collect_telemetry = bool(telemetry)
+        if measured is not None and hasattr(ex, "collect_measured"):
+            ex.collect_measured = bool(measured)
+        if health is not None:
+            ex.health = health
+
+    def measured_waves(self) -> List[Dict[str, Any]]:
+        """Executor waves that carry a measured per-(stage, tick) span array
+        (``configure_obs(measured=True)``) — the calibration input."""
+        return [w for w in getattr(self.executor, "waves", [])
+                if w.get("measured") is not None]
 
     def _execute_real(self, order) -> None:
         """Chunk-interleaved token batches: stack consecutive same-bucket

@@ -7,7 +7,7 @@ accounting and Chrome-format JSON traces.
 """
 from repro.sched.kvlease import (KVLeaseManager, Lease, LeaseEvent,
                                  request_lease_events, slot_budget_bytes)
-from repro.sched.metrics import RequestRecord, SchedMetrics
+from repro.sched.metrics import RequestRecord, SchedMetrics, fleet_summary
 from repro.sched.scheduler import (POLICIES, ChunkPlan, ChunkScheduler,
                                    SchedRequest, poisson_arrivals)
 from repro.sched.trace import TraceRecorder

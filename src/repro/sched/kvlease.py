@@ -181,6 +181,29 @@ class KVLeaseManager:
     def would_fit(self, lease: Lease) -> bool:
         return self._fit_peaks(lease) is not None
 
+    def headroom(self, after: float = 0.0) -> np.ndarray:
+        """Per-stage FREE bytes guaranteed from ``after`` on: budget minus
+        the peak committed occupancy over ``[after, inf)`` (the level carried
+        into ``after`` counts — a lease allocated before and freed after
+        still occupies the pool at ``after``). This is the router's
+        free-KV-lease signal (``repro.fleet``): a cell whose pool is packed
+        with long-lived leases reports near-zero headroom even if nothing is
+        executing this instant."""
+        free = np.empty(self.num_stages)
+        for s, tl in enumerate(self._timeline):
+            events = sorted(tl)
+            cur = 0.0
+            i = 0
+            while i < len(events) and events[i][0] < after:
+                cur += events[i][1]
+                i += 1
+            peak = cur
+            for _, d in events[i:]:
+                cur += d
+                peak = max(peak, cur)
+            free[s] = self.budget[s] - peak
+        return free
+
     # ------------------------------------------------------------ mutation
     def admit(self, lease: Lease) -> bool:
         """Commit the lease if it fits every stage's budget; else refuse."""

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Mapping, Sequence
 
 import numpy as np
 
@@ -83,3 +83,49 @@ class SchedMetrics:
             "bubble_frac": float(1.0 - util.max()) if mk > 0 else math.nan,
             "avg_stage_util": float(util.mean()) if mk > 0 else math.nan,
         }
+
+
+def fleet_summary(
+        records_by_cell: Mapping[str, Sequence[RequestRecord]]
+) -> Dict[str, Any]:
+    """Fleet-level serving summary over MANY cells' request records
+    (``repro.fleet``): the SLO-attainment / TTFT view of the WHOLE arrival
+    stream, regardless of which cell served each request, plus a per-cell
+    breakdown. Cells share the arrival clock (each scheduler's virtual time
+    starts at the stream's t=0), so records merge directly: fleet makespan
+    is the latest finish anywhere, fleet throughput is total completions
+    over it."""
+    merged: List[RequestRecord] = [r for recs in records_by_cell.values()
+                                   for r in recs]
+    done = [r for r in merged if not r.rejected and math.isfinite(r.finish)]
+    ttft = np.array([r.ttft for r in done])
+    with_slo = [r for r in merged if math.isfinite(r.deadline)]
+    mk = max((r.finish for r in done), default=0.0)
+    per_cell: Dict[str, Dict[str, Any]] = {}
+    for name, recs in records_by_cell.items():
+        cdone = [r for r in recs if not r.rejected and math.isfinite(r.finish)]
+        cttft = np.array([r.ttft for r in cdone])
+        cslo = [r for r in recs if math.isfinite(r.deadline)]
+        per_cell[name] = {
+            "completed": len(cdone),
+            "rejected": sum(r.rejected for r in recs),
+            "p99_ttft": float(np.percentile(cttft, 99)) if len(cttft)
+                        else math.nan,
+            "slo_attainment": (sum(r.met_slo for r in cslo) / len(cslo)
+                               if cslo else math.nan),
+        }
+    return {
+        "cells": len(records_by_cell),
+        "completed": len(done),
+        "rejected": sum(r.rejected for r in merged),
+        "makespan": float(mk),
+        "throughput": len(done) / mk if mk > 0 else 0.0,
+        "avg_ttft": float(ttft.mean()) if len(ttft) else math.nan,
+        "p50_ttft": float(np.percentile(ttft, 50)) if len(ttft) else math.nan,
+        "p99_ttft": float(np.percentile(ttft, 99)) if len(ttft) else math.nan,
+        "slo_total": len(with_slo),
+        "slo_met": sum(r.met_slo for r in with_slo),
+        "slo_attainment": (sum(r.met_slo for r in with_slo) / len(with_slo)
+                           if with_slo else math.nan),
+        "per_cell": per_cell,
+    }

@@ -188,6 +188,39 @@ class ChunkScheduler:
         reorders history (asserted in tests/test_calibration.py)."""
         self.plan_for = plan_for
 
+    # ------------------------------------------------------------ preview
+    def preview(self, bucket: int, seq_len: int,
+                release: float = 0.0) -> Tuple[float, bool]:
+        """Placement signal (``repro.fleet``): the finish time a request of
+        ``seq_len`` in ``bucket`` WOULD get if admitted against the current
+        per-stage frontier, plus whether its KV lease fits the committed
+        timeline right now. Pure — no scheduler state is mutated. When the
+        lease does not fit, the ETA is padded by the wait until the next
+        committed release (the earliest instant a deferred admission could
+        retry), so a lease-packed "hot" cell quotes an honestly later finish
+        than an idle "cold" one; a request that can NEVER fit (empty pool
+        and still refused) quotes ``inf``."""
+        plan = self.plan_for(bucket)
+        frontier = self.stage_free.copy()
+        finish = schedule_request(plan.task_cost, plan.comm, self.num_stages,
+                                  frontier, release=release,
+                                  stage_scale=self.stage_scale)
+        eta = float(finish[-1][-1])
+        fits = True
+        if self.lease is not None:
+            lease = request_lease_events(-1, finish, plan.kvb, plan.p2,
+                                         self.pair, self.compress,
+                                         self.kv_compress, seq_len=seq_len,
+                                         chunks=plan.chunks,
+                                         page_tokens=self.page_tokens)
+            fits = self.lease.would_fit(lease)
+            if not fits:
+                t_now = max(float(self.stage_free[0]), release)
+                nxt = self.lease.next_release(t_now)
+                eta = (eta + max(nxt - t_now, 0.0) if math.isfinite(nxt)
+                       else math.inf)
+        return eta, fits
+
     # ------------------------------------------------------------ running
     def _try_admit(self, r: SchedRequest, release: float) -> bool:
         """Tentatively schedule ``r`` from ``release``; commit if its KV

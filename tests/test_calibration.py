@@ -206,7 +206,7 @@ def test_engine_recalibrate_swaps_costs_in_place():
     ec = EngineConfig(model=cfg, hw=cm.WSC_PAPER, num_stages=8, tp=1,
                       num_chunks=8, max_batch=4, buckets=(8192,),
                       partition="lbcp", sa_iters=4)
-    eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw), policy="fcfs")
+    eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw))
     for i in range(2):
         eng.submit(Request(rid=i, arrival=0.0, seq_len=8192))
     eng.run_until_drained()

@@ -173,8 +173,9 @@ def _continuous(kv_dtype, buckets=(16384, 65536), inflight=2):
     cfg = get_config("llama3-70b")
     ec = EngineConfig(model=cfg, hw=cm.WSC_PAPER, num_stages=16, tp=1,
                       num_chunks=16, max_batch=8, buckets=buckets,
-                      partition="uniform", kv_dtype=kv_dtype)
-    return ContinuousEngine(ec, SimExecutor(cfg, ec.hw), inflight=inflight)
+                      partition="uniform", kv_dtype=kv_dtype,
+                      inflight=inflight)
+    return ContinuousEngine(ec, SimExecutor(cfg, ec.hw))
 
 
 def test_lease_hwm_within_budget_quantized_mixed_buckets():
@@ -211,8 +212,8 @@ def test_quantized_leases_admit_what_bf16_cannot():
     for kv_dtype in ("auto", "int8"):
         ec = EngineConfig(model=cfg, hw=cm.WSC_PAPER, num_stages=16, tp=1,
                           num_chunks=16, max_batch=8, buckets=(131072,),
-                          partition="uniform", kv_dtype=kv_dtype)
-        eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw), inflight=1)
+                          partition="uniform", kv_dtype=kv_dtype, inflight=1)
+        eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw))
         for i in range(10):
             eng.submit(Request(rid=i, arrival=0.0, seq_len=131072))
         eng.run_until_drained()

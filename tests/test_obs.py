@@ -290,9 +290,8 @@ def test_engine_merged_trace_sim(tmp_path):
     cfg = get_config("llama3-70b")
     ec = EngineConfig(model=cfg, hw=cm.WSC_PAPER, num_stages=8, tp=1,
                       num_chunks=8, max_batch=4, buckets=(8192,),
-                      partition="lbcp", sa_iters=4)
-    eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw), policy="fcfs",
-                           trace=True)
+                      partition="lbcp", sa_iters=4, policy="fcfs", trace=True)
+    eng = ContinuousEngine(ec, SimExecutor(cfg, ec.hw))
     for i in range(4):
         eng.submit(Request(rid=i, arrival=0.0, seq_len=8192))
     eng.run_until_drained()

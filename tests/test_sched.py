@@ -24,9 +24,9 @@ def _ec(buckets=(65536,), partition="uniform", max_batch=8, **kw):
 
 def _continuous(ec, policy="fcfs", slo=None, inflight=2, trace=False,
                 executor=None):
-    return ContinuousEngine(ec, executor or SimExecutor(CFG, ec.hw),
-                            policy=policy, slo=slo, inflight=inflight,
-                            trace=trace)
+    from dataclasses import replace as dc_replace
+    ec = dc_replace(ec, policy=policy, slo=slo, inflight=inflight, trace=trace)
+    return ContinuousEngine(ec, executor or SimExecutor(CFG, ec.hw))
 
 
 def _submit_burst(eng, n, seq_len, arrival=0.0):
