@@ -122,6 +122,19 @@ SPECS: Dict[str, Dict[str, Any]] = {
                 "jsf_slo_attainment": ("low", 0.0, 0.0),
                 "jsf_completed": ("low", 0.0, 0.0),
             }),
+            # shared-prefix workload, radix index on vs off at equal lease
+            # budget: seeded Zipf stream + analytic cost model on a virtual
+            # clock, so the acceptance bits (prefix-on strictly beats off on
+            # p99 TTFT AND admits strictly more concurrent requests) and the
+            # hit rate gate EXACTLY; the p99s get tight relative guards
+            ("prefix", lambda b: b.get("prefix", []), ("arch", "seq"), {
+                "prefix_beats_off": ("low", 0.0, 0.0),
+                "admits_more": ("low", 0.0, 0.0),
+                "hit_rate": ("low", 0.0, 0.0),
+                "p99_advantage": ("low", 0.05, 0.0),
+                "on_p99_ttft": ("high", 0.05, 1e-4),
+                "on_peak_inflight": ("low", 0.0, 0.0),
+            }),
         ],
     },
     "calibration": {

@@ -151,6 +151,68 @@ def fleet_pair(arch: str, bucket: int, rate: float, *, n_req: int = 24,
     return out
 
 
+def prefix_pair(arch: str, bucket: int, *, n_req: int = 16,
+                n_prefixes: int = 4, prefix_chunks: int = 6,
+                zipf_a: float = 1.1, sa_iters: int = 8, inflight: int = 2,
+                seed: int = 0):
+    """Shared-prefix workload: the radix prefix index ON vs OFF at EQUAL
+    lease budget — the ISSUE 10 acceptance rows.
+
+    A seeded system-prompt + few-shot mix: each request draws one of
+    ``n_prefixes`` shared prefix chains with Zipf(``zipf_a``) popularity
+    (chain element = synthetic chunk-content hash) covering its first
+    ``prefix_chunks`` chunks, then a per-request novel suffix. Both engines
+    see the IDENTICAL closed-loop stream; everything downstream is the
+    analytic cost model on a virtual clock, so the hit rate, the
+    peak-inflight admission win and the p99-TTFT advantage are all
+    deterministic and get exact gates in benchmarks/compare.py."""
+    import numpy as np
+    cfg = get_config(arch)
+    base = EngineConfig(model=cfg, hw=cm.WSC_PAPER, num_stages=NUM_STAGES,
+                        tp=1, num_chunks=NUM_CHUNKS, max_batch=NUM_REQUESTS,
+                        buckets=(bucket,), partition="lbcp",
+                        sa_iters=sa_iters, inflight=inflight)
+    rng = np.random.default_rng(seed)
+    w = 1.0 / np.arange(1, n_prefixes + 1) ** zipf_a
+    pids = rng.choice(n_prefixes, size=n_req, p=w / w.sum())
+    chains = [tuple([(int(z) + 1) * 10_000 + j for j in range(prefix_chunks)]
+                    + [(i + 1) * 1_000_000 + j
+                       for j in range(NUM_CHUNKS - prefix_chunks)])
+              for i, z in enumerate(pids)]
+    out = {}
+    for mode in ("off", "on"):
+        eng = ContinuousEngine(dc_replace(base, prefix_cache=mode),
+                               SimExecutor(cfg, base.hw))
+        for i, ch in enumerate(chains):
+            eng.submit(Request(rid=i, arrival=0.0, seq_len=bucket,
+                               prefix_hashes=ch))
+        eng.run_until_drained()
+        out[mode] = eng.metrics()
+    return out
+
+
+def run_prefix_rows(quick: bool = False):
+    rows = []
+    sa = 8 if quick else 24
+    for arch, bucket in (("llama3-70b", 32768), ("qwen3-235b", 65536)):
+        m = prefix_pair(arch, bucket, sa_iters=sa)
+        on, off = m["on"], m["off"]
+        rows.append({
+            "arch": arch,
+            "seq": bucket,
+            "off_p99_ttft": off["p99_ttft"],
+            "on_p99_ttft": on["p99_ttft"],
+            "p99_advantage": off["p99_ttft"] / max(on["p99_ttft"], 1e-12),
+            "prefix_beats_off": int(on["p99_ttft"] < off["p99_ttft"]),
+            "hit_rate": on["prefix_hit_rate"],
+            "off_peak_inflight": off["peak_inflight"],
+            "on_peak_inflight": on["peak_inflight"],
+            "admits_more": int(on["peak_inflight"] > off["peak_inflight"]),
+            "saved_gb": on["prefix_saved_bytes"] / 1e9,
+        })
+    return rows
+
+
 def run_fleet_rows(quick: bool = False):
     rows = []
     sa = 8 if quick else 24
@@ -201,13 +263,20 @@ def main(quick: bool = False) -> None:
                              "rr_p99_ttft", "p99_advantage",
                              "router_beats_rr", "jsf_slo_attainment",
                              "rr_slo_attainment"]))
+    prefix_rows = run_prefix_rows(quick)
+    print(table(prefix_rows, ["arch", "seq", "off_p99_ttft", "on_p99_ttft",
+                              "p99_advantage", "prefix_beats_off",
+                              "hit_rate", "off_peak_inflight",
+                              "on_peak_inflight", "admits_more",
+                              "saved_gb"]))
     worst = min(r["speedup"] for r in rows)
     # JSON twin of the CSV so the bench-regression gate (benchmarks.compare)
     # can diff it against the committed BENCH_sched.json baseline
     jpath = os.path.join(OUT_DIR, "sched_throughput.json")
     with open(jpath, "w") as f:
         json.dump({"quick": quick, "min_speedup": round(worst, 3),
-                   "rows": rows, "fleet": fleet_rows}, f, indent=1)
+                   "rows": rows, "fleet": fleet_rows,
+                   "prefix": prefix_rows}, f, indent=1)
     print(f"-> {jpath}")
     print(f"min speedup across sweep: {worst:.2f}x "
           f"({'PASS' if worst >= 1.5 else 'BELOW'} the 1.5x floor)")
@@ -216,6 +285,11 @@ def main(quick: bool = False) -> None:
     adv = min(r["p99_advantage"] for r in fleet_rows)
     print(f"fleet router p99-TTFT advantage over round-robin: {adv:.2f}x "
           f"({'PASS' if adv > 1.0 else 'BELOW'} the >1x floor)")
+    padv = min(r["p99_advantage"] for r in prefix_rows)
+    pok = all(r["prefix_beats_off"] and r["admits_more"]
+              for r in prefix_rows)
+    print(f"prefix cache p99-TTFT advantage over off: {padv:.2f}x, "
+          f"admits-more+beats-off: {'PASS' if pok and padv > 1.0 else 'FAIL'}")
 
 
 if __name__ == "__main__":

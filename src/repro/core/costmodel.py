@@ -177,6 +177,7 @@ def chunk_cost_arrays(
     *,
     mbkr_plan: Optional["object"] = None,  # core.mbkr.MBKRPlan
     compress: float = 1.0,
+    prefix_hit_chunks: int = 0,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Per-chunk cost vectors shared by the analytic evaluator, the event
     simulator, and the chunk-level scheduler.
@@ -187,6 +188,14 @@ def chunk_cost_arrays(
       kvb     stage-KV bytes written by chunk i
       spill_t MBKR debtor spill seconds (chunks with index >= p2)
       fetch_t MBKR remote-KV re-read seconds (prefix chunks hosted at the pair)
+
+    ``prefix_hit_chunks=k`` prices a request whose first ``k`` chunks are
+    served by the prefix index (``kvstore.prefix``): their self-block
+    compute, boundary hop, spill and fetch wire all vanish — the EFFECTIVE
+    sequence is the novel suffix — while later chunks still attend over the
+    full (cached) prefix and ``kvb`` still reports the stored bytes the
+    pages occupy (lease accounting subtracts sharing separately via
+    ``kvlease.chunk_page_bytes(shared_pages=...)``).
     """
     hw = resolve_profile(hw)
     m = len(chunks)
@@ -196,14 +205,18 @@ def chunk_cost_arrays(
     spill_t = np.zeros(m)
     fetch_t = np.zeros(m)
     p2 = m if mbkr_plan is None else mbkr_plan.p2
+    k = min(max(int(prefix_hit_chunks), 0), m - 1 if m else 0)
     link = hw.link_bw * hw.link_eff
     prefix = 0
     for i, c in enumerate(chunks):
-        dur[i] = chunk_compute_time(sm, c, prefix, hw)
-        comm[i] = boundary_comm_time(sm.cfg, c, hw)
+        if i >= k:
+            dur[i] = chunk_compute_time(sm, c, prefix, hw)
+            comm[i] = boundary_comm_time(sm.cfg, c, hw)
         kvb[i] = kv_chunk_bytes(sm, c)
         prefix += c
     for i, c in enumerate(chunks):
+        if i < k:
+            continue
         if i >= p2:
             spill_t[i] = spill_time(sm, c, hw, compress=compress)
         if i > p2:
@@ -263,6 +276,7 @@ def chunk_cost_features(
     *,
     mbkr_plan: Optional["object"] = None,
     compress: float = 1.0,
+    prefix_hit_chunks: int = 0,
 ) -> np.ndarray:
     """Per-chunk work-quantity matrix ``X [M, 4]`` (FEATURE_TERMS columns)
     such that ``X @ profile_theta(hw, sm.tp)`` equals the analytic per-chunk
@@ -271,16 +285,26 @@ def chunk_cost_features(
     The attention regime (compute- vs bandwidth-bound) is chosen under the
     GIVEN profile: the inactive branch's column is zero for that chunk, so
     the fit stays linear. A calibration that flips a chunk's regime shows up
-    as residual, not as a fit failure."""
+    as residual, not as a fit failure.
+
+    ``prefix_hit_chunks=k`` zeroes the feature rows of index-served chunks —
+    the same effective-sequence discipline as ``chunk_cost_arrays``, so the
+    LBCP partition and the calibration identity both price the shorter
+    suffix (prefix accumulation for later chunks is unchanged: they still
+    attend over the cached prefix)."""
     hw = resolve_profile(hw)
     cfg = sm.cfg
     m = len(chunks)
     x = np.zeros((m, 4))
     theta = profile_theta(hw, sm.tp)
     p2 = m if mbkr_plan is None else mbkr_plan.p2
+    k = min(max(int(prefix_hit_chunks), 0), m - 1 if m else 0)
     kvb = np.array([kv_chunk_bytes(sm, c) for c in chunks])
     prefix = 0
     for i, c in enumerate(chunks):
+        if i < k:
+            prefix += c
+            continue
         x[i, 0] = sm.layers * c * layer_linear_flops_per_token(cfg)
         afl = sm.attn_layers * attn_flops(cfg, c, prefix)
         abytes = sm.attn_layers * (prefix + c) * kv_bytes_per_token_layer(cfg)

@@ -65,6 +65,9 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
                      embeds: Optional[jax.Array] = None,
                      return_ledger: bool = False,
                      return_telemetry: bool = False,
+                     prefix_chunks: int = 0,
+                     prefix_pool: Optional[PagedPool] = None,
+                     return_kv: bool = False,
                      tick_hook=None, health=None) -> jax.Array:
     """Chunked-pipeline prefill of ``tokens`` [B, S]; returns next-token
     logits [B, Vpad] (prefill-only: ONE output token, KV is discarded).
@@ -104,17 +107,45 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     Both default to None, in which case NOTHING extra is traced — the
     compiled program is bit-identical (proven in tests/test_calibration.py,
     same style as the telemetry-off proof).
+
+    ``prefix_chunks`` / ``prefix_pool`` / ``return_kv``: the device half of
+    the prefix KV cache (``repro.kvstore.prefix``, DESIGN.md §11). When
+    ``prefix_pool`` is given (a stage-stacked ``PagedPool`` snapshot, leading
+    axis = stage) it REPLACES the zero-initialized pool, so the first
+    ``prefix_chunks`` chunks of every sequence read cached KV instead of the
+    KV they just computed; ``core.remote.write_pools`` redirects those
+    chunks' writes to the scratch slot (the cached pages stay authoritative)
+    and charges the ``prefix_hit`` ledger/telemetry keys. ``return_kv``
+    additionally returns the scan-final pool snapshot so the host can seed
+    future calls. All three default off, in which case the lowering is
+    bit-identical to a build without this feature (the keys exist in the
+    ledger/telemetry pytrees unconditionally, so no collective count
+    changes). Return order is ``logits[, ledger][, telemetry][, kv]``.
     """
     if plan.mode == "gpipe":
         assert not return_ledger, "gpipe has no MBKR transport ledger"
         assert tick_hook is None and health is None, \
             "tick_hook/health probe only the chunked-pipeline driver"
+        assert prefix_chunks == 0 and prefix_pool is None and not return_kv, \
+            "prefix KV cache rides the chunked-pipeline paged pool only"
         return gpipe_prefill(cfg, staged, tokens, plan, topo,
                              return_telemetry=return_telemetry)
     n, m, c = plan.num_stages, plan.num_chunks, plan.chunk_len
     lps = plan.layers_per_stage
     st_ax = topo.stage_axis
     mtp = manual_tp_plan(cfg, plan, topo)
+    if prefix_chunks or prefix_pool is not None or return_kv:
+        assert cfg.family in ("dense", "moe"), \
+            "prefix KV cache needs the pure paged-pool families (dense/moe)"
+        # the pool's kvh axis must shard over the FULL manual TP degree, or
+        # the host-side snapshot geometry wouldn't round-trip 1:1
+        assert mtp is None or mtp.kv_div == mtp.tp, \
+            "prefix pool I/O under manual TP requires kv_div == tp"
+    if prefix_chunks:
+        assert prefix_pool is not None, \
+            "prefix_chunks > 0 requires a seeded prefix_pool"
+        assert prefix_chunks <= min(plan.p2, plan.num_chunks - 1), \
+            "prefix hits must stay within own-resident, non-final chunks"
     manual, pod_axes = batch_specs(topo, mtp)
     transport = tx.get_transport(plan.transport)
     led_axes = (st_ax,) + (mtp.axes if mtp is not None else ())
@@ -158,6 +189,10 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
 
         if is_ssm:  # attention-free: no KV pool at all
             pool = PagedPool(jnp.zeros((0,), dt), jnp.zeros((0,), dt))
+        elif "prefix_pool" in extra:
+            # seed from the cached snapshot (leading axis = stage, local
+            # length 1 under the manual stage mapping) instead of zeros
+            pool = jax.tree.map(sq, extra["prefix_pool"])
         else:
             pool = alloc_kv_pool(cfg, plan, b, topo, mtp=mtp)
         x0 = jnp.zeros((b, c, cfg.d_model), dt)
@@ -205,7 +240,8 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             ctx = StageCtx(cfg=cfg, plan=plan, topo=topo, stage=stage,
                            phase=phase, first_half=stage < n // 2,
                            pair_perm=pair_perm, scale=scale,
-                           transport=transport, mtp=mtp, x_spec=x_spec)
+                           transport=transport, mtp=mtp, x_spec=x_spec,
+                           prefix_chunks=prefix_chunks)
             # ---- input: stage 0 embeds chunk t; others consume the ring buffer
             tc = jnp.clip(t, 0, m - 1)
             if n_front:
@@ -264,7 +300,7 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
 
         tel0 = obs_t.telemetry_init() if return_telemetry else None
         carry0 = (x0, pool, state0, x_last0, tx.ledger_init(), tel0)
-        (xf, _, _, x_last, led, _), (tel_ys, bad_ys) = jax.lax.scan(
+        (xf, pool_f, _, x_last, led, _), (tel_ys, bad_ys) = jax.lax.scan(
             tick, carry0, jnp.arange(plan.num_ticks))
         # replicate the final hidden state across stages
         x_last, led = transport.stage_psum(x_last, st_ax, led)
@@ -274,6 +310,10 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
             tel_ys = obs_t.telemetry_collect(
                 tel_ys, mtp.axes if mtp is not None else None)
             outs.append({k: v[None, :] for k, v in tel_ys.items()})  # [1, T]
+        if return_kv:
+            # scan-final pool, re-stacked on a leading stage axis for the
+            # host-side snapshot (mirrors the prefix_pool input layout)
+            outs.append(jax.tree.map(lambda a: a[None], pool_f))
         if health is not None:
             # residual is replicated across manual TP, so the count already
             # agrees on every TP shard — no psum, no extra collective
@@ -287,6 +327,15 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         extra["enc_out"] = enc_out
     if embeds is not None and not is_encdec:
         extra["embeds"] = embeds
+    if prefix_pool is not None:
+        extra["prefix_pool"] = prefix_pool
+
+    # one spec covers every pool leaf: [n, P, lps, B, pt|1, kvh, hd|1] —
+    # stage axis leads, batch is pod-sharded, kv heads carry the manual TP
+    # axes (kv_div == tp is asserted above); under GSPMD-auto the kv-split
+    # sharding flows from the argument's actual sharding instead
+    kv_leaf_spec = P(st_ax, None, None, pod_axes if pod_axes else None, None,
+                     mtp.axes if mtp is not None else None, None)
 
     specs = stage_param_specs(cfg, plan, topo)
     sl_specs = manual_tree(specs["stage_layers"], manual)
@@ -297,6 +346,9 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         extra_specs["enc_out"] = P(pod_axes if pod_axes else None, None, None)
     if "embeds" in extra:
         extra_specs["embeds"] = P(pod_axes if pod_axes else None, None, None)
+    if "prefix_pool" in extra:
+        extra_specs["prefix_pool"] = jax.tree.map(
+            lambda _: kv_leaf_spec, extra["prefix_pool"])
     tok_spec = P(pod_axes if pod_axes else None, None)
     out_spec = P(pod_axes if pod_axes else None, None)
     led_specs = {k: P() for k in tx.LEDGER_KEYS}
@@ -304,6 +356,11 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     out_specs_l: list = [out_spec, led_specs]
     if return_telemetry:
         out_specs_l.append(tel_specs)
+    if return_kv:
+        out_specs_l.append(PagedPool(
+            kv_leaf_spec, kv_leaf_spec,
+            kv_leaf_spec if plan.codec.quantized else None,
+            kv_leaf_spec if plan.codec.quantized else None))
     if health is not None:
         out_specs_l.append(P(st_ax, None))
     out_specs = tuple(out_specs_l)
@@ -319,6 +376,7 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
     outs = list(outs)
     x_last, ledger = outs[0], outs[1]
     telem = outs[2] if return_telemetry else None
+    kv_out = outs[2 + int(return_telemetry)] if return_kv else None
     if health is not None:
         # operand callbacks are legal HERE (outside the manual region):
         # one host delivery of the full [N, T] non-finite profile
@@ -334,10 +392,11 @@ def prefill_pipeline(cfg: ModelConfig, staged: Params, tokens: jax.Array,
         logits, NamedSharding(topo.mesh, P(
             tuple(a for a in topo.batch_axes if a != topo.stage_axis) or None,
             None, None if mtp is not None else topo.tp_axis)))
-    if return_ledger and return_telemetry:
-        return logits[:, 0], ledger, telem
+    ret = [logits[:, 0]]
     if return_ledger:
-        return logits[:, 0], ledger
+        ret.append(ledger)
     if return_telemetry:
-        return logits[:, 0], telem
-    return logits[:, 0]
+        ret.append(telem)
+    if return_kv:
+        ret.append(kv_out)
+    return ret[0] if len(ret) == 1 else tuple(ret)

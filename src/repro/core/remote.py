@@ -55,6 +55,7 @@ import jax.numpy as jnp
 
 from repro.core.attention import (AttentionBackend, State, attn_combine,
                                   attn_init, pool_scan)
+from repro.core import transport as tx
 from repro.core.transport import Ledger
 from repro.kvstore import pages as kvpages
 from repro.kvstore import quant as kvquant
@@ -233,7 +234,17 @@ def write_pools(ctx, pool: kvpages.PagedPool, stage_k, stage_v,
     """End-of-tick page writes: encode the fresh chunk once, scatter its
     pages to the own slot (phase < p2) or ship the payload cross-half and
     scatter under the creditor's page table. Inactive phases write to the
-    scratch slot's pages (write-garbage land, never read)."""
+    scratch slot's pages (write-garbage land, never read).
+
+    With the prefix path armed (``ctx.prefix_chunks = k > 0``) the first
+    ``k`` phases ALSO redirect to scratch: the pool was seeded with the
+    cached prefix KV (``kvstore.prefix.DeviceSeedCache``), so the fresh
+    recompute of a hit chunk must not clobber the authoritative pages —
+    copy-on-write at the device. Each redirected store charges the
+    ``prefix_hit`` saved-bytes category (ledger: the chunk's stored bytes;
+    telemetry: one event), pinned against ``obs.telemetry.
+    prefix_saved_model``. ``k`` is STATIC: the disarmed program is
+    byte-identical to pre-prefix builds."""
     plan = ctx.plan
     codec = plan.codec
     slot_pages = jnp.asarray(plan.slot_pages)
@@ -242,6 +253,14 @@ def write_pools(ctx, pool: kvpages.PagedPool, stage_k, stage_v,
 
     own_tbl = jnp.asarray(plan.own_slot)
     own_slot = jnp.where(active & (phase < plan.p2), own_tbl[pidx], plan.scratch)
+    if ctx.prefix_chunks > 0:
+        hit = active & (phase < ctx.prefix_chunks)
+        own_slot = jnp.where(hit, plan.scratch, own_slot)
+        lps, b, c, kvh, hd = stage_k.shape
+        led = tx.charge(led, "prefix_hit",
+                        obs_t.chunk_stored_bytes(plan, lps, b, c, kvh, hd),
+                        hit)
+        tel = obs_t.charge(tel, "prefix_hit", 1.0, hit, _rep(ctx))
     kq, ksc = kvquant.encode(codec, stage_k, pages=plan.pages_per_chunk)
     vq, vsc = kvquant.encode(codec, stage_v, pages=plan.pages_per_chunk)
     pool = kvpages.scatter_chunk_raw(pool, slot_pages[own_slot],

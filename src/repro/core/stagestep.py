@@ -62,6 +62,11 @@ class StageCtx:
     transport: Transport = None
     mtp: Optional[ManualTP] = None  # manual TP lowering plan (None = GSPMD)
     x_spec: Any = P(None, None, None)  # residual-stream sharding (SP variant)
+    # STATIC hit-prefix length (chunks): the first k chunk writes redirect to
+    # the scratch slot because the pool was SEEDED with cached prefix KV
+    # (kvstore.prefix / DESIGN.md §11). 0 = prefix path disarmed; the traced
+    # program is then byte-identical to pre-prefix builds.
+    prefix_chunks: int = 0
 
     @property
     def active(self):

@@ -43,8 +43,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# "prefix_hit" is SAVED bytes, not wire bytes: the stored KV a prefix-cache
+# hit did not re-materialize (one chunk-store per (stage, hit phase); closed
+# form in obs.telemetry.prefix_saved_model). The key exists unconditionally —
+# same pytree, same psum count whether the prefix path is armed or not — so
+# the disabled lowering stays bit-identical with zero extra collectives.
 LEDGER_KEYS = ("ring", "collect", "spill", "fetch", "qship_q", "qship_state",
-               "tp")
+               "tp", "prefix_hit")
 
 Ledger = Optional[Dict[str, jax.Array]]
 

@@ -40,9 +40,16 @@ class FleetFabric:
     # ------------------------------------------------------------ admission
     def submit(self, req: Any, pump: bool = True) -> PlacementDecision:
         """Route one request to a cell and (by default) pump that cell so
-        the NEXT placement scores against its post-admission frontier."""
-        dec = self.router.place(self.cells, req.rid, req.seq_len,
-                                arrival=req.arrival)
+        the NEXT placement scores against its post-admission frontier.
+
+        A ``rejected`` decision (every live cell's KV-lease headroom
+        exhausted) submits NOTHING — the caller reads ``dec.retry_after``
+        and resubmits; the rejection is counted into ``fleet_summary``."""
+        dec = self.router.place(
+            self.cells, req.rid, req.seq_len, arrival=req.arrival,
+            prefix_hashes=getattr(req, "prefix_hashes", None))
+        if dec.rejected:
+            return dec
         cell = self.cells[dec.cell]
         cell.submit(req)
         self.placements[req.rid] = dec.cell
@@ -97,9 +104,11 @@ class FleetFabric:
 
     def metrics(self) -> Dict[str, Any]:
         """Fleet-level SLO/TTFT roll-up over every cell ever part of the
-        fleet (live + retired) — ``sched.metrics.fleet_summary``."""
+        fleet (live + retired) — ``sched.metrics.fleet_summary`` — plus the
+        router's reject-with-retry-after count."""
         return fleet_summary({name: cell.records()
-                              for name, cell in self._all_cells().items()})
+                              for name, cell in self._all_cells().items()},
+                             router_rejections=self.router.rejections)
 
     def configure_obs(self, *, telemetry: Optional[bool] = None,
                       measured: Optional[bool] = None,

@@ -23,6 +23,10 @@ class CellSignals:
     does not fit now. ``lease_fits`` says whether the quote required
     deferring behind an existing lease. ``free_lease_bytes`` is the
     tightest per-stage KV headroom; ``queue_depth`` the live request count.
+    ``prefix_hit_pages`` is how many of the request's prefix pages this
+    cell's radix index already holds (``CellHandle.prefix_hit_pages``) —
+    the prefix-affinity signal; 0 when the cache is off or no hashes were
+    passed.
     """
     name: str
     index: int
@@ -31,26 +35,40 @@ class CellSignals:
     free_lease_bytes: float
     queue_depth: int
     draining: bool = False
+    prefix_hit_pages: int = 0
 
 
 def snapshot(name: str, index: int, cell: Any, seq_len: int,
-             arrival: float = 0.0) -> CellSignals:
-    """Read a cell's placement signals through the CellHandle protocol."""
-    eta, fits = cell.estimate_admission(seq_len, arrival=arrival)
+             arrival: float = 0.0,
+             prefix_hashes: Optional[Sequence[int]] = None) -> CellSignals:
+    """Read a cell's placement signals through the CellHandle protocol.
+    ``prefix_hashes`` (the request's chunk-hash chain) folds the radix
+    index into both the ETA quote and the affinity tiebreak; cells that
+    predate the prefix signals are read as hit-free."""
+    if prefix_hashes:
+        eta, fits = cell.estimate_admission(seq_len, arrival=arrival,
+                                            prefix_hashes=prefix_hashes)
+        hit = int(cell.prefix_hit_pages(prefix_hashes)) \
+            if hasattr(cell, "prefix_hit_pages") else 0
+    else:
+        eta, fits = cell.estimate_admission(seq_len, arrival=arrival)
+        hit = 0
     return CellSignals(
         name=name, index=index, eta=float(eta), lease_fits=bool(fits),
         free_lease_bytes=float(cell.free_lease_bytes()),
         queue_depth=int(cell.queue_depth()),
-        draining=bool(cell.draining))
+        draining=bool(cell.draining), prefix_hit_pages=hit)
 
 
 # ------------------------------------------------------------------ scoring
 
 def _score_jsf(s: CellSignals) -> Tuple:
     # earliest predicted finish; prefer a cell whose lease fits NOW over an
-    # equal-ETA cell that had to defer; then headroom, then index
+    # equal-ETA cell that had to defer; then the cell already holding the
+    # request's prefix (its radix hit also shrank the ETA quote — this
+    # tiebreak settles equal-ETA cells); then headroom, then index
     return (s.eta, 0 if s.lease_fits else 1,
-            -s.free_lease_bytes, s.index)
+            -s.prefix_hit_pages, -s.free_lease_bytes, s.index)
 
 
 def _score_least_loaded(s: CellSignals) -> Tuple:

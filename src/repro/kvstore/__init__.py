@@ -13,10 +13,17 @@ MOCAP orchestrates KV *slots* (``core.mbkr``) and *leases*
 - ``tiers``  — hot (stage-local) / warm (MBKR pair-hosted) / cold (host
                offload) placement with analytic prefetch scheduled off the
                LBCP chunk plan.
+- ``prefix`` — cross-request prefix reuse: a refcounted radix index keyed
+               by chained chunk-content hash with copy-on-write on
+               divergence, so an admitted request leases only its novel
+               suffix (DESIGN.md §11).
 """
 from repro.kvstore.pages import (PageGeometry, PagedPool, alloc_pool,
                                  build_slot_pages, gather_chunk, page_geometry,
                                  pool_bytes, scatter_chunk, verify_page_plan)
+from repro.kvstore.prefix import (DeviceSeedCache, PrefixLease,
+                                  PrefixPageCache, chunk_hashes,
+                                  verify_prefix_index)
 from repro.kvstore.quant import (KVCodec, decode, encode, get_codec,
                                  kv_compress_factor, list_codecs)
 from repro.kvstore.tiers import (HostOffloadStager, PrefetchOp, TierPlan,

@@ -47,6 +47,9 @@ class ServeOptions:
     kv_dtype: str = "auto"
     kv_page_tokens: int = 0
     kv_offload: bool = False
+    # cross-request prefix KV reuse (repro.kvstore.prefix)
+    prefix_cache: str = "off"          # off | on
+    prefix_min_pages: int = 1
     # scheduling
     scheduler: str = "batch"           # batch | continuous
     policy: str = "fcfs"               # fcfs | sjf | edf
@@ -153,6 +156,14 @@ def add_serve_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--kv-offload", action="store_true", default=S,
                     help="plan the cold KV tier (kvstore.tiers) and print "
                          "the tier summary")
+    ap.add_argument("--prefix-cache", default=S, choices=("off", "on"),
+                    help="radix prefix KV index (kvstore.prefix): admitted "
+                         "requests whose leading chunks are already "
+                         "resident lease only their novel suffix "
+                         "(continuous scheduler); off = bit-identical to a "
+                         "build without the feature")
+    ap.add_argument("--prefix-min-pages", type=int, default=S,
+                    help="ignore prefix hits smaller than this many pages")
     ap.add_argument("--scheduler", default=S, choices=("batch", "continuous"),
                     help="batch = batch-synchronous PrefillEngine; "
                          "continuous = cross-request chunk pipelining")

@@ -115,7 +115,9 @@ def _build_engine(opts: ServeOptions, *, topo=None, jax_ctx=None):
                           buckets=opts.buckets or SIM_BUCKETS,
                           partition="lbcp", kv_dtype=opts.kv_dtype,
                           kv_page_tokens=opts.kv_page_tokens,
-                          policy=opts.policy, slo=slo, trace=want_trace)
+                          policy=opts.policy, slo=slo, trace=want_trace,
+                          prefix_cache=opts.prefix_cache,
+                          prefix_min_pages=opts.prefix_min_pages)
         executor = SimExecutor(cfg, hw)
     else:
         from repro import compat
@@ -160,7 +162,9 @@ def _build_engine(opts: ServeOptions, *, topo=None, jax_ctx=None):
                           buckets=opts.buckets or (opts.seq,),
                           partition="uniform", kv_dtype=opts.kv_dtype,
                           kv_page_tokens=opts.kv_page_tokens,
-                          policy=opts.policy, slo=slo, trace=want_trace)
+                          policy=opts.policy, slo=slo, trace=want_trace,
+                          prefix_cache=opts.prefix_cache,
+                          prefix_min_pages=opts.prefix_min_pages)
         executor = JaxExecutor(cfg, staged, topo, run)
     if opts.scheduler == "continuous":
         eng = ContinuousEngine(ec, executor)

@@ -48,8 +48,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+# "prefix_hit" counts chunk writes served from the prefix cache (one event
+# per (stage, hit phase) — the scratch-redirected stores whose KV the radix
+# index already held; closed form in ``prefix_saved_model``). The key exists
+# unconditionally so armed and disabled runs carry the same pytree.
 TELEM_KEYS = ("own_chunks", "hosted_chunks", "kv_bytes", "spill_events",
-              "fetch_events", "qship_events", "attn_work", "launches")
+              "fetch_events", "qship_events", "attn_work", "launches",
+              "prefix_hit")
 
 StageTelemetry = Optional[Dict[str, jax.Array]]
 
@@ -207,6 +212,24 @@ def per_event_wire_bytes(plan, cfg, b: int) -> Dict[str, float]:
         if n_q:
             out["qship"] = (w["qship_q"] + w["qship_state"]) / n_q
     return out
+
+
+def prefix_saved_model(plan, lps: int, b: int, c: int, kvh: int, hd: int,
+                       prefix_chunks: int) -> Dict[str, float]:
+    """Closed-form twin of the ``prefix_hit`` ledger/telemetry category for
+    one armed ``prefill_pipeline(..., prefix_chunks=k)`` call: every stage
+    redirects exactly its ``k`` hit-phase chunk stores to scratch, so
+
+        ledger_bytes = N_stages x k x chunk_stored_bytes   (saved KV stores)
+        events       = N_stages x k                        (telemetry count)
+
+    with the SAME clamp the device applies (``k <= min(p2, M-1)``). The
+    runtime counters are pinned against this in tests/test_prefix.py."""
+    k = min(max(int(prefix_chunks), 0),
+            min(plan.p2, plan.num_chunks - 1))
+    cb = chunk_stored_bytes(plan, lps, b, c, kvh, hd)
+    return {"ledger_bytes": plan.num_stages * k * cb,
+            "events": float(plan.num_stages * k)}
 
 
 @dataclass

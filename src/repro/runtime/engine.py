@@ -54,6 +54,10 @@ class Request:
     replays: int = 0
     result: Any = None
     deadline: float = math.inf     # absolute SLO deadline (continuous mode)
+    # chained chunk-content hashes (kvstore.prefix.chunk_hashes); filled by
+    # ContinuousEngine.submit from tokens when the prefix cache is armed,
+    # or supplied directly by token-free (sim / bench) callers
+    prefix_hashes: Tuple[int, ...] = ()
 
 
 def bucket_of(buckets: Sequence[int], seq_len: int) -> int:
@@ -90,6 +94,13 @@ class EngineConfig:
     slo: Optional[float] = None        # seconds; deadline = arrival + slo
     inflight: int = 2                  # MBKR slot pools provisioned
     trace: bool = False                # record the scheduler trace
+    # Cross-request prefix KV reuse (repro.kvstore.prefix, DESIGN.md §11):
+    # "on" arms the radix index — an admitted request whose leading chunks
+    # are already resident leases ONLY its novel suffix and is priced
+    # against the shorter effective sequence; "off" (default) keeps the
+    # lowering bit-identical to a build without the feature
+    prefix_cache: str = "off"          # off | on
+    prefix_min_pages: int = 1          # ignore hits smaller than this
 
 
 class StageFailure(RuntimeError):
@@ -129,8 +140,11 @@ class CellHandle(Protocol):
     # -------------------------------------------------------------- signals
     def queue_depth(self) -> int: ...
     def free_lease_bytes(self) -> float: ...
-    def estimate_admission(self, seq_len: int,
-                           arrival: float = 0.0) -> Tuple[float, bool]: ...
+    def estimate_admission(self, seq_len: int, arrival: float = 0.0,
+                           prefix_hashes: Optional[Sequence[int]] = None
+                           ) -> Tuple[float, bool]: ...
+    def prefix_stats(self) -> Dict[str, Any]: ...
+    def prefix_hit_pages(self, prefix_hashes: Sequence[int]) -> int: ...
 
     # ----------------------------------------------------- metrics / obs
     def metrics(self) -> Dict[str, Any]: ...
@@ -223,7 +237,16 @@ class JaxExecutor:
     ``health`` (an ``obs.health.HealthMonitor``) arms the non-finite
     sentinels in the pipeline and, when telemetry is also on, runs the
     occupancy-drift check against each wave. Attach BEFORE the first run
-    at a given shape — the monitor is captured at trace time."""
+    at a given shape — the monitor is captured at trace time.
+
+    ``prefix_enabled`` (set by ``ContinuousEngine`` when
+    ``EngineConfig.prefix_cache == "on"``) arms the DEVICE half of the
+    prefix cache: every wave runs with ``return_kv=True`` and lands each
+    request's batch element of the final paged pool in a per-geometry
+    ``kvstore.prefix.DeviceSeedCache``; a later wave whose requests all
+    share a cached prefix of ``k`` chunks is seeded from those snapshots
+    and compiled with ``prefix_chunks=k`` (hit chunks read cached KV, their
+    writes land in the scratch slot)."""
 
     def __init__(self, cfg: ModelConfig, staged_params, topo, run: RunConfig):
         import time
@@ -238,6 +261,35 @@ class JaxExecutor:
         self._span_col = None
         self.waves: List[Dict[str, Any]] = []
         self._epoch = time.perf_counter()
+        self.prefix_enabled = False
+        self.prefix_seed_entries = 8       # DeviceSeedCache LRU bound
+        self._seed_caches: Dict[Tuple, Any] = {}   # (seq, m) -> DeviceSeedCache
+        self.prefix_device_hit_chunks = 0  # sum of seeded k over waves
+
+    # ----------------------------------------------------- device prefix
+    def _seed_cache(self, seq: int, m: int):
+        from repro.kvstore.prefix import DeviceSeedCache
+        key = (seq, m)
+        if key not in self._seed_caches:
+            self._seed_caches[key] = DeviceSeedCache(self.prefix_seed_entries)
+        return self._seed_caches[key]
+
+    @staticmethod
+    def _wave_chains(requests: Sequence[Request]) -> List[Tuple[int, ...]]:
+        return [tuple(getattr(r, "prefix_hashes", ()) or ()) for r in requests]
+
+    def _assemble_seed(self, cache, chains: List[Tuple[int, ...]], k: int):
+        """Stack each request's cached batch element into one stage-stacked
+        ``PagedPool`` [n, P, lps, B, ...] for ``prefill_pipeline``'s
+        ``prefix_pool`` input. None if any element is missing."""
+        from repro.kvstore.pages import PagedPool
+        elems = [cache.lookup(ch, k) for ch in chains]
+        if any(e is None for e in elems):
+            return None
+        stack = lambda key: (None if elems[0][key] is None else
+                             np.stack([e[key] for e in elems], axis=3))
+        return PagedPool(stack("k"), stack("v"),
+                         stack("k_scale"), stack("v_scale"))
 
     def run(self, requests: Sequence[Request], chunks: Sequence[int],
             num_stages: int, tp: int) -> Tuple[float, np.ndarray]:
@@ -247,11 +299,31 @@ class JaxExecutor:
         collect = bool(self.collect_telemetry)
         measured = bool(self.collect_measured)
         health = self.health
-        key = (seq, len(chunks), collect, measured, health is not None)
+        armed = bool(self.prefix_enabled)
+        # ---- device prefix: wave-uniform seedable hit length k (static —
+        # keyed into the jit cache) + the stacked seed pool when k > 0
+        k, seed_pool, chains, seed_cache = 0, None, [], None
+        if armed:
+            seed_cache = self._seed_cache(seq, len(chunks))
+            chains = self._wave_chains(requests)
+            if all(chains):
+                k = min(seed_cache.match(ch) for ch in chains)
+        key = (seq, len(chunks), collect, measured, health is not None,
+               armed, k)
         if key not in self._fns:
             plan = self._pp.build_plan(
                 self.cfg, num_stages, seq,
                 dc_replace(self.run_cfg, num_chunks=len(chunks)))
+            self._fns[key] = (None, plan)   # fn built below (needs the plan)
+        _, plan = self._fns[key]
+        if armed:
+            k = min(k, plan.p2, len(chunks) - 1)
+            if k > 0:
+                seed_pool = self._assemble_seed(seed_cache, chains, k)
+                if seed_pool is None:
+                    k = 0
+            self.prefix_device_hit_chunks += k
+        if self._fns[key][0] is None:
             cfg, topo = self.cfg, self.topo
             hook = None
             if measured:
@@ -259,9 +331,20 @@ class JaxExecutor:
                     from repro.obs.profile import TickSpanCollector
                     self._span_col = TickSpanCollector()
                 hook = self._span_col.note
-            fn = jax.jit(lambda st, tk: self._pp.prefill_pipeline(
-                cfg, st, tk, plan, topo, return_telemetry=collect,
-                tick_hook=hook, health=health))
+            kk = k
+            if armed and kk > 0:
+                fn = jax.jit(lambda st, tk, pool: self._pp.prefill_pipeline(
+                    cfg, st, tk, plan, topo, return_telemetry=collect,
+                    prefix_chunks=kk, prefix_pool=pool, return_kv=True,
+                    tick_hook=hook, health=health))
+            elif armed:
+                fn = jax.jit(lambda st, tk: self._pp.prefill_pipeline(
+                    cfg, st, tk, plan, topo, return_telemetry=collect,
+                    return_kv=True, tick_hook=hook, health=health))
+            else:
+                fn = jax.jit(lambda st, tk: self._pp.prefill_pipeline(
+                    cfg, st, tk, plan, topo, return_telemetry=collect,
+                    tick_hook=hook, health=health))
             self._fns[key] = (fn, plan)
         fn, plan = self._fns[key]
         toks = np.stack([np.pad(r.tokens, (0, seq - len(r.tokens)))
@@ -271,12 +354,24 @@ class JaxExecutor:
         t0 = time.perf_counter()
         with jax.profiler.TraceAnnotation(
                 f"prefill_wave seq{seq} b{len(requests)}"):
-            if collect:
-                out, tel = fn(self.staged, toks)
-            else:
-                out, tel = fn(self.staged, toks), None
+            res = (fn(self.staged, toks, seed_pool) if seed_pool is not None
+                   else fn(self.staged, toks))
+            if not isinstance(res, tuple):
+                res = (res,)
+            out = res[0]
+            tel = res[1] if collect else None
+            kv = res[1 + int(collect)] if armed else None
             out.block_until_ready()
         dt = time.perf_counter() - t0
+        if kv is not None and seed_cache is not None:
+            # snapshot each request's batch element of the final pool for
+            # future waves (keyed by its full hash chain)
+            for i, ch in enumerate(chains):
+                if ch:
+                    seed_cache.put(ch, {
+                        f: (None if getattr(kv, f) is None else
+                            np.asarray(getattr(kv, f)[:, :, :, i]))
+                        for f in ("k", "v", "k_scale", "v_scale")})
         if measured or health is not None:
             jax.effects_barrier()    # order debug callbacks before the reads
         for r, row in zip(requests, np.asarray(out)):
@@ -285,6 +380,7 @@ class JaxExecutor:
             "start": t0 - self._epoch, "dur": dt, "seq": seq,
             "num_ticks": int(plan.num_ticks), "num_stages": num_stages,
             "chunks": list(chunks), "rids": [r.rid for r in requests],
+            "prefix_chunks": k,
         }
         if measured and self._span_col is not None:
             wave["measured"] = self._span_col.finalize(
@@ -548,6 +644,8 @@ class ContinuousEngine:
         self._consumed = 0        # scheduler.admitted prefix already drained
         self._plan_cls = ChunkPlan
         self._plans: Dict[int, Any] = {}
+        self._mplans: Dict[int, Any] = {}      # bucket -> MBKR plan
+        self._pplans: Dict[Tuple[int, int], Any] = {}  # (bucket, k) plans
         self._sm = cm.StageModel.build(ec.model, ec.num_stages, ec.tp)
 
         # MBKR slot budget for `inflight` concurrent requests, <= capacity
@@ -572,10 +670,27 @@ class ContinuousEngine:
             codec, model_dtype=ec.model.dtype,
             page_tokens=ec.kv_page_tokens or cmax,
             head_dim=ec.model.resolved_head_dim)
+        # radix prefix index (kvstore.prefix): page geometry from the
+        # LARGEST bucket's chunk — per-bucket plans with smaller chunks
+        # clamp their shared-page subtraction in chunk_page_bytes
+        self.prefix_cache = None
+        if ec.prefix_cache == "on":
+            from repro.kvstore.prefix import PrefixPageCache
+            pt = ec.kv_page_tokens or cmax
+            ppc = max(-(-cmax // pt), 1)
+            self.prefix_cache = PrefixPageCache(
+                pages_per_chunk=ppc,
+                page_bytes=max(cm.kv_chunk_bytes(self._sm, cmax), 1.0)
+                * kv_compress / ppc)
+            if hasattr(executor, "prefix_enabled"):
+                executor.prefix_enabled = True   # arm the device seed cache
         self.scheduler = ChunkScheduler(
             ec.num_stages, self._chunk_plan, policy=ec.policy, lease=self.lease,
             trace=self.trace, compress=ec.compress, kv_compress=kv_compress,
-            stage_scale=scale, page_tokens=ec.kv_page_tokens)
+            stage_scale=scale, page_tokens=ec.kv_page_tokens,
+            prefix_cache=self.prefix_cache,
+            prefix_min_pages=ec.prefix_min_pages,
+            plan_for_prefix=self._chunk_plan_prefix)
 
     # ---------------------------------------------------------- admission
     def submit(self, req: Request) -> None:
@@ -586,6 +701,12 @@ class ContinuousEngine:
         req.bucket = bucket_of(self.ec.buckets, req.seq_len)
         if self.slo is not None and not math.isfinite(req.deadline):
             req.deadline = req.arrival + self.slo
+        if (self.prefix_cache is not None and not req.prefix_hashes
+                and req.tokens is not None):
+            from repro.kvstore.prefix import chunk_hashes
+            req.prefix_hashes = chunk_hashes(
+                np.asarray(req.tokens)[: req.seq_len],
+                self._chunk_plan(req.bucket).chunks)
         self.queue.append(req)
 
     def _chunk_plan(self, bucket: int):
@@ -604,10 +725,26 @@ class ContinuousEngine:
                 chunks = lbcp.uniform_partition(bucket, ec.num_chunks)
                 mplan = (mbkr.plan(ec.num_chunks, ec.num_stages)
                          if ec.mbkr and not ec.model.attn_free else None)
+            self._mplans[bucket] = mplan
             self._plans[bucket] = self._plan_cls.build(
                 bucket, chunks, self._sm, ec.hw, mbkr_plan=mplan,
                 compress=ec.compress)
         return self._plans[bucket]
+
+    def _chunk_plan_prefix(self, bucket: int, k: int):
+        """The bucket's plan re-priced for a resident prefix of ``k``
+        chunks (``costmodel.chunk_cost_arrays(prefix_hit_chunks=k)``):
+        zero compute/wire rows for served chunks, same chunk partition."""
+        if k <= 0:
+            return self._chunk_plan(bucket)
+        key = (bucket, int(k))
+        if key not in self._pplans:
+            base = self._chunk_plan(bucket)    # populates _mplans[bucket]
+            self._pplans[key] = self._plan_cls.build(
+                bucket, list(base.chunks), self._sm, self.ec.hw,
+                mbkr_plan=self._mplans.get(bucket), compress=self.ec.compress,
+                prefix_hit_chunks=int(k))
+        return self._pplans[key]
 
     # ---------------------------------------------------------- main loop
     def run_until_drained(self) -> None:
@@ -617,7 +754,8 @@ class ContinuousEngine:
                 continue
             self.scheduler.submit(SchedRequest(
                 rid=r.rid, arrival=r.arrival, seq_len=r.seq_len,
-                bucket=r.bucket, deadline=r.deadline, payload=r))
+                bucket=r.bucket, deadline=r.deadline, payload=r,
+                prefix_hashes=tuple(r.prefix_hashes)))
         # scheduler.admitted is cumulative across calls — only drain the new
         # suffix so run_until_drained stays re-entrant (submit/drain cycles)
         order = self.scheduler.run()[self._consumed:]
@@ -666,14 +804,32 @@ class ContinuousEngine:
         now = float(self.scheduler.stage_free[0])
         return float(self.lease.headroom(after=now).min())
 
-    def estimate_admission(self, seq_len: int,
-                           arrival: float = 0.0) -> Tuple[float, bool]:
+    def estimate_admission(self, seq_len: int, arrival: float = 0.0,
+                           prefix_hashes: Optional[Sequence[int]] = None
+                           ) -> Tuple[float, bool]:
         """(predicted finish time, lease-fits-now) for a hypothetical
         request — ``ChunkScheduler.preview`` against the live frontier with
         this cell's OWN chunk-cost vectors (per-cell calibrated profiles and
-        kv_dtype lease pricing both fold in automatically). Pure."""
+        kv_dtype lease pricing both fold in automatically). Pure.
+        ``prefix_hashes`` folds the radix index into the quote: a cell
+        already holding the prefix quotes an earlier ETA and a smaller
+        lease (the fleet's prefix-affinity signal)."""
         bucket = bucket_of(self.ec.buckets, seq_len)
-        return self.scheduler.preview(bucket, seq_len, release=arrival)
+        return self.scheduler.preview(
+            bucket, seq_len, release=arrival,
+            prefix_hashes=tuple(prefix_hashes or ()))
+
+    def prefix_stats(self) -> Dict[str, Any]:
+        """Radix-index counters (``PrefixPageCache.stats``); {} when the
+        prefix cache is off."""
+        return self.scheduler.prefix_stats()
+
+    def prefix_hit_pages(self, prefix_hashes: Sequence[int]) -> int:
+        """Pages of ``prefix_hashes`` already resident in this cell's radix
+        index — the router's prefix-affinity tiebreak signal. 0 when off."""
+        if self.prefix_cache is None or not prefix_hashes:
+            return 0
+        return int(self.prefix_cache.hit_pages(tuple(prefix_hashes)))
 
     def records(self) -> List[Any]:
         """Per-request ``RequestRecord`` rows (sched.metrics) — the fleet
@@ -732,6 +888,8 @@ class ContinuousEngine:
         self._sm = cm.StageModel.build(self.ec.model, self.ec.num_stages,
                                        self.ec.tp)
         self._plans.clear()
+        self._mplans.clear()
+        self._pplans.clear()
         self.scheduler.rebase_costs(self._chunk_plan)
         if isinstance(self.executor, SimExecutor):
             self.executor.hw = hw

@@ -51,6 +51,7 @@ def chunk_page_bytes(
     chunks: Sequence[int],
     seq_len: Optional[int],
     page_tokens: int,
+    shared_pages: Optional[Sequence[int]] = None,
 ) -> List[float]:
     """Per-chunk STORED bytes at PAGE granularity.
 
@@ -62,17 +63,28 @@ def chunk_page_bytes(
     figure. ``page_tokens <= 0`` means one page per chunk (the coarsest
     paging: a touched chunk allocates fully, an untouched chunk nothing).
     ``seq_len=None`` keeps the legacy whole-bucket accounting.
+
+    ``shared_pages[i]`` is the number of chunk-``i`` pages already resident
+    in the prefix index (``kvstore.prefix``): shared pages cost ZERO lease
+    bytes — the holder of the radix refcount pays for them once — so a
+    request whose prefix hits leases only its novel suffix.  With
+    ``seq_len=None`` sharing applies against the whole-chunk page count.
     """
-    if seq_len is None:
+    if seq_len is None and shared_pages is None:
         return [float(b) for b in kvb]
     out: List[float] = []
     start = 0
-    for b, c in zip(kvb, chunks):
-        valid = min(max(seq_len - start, 0), int(c))
+    for i, (b, c) in enumerate(zip(kvb, chunks)):
         pt = page_tokens if page_tokens > 0 else int(c)
-        n_pages = -(-valid // pt)
         full_pages = -(-int(c) // pt)
-        out.append(float(b) * min(n_pages, full_pages) / full_pages)
+        if seq_len is None:
+            n_pages = full_pages
+        else:
+            valid = min(max(seq_len - start, 0), int(c))
+            n_pages = min(-(-valid // pt), full_pages)
+        if shared_pages is not None and i < len(shared_pages):
+            n_pages = max(n_pages - int(shared_pages[i]), 0)
+        out.append(float(b) * n_pages / full_pages)
         start += int(c)
     return out
 
@@ -89,6 +101,7 @@ def request_lease_events(
     seq_len: Optional[int] = None,
     chunks: Optional[Sequence[int]] = None,
     page_tokens: int = 0,
+    shared_pages: Optional[Sequence[int]] = None,
 ) -> Lease:
     """Build the lease for one scheduled request from its chunk finish times.
 
@@ -108,12 +121,19 @@ def request_lease_events(
     grows admission capacity ~2x per one-byte codec at a fixed physical
     budget. ``compress`` stays the legacy wire/creditor factor applied to
     spilled chunks only.
+
+    ``shared_pages`` (per chunk, from the prefix index ``kvstore.prefix``)
+    zeroes the lease price of pages another live lease already holds —
+    suffix-only leasing (DESIGN.md §11): the alloc/free EVENTS of
+    fully-shared chunks vanish, so peaks, headroom and the high-water mark
+    all see only novel bytes.
     """
     m, n = finish.shape
     if chunks is None:
         seq_len = None  # page accounting needs the chunk split
+        shared_pages = None
     pkvb = chunk_page_bytes(kvb, chunks if chunks is not None else [1] * m,
-                            seq_len, page_tokens)
+                            seq_len, page_tokens, shared_pages)
     ev: List[LeaseEvent] = []
     for s in range(n):
         t_drain = float(finish[m - 1][s])

@@ -65,8 +65,17 @@ class SchedMetrics:
         with_slo = [r for r in self.records if math.isfinite(r.deadline)]
         mk = self.makespan
         util = self.busy / mk if mk > 0 else np.zeros_like(self.busy)
+        # peak concurrency: max overlap of the [admit, finish) intervals —
+        # the admits-more-at-equal-budget signal prefix sharing moves
+        ev = sorted([(r.admit, 1) for r in done if math.isfinite(r.admit)]
+                    + [(r.finish, -1) for r in done if math.isfinite(r.admit)])
+        cur = peak = 0
+        for _, d in ev:
+            cur += d
+            peak = max(peak, cur)
         return {
             "completed": len(done),
+            "peak_inflight": peak,
             "rejected": sum(r.rejected for r in self.records),
             "makespan": mk,
             "throughput": len(done) / mk if mk > 0 else 0.0,
@@ -86,7 +95,8 @@ class SchedMetrics:
 
 
 def fleet_summary(
-        records_by_cell: Mapping[str, Sequence[RequestRecord]]
+        records_by_cell: Mapping[str, Sequence[RequestRecord]],
+        router_rejections: int = 0,
 ) -> Dict[str, Any]:
     """Fleet-level serving summary over MANY cells' request records
     (``repro.fleet``): the SLO-attainment / TTFT view of the WHOLE arrival
@@ -94,7 +104,12 @@ def fleet_summary(
     breakdown. Cells share the arrival clock (each scheduler's virtual time
     starts at the stream's t=0), so records merge directly: fleet makespan
     is the latest finish anywhere, fleet throughput is total completions
-    over it."""
+    over it.
+
+    ``router_rejections`` counts requests the FLEET-LEVEL admission
+    controller turned away before any cell saw them (``FleetRouter.place``
+    reject-with-retry-after when every cell's lease headroom is exhausted);
+    they fold into the fleet ``rejected`` total and get their own key."""
     merged: List[RequestRecord] = [r for recs in records_by_cell.values()
                                    for r in recs]
     done = [r for r in merged if not r.rejected and math.isfinite(r.finish)]
@@ -117,7 +132,8 @@ def fleet_summary(
     return {
         "cells": len(records_by_cell),
         "completed": len(done),
-        "rejected": sum(r.rejected for r in merged),
+        "rejected": sum(r.rejected for r in merged) + int(router_rejections),
+        "router_rejections": int(router_rejections),
         "makespan": float(mk),
         "throughput": len(done) / mk if mk > 0 else 0.0,
         "avg_ttft": float(ttft.mean()) if len(ttft) else math.nan,

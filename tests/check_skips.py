@@ -12,8 +12,8 @@ exact expected skip counts per reason class:
 - "old jaxlib"/PartitionId skips: exactly 0 on every leg (the manual
   lowering replaced the tp=1 fallback).
 - hypothesis skips: exactly 0 when hypothesis is importable (CI installs
-  it), exactly 4 otherwise (3 importorskip modules + the guarded
-  ragged-occupancy property test).
+  it), exactly 5 otherwise (4 importorskip modules — including the prefix
+  radix property tests — + the guarded ragged-occupancy property test).
 - anything else: unknown skip reason -> fail. Notably the paged pool
   kernel (DESIGN.md §3.7) introduces NO TPU-only skip class: its manual-
   DMA path runs under interpret mode on every supported jaxlib, and the
@@ -59,7 +59,7 @@ def main(path: str) -> int:
                and "hypothesis" not in r
                and not any(a in r for a in _ALLOWED_CONDITIONAL)]
 
-    exp_hyp = 0 if have_hyp else 4
+    exp_hyp = 0 if have_hyp else 5
     ok = True
     if n_partial != 0:
         ok = False

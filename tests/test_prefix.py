@@ -1,0 +1,672 @@
+"""Cross-request prefix KV reuse tests (ISSUE 10): the radix page index
+(``repro.kvstore.prefix``), suffix-only lease pricing, scheduler/fleet
+integration, and the device seeded-pool path.
+
+- chained chunk hashes: equal prefixes agree, divergence breaks the chain,
+  partial tail chunks are never hashed,
+- PrefixPageCache: refcounted acquire/release, copy-on-write on divergence
+  (no two live leases ever write the same physical page), LRU leaf-first
+  eviction under capacity with refs pinned, ``verify_prefix_index`` clean
+  after every mutation,
+- suffix-only lease math: ``chunk_page_bytes(shared_pages=)`` and the
+  ``KVLeaseManager`` high-water mark under sharing match a from-scratch
+  analytic byte model to 1e-5; a request refused at full price is ADMITTED
+  at the same budget once its prefix is shared,
+- cost model: ``prefix_hit_chunks=k`` zeroes compute/wire rows of served
+  chunks while later chunks still attend over the cached prefix and the
+  feature factorization identity survives,
+- scheduler + fleet: prefix ON beats OFF on p99 TTFT with more concurrent
+  admissions at equal budget; prefix-affinity ETA quotes and the jsf
+  tiebreak; reject-with-retry-after when every cell's headroom is gone,
+- device (subprocess, 8 fake devices): a seeded prefix pool with GARBAGE
+  tokens in the hit region reproduces the baseline logits bit-identically,
+  the ledger/telemetry ``prefix_hit`` rows match the closed-form saved-bytes
+  model, the disarmed path lowers to byte-identical HLO, and the armed path
+  adds ZERO collectives; the JaxExecutor round trip serves later requests
+  from the DeviceSeedCache with bit-identical results.
+"""
+import math
+import os
+import subprocess
+import sys
+from dataclasses import replace as dc_replace
+
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import costmodel as cm
+from repro.fleet import CellSignals, FleetFabric, FleetRouter, score_cells
+from repro.kvstore.prefix import (DeviceSeedCache, PrefixPageCache,
+                                  chunk_hashes, verify_prefix_index)
+from repro.runtime.engine import (ContinuousEngine, EngineConfig, Request,
+                                  SimExecutor)
+from repro.sched import KVLeaseManager
+from repro.sched.kvlease import chunk_page_bytes, request_lease_events
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+CFG = get_config("llama3-70b")
+SEQ = 32768
+PREFIX_CHUNKS = 6
+
+
+def _run(snippet, extra_env=None):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.update(extra_env or {})
+    r = subprocess.run([sys.executable, "-c", snippet], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"{r.stdout}\n{r.stderr}"
+    assert "PASS" in r.stdout, r.stdout
+    return r.stdout
+
+
+# ------------------------------------------------------------- chunk hashes
+
+def test_chunk_hashes_chained_and_partial_tail():
+    toks = np.arange(64, dtype=np.int64)
+    h = chunk_hashes(toks, 16)
+    assert len(h) == 4
+    # equal prefix => equal leading hashes; suffix divergence leaves them
+    other = toks.copy()
+    other[48:] += 1
+    h2 = chunk_hashes(other, 16)
+    assert h2[:3] == h[:3] and h2[3] != h[3]
+    # chained: a chunk-0 divergence changes EVERY later hash
+    early = toks.copy()
+    early[0] += 1
+    h3 = chunk_hashes(early, 16)
+    assert all(a != b for a, b in zip(h3, h))
+    # a partial trailing chunk is never hashed
+    assert chunk_hashes(toks[:63], 16) == h[:3]
+    # explicit per-chunk split (LBCP) must agree with the uniform split
+    assert chunk_hashes(toks, [16, 16, 16, 16]) == h
+    # a DIFFERENT split hashes differently (hash commits to the split)
+    assert chunk_hashes(toks, [32, 32]) != h[:2]
+    assert chunk_hashes(toks, 0) == ()
+
+
+# ---------------------------------------------------------- radix page cache
+
+def test_prefix_cache_acquire_release_cow():
+    cache = PrefixPageCache(pages_per_chunk=2, page_bytes=100.0)
+    a = chunk_hashes(np.arange(64), 16)
+    b = chunk_hashes(np.r_[np.arange(32), np.arange(900, 932)], 16)
+    assert a[:2] == b[:2] and a[2] != b[2]
+
+    l0 = cache.acquire(0, a)
+    verify_prefix_index(cache)
+    assert l0.hit_chunks == 0 and len(l0.new_pages) == 8
+    assert cache.match(a) == 4 and cache.hit_pages(a) == 8
+
+    # full hit: refcount++ on every node, zero new pages
+    l1 = cache.acquire(1, a)
+    verify_prefix_index(cache)
+    assert l1.hit_chunks == 4 and l1.new_pages == ()
+    assert cache.live_shared_bytes() == 8 * 100.0
+
+    # divergence at chunk 2: copy-on-write — the novel suffix gets FRESH
+    # pages, disjoint from every page any other live lease wrote
+    l2 = cache.acquire(2, b)
+    verify_prefix_index(cache)
+    assert l2.hit_chunks == 2 and len(l2.new_pages) == 4
+    assert not set(l2.new_pages) & set(l0.new_pages)
+    assert cache.resident_pages() == 12  # 4 + 2 divergent chunks
+
+    st = cache.stats()
+    assert st["prefix_requests"] == 3 and st["prefix_hits"] == 2
+    assert st["prefix_hit_chunks"] == 6 and st["prefix_hit_pages"] == 12
+    assert st["prefix_saved_bytes"] == 12 * 100.0
+    assert st["prefix_resident_bytes"] == 12 * 100.0
+
+    # release drops refs but keeps nodes cached (that IS the cache)
+    for l in (l0, l1, l2):
+        cache.release(l)
+    verify_prefix_index(cache)
+    assert cache.match(a) == 4 and cache.match(b) == 4
+    cache.release(l0)  # double release is a no-op
+    verify_prefix_index(cache)
+
+
+def test_prefix_cache_eviction_lru_leaf_first_and_capacity():
+    cache = PrefixPageCache(pages_per_chunk=1, page_bytes=10.0,
+                            capacity_pages=4)
+    a = chunk_hashes(np.arange(40), 10)       # 4 chunks -> fills capacity
+    la = cache.acquire(0, a)
+    assert cache.resident_pages() == 4
+    # live refs pin everything: a second chain cannot evict, so its tail is
+    # simply not indexed — and its lease still charges full price upstream
+    b = chunk_hashes(np.arange(500, 540), 10)
+    lb = cache.acquire(1, b)
+    assert lb.hit_chunks == 0 and lb.new_pages == ()
+    assert cache.match(b) == 0 and cache.evictions == 0
+    verify_prefix_index(cache)
+
+    # after release, eviction reclaims LRU LEAVES only, root stays longest
+    cache.release(la)
+    cache.release(lb)
+    lc = cache.acquire(2, chunk_hashes(np.arange(700, 720), 10))  # 2 chunks
+    verify_prefix_index(cache)
+    assert lc.hit_chunks == 0 and len(lc.new_pages) == 2
+    assert cache.evictions == 2
+    # chain a survives as a shorter prefix: leaves died first
+    assert 0 < cache.match(a) < 4
+    # freed handles were recycled, not re-minted
+    assert cache._next_page == 4
+    cache.release(lc)
+    verify_prefix_index(cache)
+
+
+def test_device_seed_cache_lru_and_prefix_match():
+    cache = DeviceSeedCache(max_entries=2)
+    cache.put((1, 2, 3), {"k": "A"})
+    assert cache.match((1, 2, 3)) == 3
+    assert cache.match((1, 2, 9)) == 2      # any snapshot sharing the prefix
+    assert cache.match((9, 2, 3)) == 0
+    assert cache.lookup((1, 2, 9), 2) == {"k": "A"}
+    cache.put((4, 5), {"k": "B"})
+    cache.put((6, 7), {"k": "C"})           # bound 2: (1,2,3) evicted
+    assert cache.match((1, 2, 3)) == 0
+    assert cache.lookup((4, 5), 2) == {"k": "B"}
+    assert cache.match((6, 7, 8)) == 2
+    cache.put((), {"k": "empty"})           # empty chain is never indexed
+    assert cache.match(()) == 0
+
+
+# ------------------------------------------------------- suffix-only leases
+
+def test_chunk_page_bytes_shared_pages():
+    kvb = [4096.0] * 4
+    chunks = [1024] * 4
+    # page_tokens=512 -> 2 pages per chunk, 2048 bytes each
+    got = chunk_page_bytes(kvb, chunks, 4096, 512, shared_pages=[2, 1, 0, 0])
+    assert got == [0.0, 2048.0, 4096.0, 4096.0]
+    # sharing never goes negative and composes with the seq_len clamp:
+    # seq_len=2560 -> chunk 2 touches 1 of its 2 pages, chunk 3 none
+    got = chunk_page_bytes(kvb, chunks, 2560, 512, shared_pages=[2, 2, 1, 9])
+    assert got == [0.0, 0.0, 0.0, 0.0]
+    got = chunk_page_bytes(kvb, chunks, 2560, 512, shared_pages=[2, 2, 0, 0])
+    assert got == [0.0, 0.0, 2048.0, 0.0]
+    # seq_len=None: sharing applies against the whole-chunk page count
+    got = chunk_page_bytes(kvb, chunks, None, 512, shared_pages=[1, 0, 0, 0])
+    assert got == [2048.0, 4096.0, 4096.0, 4096.0]
+    # no sharing, no seq_len: legacy whole-bucket accounting untouched
+    assert chunk_page_bytes(kvb, chunks, None, 512) == kvb
+
+
+def _merged_peak(events):
+    """Independent reimplementation of the lease timeline peak: sort
+    (time, delta) with frees first at equal timestamps, walk, track max."""
+    cur = peak = 0.0
+    for _, d in sorted(events):
+        cur += d
+        peak = max(peak, cur)
+    return peak
+
+
+def test_lease_hwm_under_sharing_matches_analytic_model():
+    """ISSUE 10 acceptance: the KVLeaseManager high-water mark under
+    sharing equals a from-scratch refcount-weighted byte model to 1e-5 —
+    shared pages are charged ONCE (by the radix holder), every request's
+    novel suffix at page granularity."""
+    n, m = 2, 3
+    chunks = [8, 8, 8]
+    kvb = [6.0, 6.0, 6.0]
+    pair = list(range(n))                     # p2 = m: no MBKR hosting
+    pt = 4                                    # 2 pages/chunk, 3.0 per page
+    fin0 = np.array([[1.0, 2.0], [2.0, 3.0], [3.0, 4.0]])
+    fin1 = fin0 + 0.5
+    fin2 = fin0 + 1.0
+    shared1 = [2, 2, 0]                       # first two chunks fully shared
+    shared2 = [2, 1, 0]                       # partial page sharing
+    mgr = KVLeaseManager(n, [100.0, 100.0])
+    for rid, (fin, shared) in enumerate(
+            [(fin0, None), (fin1, shared1), (fin2, shared2)]):
+        lease = request_lease_events(rid, fin, kvb, m, pair,
+                                     seq_len=24, chunks=chunks,
+                                     page_tokens=pt, shared_pages=shared)
+        assert mgr.admit(lease)
+
+    # the model, from scratch: chunk i of request r allocs its charged
+    # bytes at fin[i][s] and frees when the tail chunk clears s
+    charged = {0: [6.0, 6.0, 6.0],            # full price
+               1: [0.0, 0.0, 6.0],            # suffix only
+               2: [0.0, 3.0, 6.0]}            # half of chunk 1 is novel
+    for s in range(n):
+        ev = []
+        for rid, fin in enumerate([fin0, fin1, fin2]):
+            t_drain = float(fin[m - 1][s])
+            for i in range(m):
+                b = charged[rid][i]
+                if b:
+                    ev += [(float(fin[i][s]), b), (t_drain, -b)]
+        assert abs(mgr.hwm[s] - _merged_peak(ev)) <= 1e-5, (s, mgr.hwm[s])
+
+    # admits strictly more at equal budget: a 4th full-price overlapping
+    # request busts the budget; the SAME request suffix-priced fits
+    tight = KVLeaseManager(n, [float(mgr.hwm.max()) + 6.0] * n)
+    for rid, (fin, shared) in enumerate(
+            [(fin0, None), (fin1, shared1), (fin2, shared2)]):
+        assert tight.admit(request_lease_events(
+            rid, fin, kvb, m, pair, seq_len=24, chunks=chunks,
+            page_tokens=pt, shared_pages=shared))
+    fin3 = fin0 + 0.25
+    full = request_lease_events(3, fin3, kvb, m, pair, seq_len=24,
+                                chunks=chunks, page_tokens=pt)
+    assert not tight.admit(full)
+    assert tight.refusals == 1
+    suffix = request_lease_events(3, fin3, kvb, m, pair, seq_len=24,
+                                  chunks=chunks, page_tokens=pt,
+                                  shared_pages=[2, 2, 0])
+    assert tight.admit(suffix)
+
+
+# --------------------------------------------------------------- cost model
+
+def test_costmodel_prefix_hit_zeroes_served_chunks():
+    sm = cm.StageModel.build(CFG, 16, 1)
+    chunks = [2048] * 16
+    base = cm.chunk_cost_arrays(sm, chunks, cm.WSC_PAPER)
+    k = 5
+    dur, comm, kvb, spill, fetch = cm.chunk_cost_arrays(
+        sm, chunks, cm.WSC_PAPER, prefix_hit_chunks=k)
+    # served chunks: zero compute, zero boundary wire
+    assert np.all(dur[:k] == 0) and np.all(comm[:k] == 0)
+    # stored bytes unchanged — the pages still occupy the pool; lease
+    # accounting subtracts sharing separately (chunk_page_bytes)
+    assert np.array_equal(kvb, base[2])
+    # later chunks still attend over the full cached prefix: identical cost
+    assert np.array_equal(dur[k:], base[0][k:])
+    assert np.array_equal(comm[k:], base[1][k:])
+    assert np.all(spill == 0) and np.all(fetch == 0)  # no MBKR plan given
+    # k clamps to m-1: the tail chunk always runs (it makes the logits)
+    dur_all = cm.chunk_cost_arrays(sm, chunks, cm.WSC_PAPER,
+                                   prefix_hit_chunks=99)[0]
+    assert dur_all[-1] > 0 and np.all(dur_all[:-1] == 0)
+
+    # the feature factorization identity survives prefix pricing
+    from repro.core import mbkr
+    mplan = mbkr.plan(16, 16)
+    arrays = cm.chunk_cost_arrays(sm, chunks, cm.WSC_PAPER, mbkr_plan=mplan,
+                                  prefix_hit_chunks=k)
+    total = arrays[0] + arrays[1] + arrays[3] + arrays[4]
+    x = cm.chunk_cost_features(sm, chunks, cm.WSC_PAPER, mbkr_plan=mplan,
+                               prefix_hit_chunks=k)
+    theta = cm.profile_theta(cm.WSC_PAPER, sm.tp)
+    assert np.allclose(x @ theta, total, rtol=1e-9)
+    assert np.all(x[:k] == 0)
+
+
+# -------------------------------------------------------- sim scheduler e2e
+
+def _ec(**kw):
+    return EngineConfig(model=CFG, hw=cm.WSC_PAPER, num_stages=16, tp=1,
+                        num_chunks=16, max_batch=8, buckets=(SEQ,),
+                        partition="uniform", sa_iters=8, inflight=2, **kw)
+
+
+def _chains(n_req, n_prefixes=2):
+    return [tuple([(i % n_prefixes + 1) * 10_000 + j
+                   for j in range(PREFIX_CHUNKS)]
+                  + [(i + 1) * 1_000_000 + j
+                     for j in range(16 - PREFIX_CHUNKS)])
+            for i in range(n_req)]
+
+
+def _run_sim(mode, chains):
+    eng = ContinuousEngine(_ec(prefix_cache=mode), SimExecutor(CFG, cm.WSC_PAPER))
+    for i, ch in enumerate(chains):
+        eng.submit(Request(rid=i, arrival=0.0, seq_len=SEQ, prefix_hashes=ch))
+    eng.run_until_drained()
+    return eng
+
+
+def test_scheduler_prefix_on_beats_off_and_saved_bytes_model():
+    """The tentpole acceptance in sim: at EQUAL lease budget, prefix ON
+    serves the shared-prefix stream with a strictly better p99 TTFT and at
+    least as many concurrent admissions; the saved-bytes stat matches the
+    closed-form hit model; the index verifies clean after the run."""
+    chains = _chains(8)
+    off = _run_sim("off", chains)
+    on = _run_sim("on", chains)
+    m_off, m_on = off.metrics(), on.metrics()
+    assert m_off["completed"] == m_on["completed"] == 8
+    assert m_on["p99_ttft"] < m_off["p99_ttft"], (m_on["p99_ttft"],
+                                                  m_off["p99_ttft"])
+    assert m_on["peak_inflight"] >= m_off["peak_inflight"]
+    assert m_on["lease_hwm_frac"] <= 1.0 + 1e-9
+
+    # off never touches the radix: no prefix keys, no stats
+    assert off.prefix_cache is None and off.prefix_stats() == {}
+    assert "prefix_hit_rate" not in m_off
+
+    st = on.prefix_stats()
+    # fcfs over 2 interleaved prefixes: first request of each misses, the
+    # other 6 hit their full 6 shared chunks
+    assert st["prefix_requests"] == 8 and st["prefix_hits"] == 6
+    assert st["prefix_hit_chunks"] == 6 * PREFIX_CHUNKS
+    ppc = on.prefix_cache.pages_per_chunk
+    assert st["prefix_hit_pages"] == 6 * PREFIX_CHUNKS * ppc
+    # closed-form saved bytes: hit pages x the index's page_bytes
+    want = 6 * PREFIX_CHUNKS * ppc * on.prefix_cache.page_bytes
+    assert st["prefix_saved_bytes"] == pytest.approx(want, rel=1e-12)
+    assert m_on["prefix_hit_rate"] == pytest.approx(6 / 8)
+    verify_prefix_index(on.prefix_cache)
+
+
+def test_prefix_min_pages_gates_pricing():
+    """With the hit floor above every possible hit, pricing falls back to
+    full price — the run's timing is EXACTLY the prefix-off run on the same
+    virtual clock — while the radix index still records residency."""
+    chains = _chains(4, n_prefixes=1)
+
+    def run(**kw):
+        eng = ContinuousEngine(_ec(**kw), SimExecutor(CFG, cm.WSC_PAPER))
+        for i, ch in enumerate(chains):
+            eng.submit(Request(rid=i, arrival=0.0, seq_len=SEQ,
+                               prefix_hashes=ch))
+        eng.run_until_drained()
+        return eng
+
+    off = run(prefix_cache="off")
+    gated = run(prefix_cache="on", prefix_min_pages=10 ** 9)
+    m_off, m_gated = off.metrics(), gated.metrics()
+    assert m_gated["completed"] == m_off["completed"] == 4
+    for key in ("p99_ttft", "makespan", "peak_inflight"):
+        assert m_gated[key] == m_off[key], key
+    # the index itself still matched — only the pricing was gated
+    assert gated.prefix_stats()["prefix_hits"] == 3
+    verify_prefix_index(gated.prefix_cache)
+
+
+def test_estimate_admission_prefix_affinity_quote():
+    """A cell already holding the prefix quotes a strictly earlier ETA for
+    the same request, and exposes the hit through prefix_hit_pages — the
+    two fleet affinity signals."""
+    chains = _chains(2, n_prefixes=1)
+    eng = ContinuousEngine(_ec(prefix_cache="on"),
+                           SimExecutor(CFG, cm.WSC_PAPER))
+    eng.submit(Request(rid=0, arrival=0.0, seq_len=SEQ,
+                       prefix_hashes=chains[0]))
+    eng.run_until_drained()
+    eta_hit, fits_hit = eng.estimate_admission(SEQ, prefix_hashes=chains[1])
+    cold = tuple(99_000 + j for j in range(16))
+    eta_cold, _ = eng.estimate_admission(SEQ, prefix_hashes=cold)
+    eta_none, _ = eng.estimate_admission(SEQ)
+    assert eta_hit < eta_cold and eta_cold == eta_none
+    ppc = eng.prefix_cache.pages_per_chunk
+    assert eng.prefix_hit_pages(chains[1]) == PREFIX_CHUNKS * ppc
+    assert eng.prefix_hit_pages(cold) == 0
+    # preview is PURE: quoting consumed no radix refs, admitted nothing
+    assert eng.prefix_stats()["prefix_requests"] == 1
+
+
+# -------------------------------------------------------------------- fleet
+
+def test_jsf_prefix_affinity_tiebreak_order():
+    def sig(i, hit, free=100.0, eta=1.0):
+        return CellSignals(name=f"c{i}", index=i, eta=eta, lease_fits=True,
+                           free_lease_bytes=free, queue_depth=0,
+                           prefix_hit_pages=hit)
+    # equal ETA/fit: the cell holding the prefix wins even with LESS free
+    ranked = score_cells("jsf", [sig(0, 0, free=500.0), sig(1, 12)])
+    assert ranked[0][1].name == "c1"
+    # eta still dominates the tiebreak
+    ranked = score_cells("jsf", [sig(0, 0, eta=0.5), sig(1, 12)])
+    assert ranked[0][1].name == "c0"
+
+
+def test_fleet_routes_to_the_prefix_holding_cell():
+    """Two identical cells, equally loaded: the cell whose radix already
+    holds the request's prefix quotes the shorter effective sequence and
+    takes the request — prefix affinity end to end."""
+    cells = {f"c{i}": ContinuousEngine(_ec(prefix_cache="on"),
+                                       SimExecutor(CFG, cm.WSC_PAPER))
+             for i in range(2)}
+    fab = FleetFabric(cells, FleetRouter("jsf"))
+    chain_a = _chains(1, n_prefixes=1)[0]
+    chain_b = tuple(h + 777_000_000 for h in chain_a)
+    # warm both cells with EQUAL work but different prefixes
+    d0 = fab.submit(Request(rid=0, arrival=0.0, seq_len=SEQ,
+                            prefix_hashes=chain_a))
+    d1 = fab.submit(Request(rid=1, arrival=0.0, seq_len=SEQ,
+                            prefix_hashes=chain_b))
+    assert d0.cell != d1.cell
+    # a repeat of prefix B must land on B's cell, A's on A's cell
+    d2 = fab.submit(Request(rid=2, arrival=0.0, seq_len=SEQ,
+                            prefix_hashes=tuple(chain_b[:PREFIX_CHUNKS])
+                            + tuple(5_000_000 + j for j in range(10))))
+    assert d2.cell == d1.cell
+    assert max(s.prefix_hit_pages for s in d2.signals) > 0
+    d3 = fab.submit(Request(rid=3, arrival=0.0, seq_len=SEQ,
+                            prefix_hashes=tuple(chain_a[:PREFIX_CHUNKS])
+                            + tuple(6_000_000 + j for j in range(10))))
+    assert d3.cell == d0.cell
+    fab.pump()
+    assert fab.metrics()["completed"] == 4
+
+
+class _FullCell:
+    """Minimal CellHandle stand-in: finite ETA quote, zero lease headroom."""
+
+    draining = False
+
+    def __init__(self, eta):
+        self._eta = eta
+
+    def estimate_admission(self, seq_len, arrival=0.0, prefix_hashes=None):
+        return self._eta, False
+
+    def free_lease_bytes(self):
+        return 0.0
+
+    def queue_depth(self):
+        return 1
+
+    def prefix_hit_pages(self, prefix_hashes):
+        return 0
+
+    def records(self):
+        return []
+
+    def run_until_drained(self):
+        pass
+
+    def poll(self):
+        return []
+
+    def submit(self, req):  # pragma: no cover - must never be reached
+        raise AssertionError("fabric submitted to a rejected placement")
+
+
+def test_fleet_reject_with_retry_after():
+    """ISSUE 10 satellite: when EVERY live cell's lease headroom is
+    exhausted the router rejects with an explicit retry_after (the earliest
+    quoted ETA) instead of queueing forever; the fabric submits nothing and
+    the rejection lands in the fleet summary."""
+    fab = FleetFabric({"a": _FullCell(5e9), "b": _FullCell(3e9)},
+                      FleetRouter("jsf"))
+    dec = fab.submit(Request(rid=0, arrival=0.0, seq_len=SEQ))
+    assert dec.rejected and dec.cell == ""
+    assert dec.retry_after == 3e9
+    assert fab.placements == {}
+    m = fab.metrics()
+    assert m["router_rejections"] == 1 and m["rejected"] == 1
+    # a live cell with headroom ends the rejections: placement resumes
+    fab.add_cell("c", ContinuousEngine(_ec(prefix_cache="off"),
+                                       SimExecutor(CFG, cm.WSC_PAPER)))
+    dec2 = fab.submit(Request(rid=1, arrival=0.0, seq_len=SEQ))
+    assert not dec2.rejected and dec2.cell == "c"
+    fab.pump()
+    m = fab.metrics()
+    assert m["completed"] == 1 and m["router_rejections"] == 1
+
+
+def test_fleet_retry_after_inf_when_no_finite_quote():
+    fab = FleetFabric({"a": _FullCell(math.inf)}, FleetRouter("jsf"))
+    dec = fab.submit(Request(rid=0, arrival=0.0, seq_len=SEQ))
+    assert dec.rejected and math.isinf(dec.retry_after)
+
+
+# ----------------------------------------------------------- device parity
+
+SNIPPET_DEVICE_PARITY = r"""
+import os, re, dataclasses
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro import compat
+from repro.compat import AxisType
+from repro.configs.base import get_smoke_config, RunConfig
+from repro.core import pipeline as pp
+from repro.models.api import build_model
+from repro.models.topology import Topology
+from repro.obs import telemetry as obs_t
+
+cfg = dataclasses.replace(get_smoke_config("qwen3-8b"), dtype="float32")
+n = m = 8; s = 128; b = 2
+mesh = compat.make_mesh((n, 1), ("data", "model"),
+                        axis_types=(AxisType.Auto,) * 2)
+topo = Topology(mesh=mesh, stage_axis="data", tp_axis="model")
+plan = pp.build_plan(cfg, n, s, RunConfig(num_chunks=m, num_stages=n,
+                                          remote_attn="fetch"))
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+staged = pp.stage_params(cfg, params, plan)
+compat.set_mesh(mesh)
+toks = np.random.default_rng(0).integers(
+    0, cfg.vocab_size, (b, s)).astype(np.int32)
+
+# 1) disarmed is the SAME program: byte-identical HLO text, not merely
+#    zero extra collectives (the PR 6/8 discipline)
+base_low = jax.jit(lambda st, tk: pp.prefill_pipeline(
+    cfg, st, tk, plan, topo)).lower(staged, toks)
+off_low = jax.jit(lambda st, tk: pp.prefill_pipeline(
+    cfg, st, tk, plan, topo, prefix_chunks=0, prefix_pool=None,
+    return_kv=False)).lower(staged, toks)
+assert base_low.as_text() == off_low.as_text(), "disarmed path diverged"
+
+# 2) return_kv leaves the logits bit-identical and yields the final pool
+base = np.asarray(jax.jit(lambda st, tk: pp.prefill_pipeline(
+    cfg, st, tk, plan, topo))(staged, toks))
+out, kv = jax.jit(lambda st, tk: pp.prefill_pipeline(
+    cfg, st, tk, plan, topo, return_kv=True))(staged, toks)
+assert np.array_equal(np.asarray(out), base), "return_kv changed logits"
+
+# 3) seeded prefix run: GARBAGE tokens in the hit region + the cached pool
+#    must reproduce the baseline logits bit-identically — the cached KV,
+#    not the token stream, is authoritative for served chunks
+k = 3
+c = plan.chunk_len
+toks_garb = toks.copy()
+toks_garb[:, :k * c] = 7
+pool = jax.tree.map(lambda a: np.asarray(a), kv)
+f_led = jax.jit(lambda st, tk, pl: pp.prefill_pipeline(
+    cfg, st, tk, plan, topo, prefix_chunks=k, prefix_pool=pl,
+    return_ledger=True, return_telemetry=True, return_kv=True))
+out2, led, tel, kv2 = f_led(staged, toks_garb, pool)
+assert np.array_equal(np.asarray(out2), base), "seeded run not bit-identical"
+assert np.asarray(kv2.k).shape == np.asarray(kv.k).shape
+
+# 4) ledger + telemetry prefix_hit match the closed-form saved-bytes model
+sb = obs_t.prefix_saved_model(plan, plan.layers_per_stage, b, c,
+                              cfg.num_kv_heads, cfg.resolved_head_dim, k)
+got = float(led["prefix_hit"])
+assert abs(got - sb["ledger_bytes"]) < 1e-6 * max(sb["ledger_bytes"], 1), \
+    (got, sb["ledger_bytes"])
+ev = float(np.asarray(tel["prefix_hit"])[:, -1].sum())
+assert ev == sb["events"], (ev, sb["events"])
+
+# 5) the ARMED lowering adds ZERO collectives over the disarmed one
+COLL = re.compile(r"collective-permute|collective_permute|all-reduce|"
+                  r"all_reduce|all-gather|all_gather|reduce-scatter|"
+                  r"reduce_scatter")
+armed_low = jax.jit(lambda st, tk, pl: pp.prefill_pipeline(
+    cfg, st, tk, plan, topo, prefix_chunks=k, prefix_pool=pl,
+    return_kv=True)).lower(staged, toks_garb, pool)
+n_off = len(COLL.findall(off_low.as_text()))
+n_on = len(COLL.findall(armed_low.as_text()))
+assert n_off > 0 and n_on == n_off, (n_off, n_on)
+print("PASS", n_off)
+"""
+
+
+def test_device_prefix_parity_closed_form_and_zero_collectives():
+    """Tentpole acceptance (device leg): a seeded prefix pool with garbage
+    hit-region tokens is bit-identical to the baseline, the ledger and
+    telemetry ``prefix_hit`` rows equal the closed-form saved-bytes model,
+    the disarmed path lowers to byte-identical HLO, and arming the prefix
+    path adds zero collectives."""
+    _run(SNIPPET_DEVICE_PARITY)
+
+
+SNIPPET_ENGINE_ROUND_TRIP = r"""
+import os, dataclasses
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+from repro import compat
+from repro.compat import AxisType
+from repro.configs.base import get_smoke_config, RunConfig
+from repro.core import costmodel as cm
+from repro.core import pipeline as pp
+from repro.models.api import build_model
+from repro.models.topology import Topology
+from repro.runtime.engine import (ContinuousEngine, EngineConfig,
+                                  JaxExecutor, Request)
+
+cfg = dataclasses.replace(get_smoke_config("qwen3-8b"), dtype="float32")
+n = m = 8; s = 128
+mesh = compat.make_mesh((n, 1), ("data", "model"),
+                        axis_types=(AxisType.Auto,) * 2)
+topo = Topology(mesh=mesh, stage_axis="data", tp_axis="model")
+run = RunConfig(num_chunks=m, num_stages=n, remote_attn="fetch")
+plan = pp.build_plan(cfg, n, s, run)
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+staged = pp.stage_params(cfg, params, plan)
+compat.set_mesh(mesh)
+
+rng = np.random.default_rng(1)
+pref = rng.integers(0, cfg.vocab_size, 64).astype(np.int32)  # 4 shared chunks
+TOKS = []
+for i in range(3):
+    t = rng.integers(0, cfg.vocab_size, s).astype(np.int32)
+    t[:64] = pref
+    TOKS.append(t)
+
+def run_engine(mode):
+    ec = EngineConfig(model=cfg, hw=cm.TPU_V5E, num_stages=n, tp=1,
+                     num_chunks=m, max_batch=1, buckets=(s,),
+                     partition="uniform", prefix_cache=mode)
+    ex = JaxExecutor(cfg, staged, topo, run)
+    eng = ContinuousEngine(ec, ex)
+    for i, t in enumerate(TOKS):
+        eng.submit(Request(rid=i, arrival=0.0, seq_len=s, tokens=t.copy()))
+    eng.run_until_drained()
+    return eng, ex
+
+eng_off, ex_off = run_engine("off")
+eng_on, ex_on = run_engine("on")
+# off: no wave ever arms the device prefix path
+assert all(w["prefix_chunks"] == 0 for w in ex_off.waves)
+# on: the first wave is cold, every later wave seeds its 4 shared chunks
+ks = [w["prefix_chunks"] for w in ex_on.waves]
+assert ks[0] == 0 and all(k > 0 for k in ks[1:]), ks
+# per-request logits identical regardless of serving path
+res_off = {r.rid: np.asarray(r.result) for r in eng_off.done}
+res_on = {r.rid: np.asarray(r.result) for r in eng_on.done}
+assert set(res_off) == set(res_on) == {0, 1, 2}
+for rid in res_off:
+    assert np.array_equal(res_off[rid], res_on[rid]), f"rid {rid} diverged"
+st = eng_on.prefix_stats()
+assert st["prefix_hits"] == 2, st
+print("PASS", ks)
+"""
+
+
+def test_jax_engine_prefix_round_trip_bit_identical():
+    """JaxExecutor end-to-end: the engine hashes submitted tokens, the
+    DeviceSeedCache serves later matching requests a seeded pool, and every
+    request's logits are bit-identical to the prefix-off run."""
+    _run(SNIPPET_ENGINE_ROUND_TRIP)
